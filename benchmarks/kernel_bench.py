@@ -1,0 +1,55 @@
+"""Kernel-tier micro-benchmarks (CPU; interpret-mode Pallas is a correctness
+vehicle, not a perf proxy — TPU perf is covered by the §Roofline analysis)."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunked import cluster_stream_chunked
+from repro.core.streaming import cluster_stream_scan
+from repro.graph.generators import chung_lu_stream
+from repro.kernels.seg_volume.ops import seg_volume
+from repro.kernels.seg_volume.ref import seg_volume_ref
+
+
+def _t(fn, *args):
+    out = fn(*args)
+    jnp.asarray(out).block_until_ready() if hasattr(out, "block_until_ready") else None
+    t0 = time.perf_counter()
+    out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return time.perf_counter() - t0
+
+
+def run():
+    rows = []
+    n, m = 20_000, 200_000
+    edges = jnp.asarray(chung_lu_stream(n, m, seed=1))
+    t_scan = _t(lambda e: cluster_stream_scan(e, 64, n)[0], edges)
+    rows.append({"name": "cluster_scan(1edge/step)", "us_per_call": t_scan * 1e6,
+                 "derived": f"{m/t_scan:,.0f} edges/s"})
+    for chunk in (512, 4096):
+        t_c = _t(lambda e: cluster_stream_chunked(e, 64, n, chunk=chunk)[0],
+                 edges)
+        rows.append({"name": f"cluster_chunked(B={chunk})",
+                     "us_per_call": t_c * 1e6,
+                     "derived": f"{m/t_c:,.0f} edges/s"})
+    lab = jnp.asarray(np.random.default_rng(0).integers(0, 1024, 65536))
+    w = jnp.ones(65536, jnp.float32)
+    t_ref = _t(lambda l: seg_volume_ref(l, w, 1024), lab)
+    rows.append({"name": "seg_volume_scatter_ref", "us_per_call": t_ref * 1e6,
+                 "derived": ""})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

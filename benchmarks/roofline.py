@@ -1,0 +1,71 @@
+"""Roofline summary: reads results/dryrun/*.json into the EXPERIMENTS.md
+table (per-cell three terms, dominant bottleneck, useful-FLOPs ratio)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+_BASE = os.path.dirname(__file__)
+# authoritative sweep = final optimized code; fall back to the first sweep
+RESULTS = os.path.join(_BASE, "../results/dryrun_opt")
+if not os.path.isdir(RESULTS):
+    RESULTS = os.path.join(_BASE, "../results/dryrun")
+
+
+def load_cells(mesh="single"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    return f"{x*1e3:8.2f}ms"
+
+
+def table(mesh="single", file=None):
+    cells = load_cells(mesh)
+    hdr = (f"{'arch':22s} {'shape':12s} {'GB/dev':>7s} {'fit':>4s} "
+           f"{'compute':>10s} {'memory':>10s} {'collective':>10s} "
+           f"{'dominant':>11s} {'useful':>7s} {'roofline%':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        if c["status"] == "skipped":
+            lines.append(
+                f"{c['arch']:22s} {c['shape']:12s} {'—':>7s} {'—':>4s} "
+                f"{'skipped: ' + c['reason']:>44s}"
+            )
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        lines.append(
+            f"{c['arch']:22s} {c['shape']:12s} "
+            f"{m['bytes_per_device']/1e9:7.2f} "
+            f"{'y' if m['fits_16GB'] else 'N':>4s} "
+            f"{fmt_s(r['compute_s'])} {fmt_s(r['memory_s'])} "
+            f"{fmt_s(r['collective_s'])} "
+            f"{r['dominant'].replace('_s',''):>11s} "
+            f"{r['useful_flops_ratio']:7.3f} "
+            f"{100*r['roofline_fraction']:8.2f}%"
+        )
+    out = "\n".join(lines)
+    if file:
+        print(out, file=file)
+    else:
+        print(out)
+    return cells
+
+
+def main():
+    for mesh in ("single", "multi"):
+        print(f"\n=== mesh: {mesh} ===")
+        table(mesh)
+
+
+if __name__ == "__main__":
+    main()

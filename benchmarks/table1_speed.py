@@ -1,0 +1,92 @@
+"""Paper Table 1 — execution time vs graph size (+ the `cat` lower bound).
+
+The paper streams SNAP graphs of 1e6..1.8e9 edges; offline we run synthetic
+Chung–Lu streams at 1e5..1e7 edges, assert linear scaling in m (the paper's
+complexity claim), and report per-edge throughput so the Friendster-scale
+runtime is a direct extrapolation.  The `stream_read` row reproduces the
+paper's `cat` comparison: a pass over the edge stream that does no clustering
+work (memory-bandwidth lower bound).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunked import cluster_stream_chunked
+from repro.core.labelprop import label_propagation
+from repro.core.louvain import louvain
+from repro.core.streaming import cluster_stream_dense
+from repro.graph.generators import chung_lu_stream
+
+
+def _time(fn, *args, repeat=1):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    elif isinstance(out, tuple) and hasattr(out[0], "block_until_ready"):
+        out[0].block_until_ready()
+    return (time.perf_counter() - t0) / repeat
+
+
+def run(sizes=(100_000, 1_000_000, 5_000_000), v_max=64, baselines_at=300_000):
+    rows = []
+    for m in sizes:
+        n = max(m // 10, 1000)
+        edges = chung_lu_stream(n, m, seed=m % 97)
+        ej = jnp.asarray(edges)
+
+        t_read = _time(lambda e: np.bitwise_xor.reduce(e, axis=None), edges)
+        t_str = _time(
+            lambda e: cluster_stream_chunked(e, v_max, n, chunk=4096)[0], ej
+        )
+        rows.append(
+            {"algo": "stream_read(cat)", "m": m, "seconds": t_read,
+             "edges_per_s": m / t_read}
+        )
+        rows.append(
+            {"algo": "STR-chunked", "m": m, "seconds": t_str,
+             "edges_per_s": m / t_str}
+        )
+        if m <= baselines_at:
+            t_oracle = _time(
+                lambda e: cluster_stream_dense(e, v_max, n)[0], edges
+            )
+            t_lv = _time(lambda e: louvain(e, n, seed=0), edges)
+            t_lp = _time(lambda e: label_propagation(e, n, sweeps=3), edges)
+            rows.append({"algo": "STR-sequential(paper)", "m": m,
+                         "seconds": t_oracle, "edges_per_s": m / t_oracle})
+            rows.append({"algo": "Louvain", "m": m, "seconds": t_lv,
+                         "edges_per_s": m / t_lv})
+            rows.append({"algo": "LabelProp", "m": m, "seconds": t_lp,
+                         "edges_per_s": m / t_lp})
+    # linearity check + Friendster extrapolation for the streaming tier
+    str_rows = [r for r in rows if r["algo"] == "STR-chunked"]
+    if len(str_rows) >= 2:
+        a, b = str_rows[0], str_rows[-1]
+        scale = (b["seconds"] / a["seconds"]) / (b["m"] / a["m"])
+        rows.append({"algo": "STR-linearity(t ratio / m ratio)", "m": b["m"],
+                     "seconds": scale, "edges_per_s": 0.0})
+        rows.append({
+            "algo": "STR-friendster-extrapolation(1.8e9 edges)",
+            "m": 1_806_067_135,
+            "seconds": 1_806_067_135 / b["edges_per_s"],
+            "edges_per_s": b["edges_per_s"],
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['algo']:42s} m={r['m']:>12,d} {r['seconds']:10.3f}s "
+              f"{r['edges_per_s']:>14,.0f} edges/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily with
+the KV cache, report throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main([
+        "--arch", "qwen1.5-0.5b", "--smoke",
+        "--batch", "8", "--prompt-len", "64", "--gen", "32",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.configs.registry import REGISTRY, get_config, get_smoke_config  # noqa: F401

@@ -1,0 +1,124 @@
+"""Model configuration schema covering all 10 assigned architectures.
+
+A model is a stack of *blocks*; each block is ``(mixing, ffn)`` where
+
+  mixing ∈ {"global", "local", "cross", "dec_cross", "enc", "mla",
+            "recurrent", "ssm"}
+  ffn    ∈ {"dense", "moe", "none"}
+
+The stack is ``prefix_blocks`` (unrolled, e.g. deepseek's first dense layer)
+followed by ``n_cycles`` repetitions of ``block_pattern`` (scanned — weights
+stacked on a leading cycle axis) followed by ``suffix_blocks`` (unrolled
+remainder when n_layers is not a multiple of the pattern length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+Block = Tuple[str, str]  # (mixing, ffn)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    block_pattern: Tuple[Block, ...] = (("global", "dense"),)
+    prefix_pattern: Tuple[Block, ...] = ()
+    # attention
+    window: int = 0
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0
+    # embeddings / head
+    tie_embeddings: bool = True
+    act: str = "silu"
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+    # MLA (deepseek)
+    q_lora: int = 0
+    kv_lora: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (mamba2 SSD)
+    d_inner: int = 0
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 128
+    # RG-LRU (recurrentgemma)
+    lru_width: int = 0
+    # encoder-decoder (whisper) / VLM
+    encoder_layers: int = 0
+    n_frames: int = 0  # whisper stub: precomputed frame embeddings length
+    n_image_tokens: int = 0  # vlm stub: precomputed patch embeddings length
+    # numerics
+    dtype: str = "bfloat16"
+    kv_dtype: str = "bfloat16"  # "float8_e4m3fn" halves big decode caches
+    # serving
+    supports_long_context: bool = False  # sub-quadratic → long_500k cell runs
+    # harness
+    notes: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def layer_stack(self) -> Tuple[Tuple[Block, ...], int, Tuple[Block, ...]]:
+        """(prefix, n_cycles, suffix) covering exactly n_layers blocks."""
+        body = self.n_layers - len(self.prefix_pattern)
+        cyc = len(self.block_pattern)
+        n_cycles = body // cyc
+        rem = body - n_cycles * cyc
+        return self.prefix_pattern, n_cycles, self.block_pattern[:rem]
+
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total, incl. all experts)."""
+        from repro.models.transformer import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.transformer import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell input shape (assigned per architecture)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)

@@ -1,0 +1,47 @@
+"""deepseek-v2-236b [moe]: MLA (kv_lora=512) + 2 shared / 160 routed top-6
+experts; first layer dense.  [arXiv:2405.04434; hf]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,  # unused by MLA (nope/rope/v dims below)
+    d_ff=12288,  # dense FFN of the first (prefix) layer
+    vocab_size=102400,
+    prefix_pattern=(("mla", "dense"),),
+    block_pattern=(("mla", "moe"),),
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    d_expert=1536,
+    q_lora=1536,
+    kv_lora=512,
+    rope_head_dim=64,
+    nope_head_dim=128,
+    v_head_dim=128,
+    tie_embeddings=False,
+    notes="MLA latent cache (512+64); MoE 160e top-6 + 2 shared; "
+    "full attention → long_500k skipped",
+)
+
+SMOKE = FULL.replace(
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    n_experts=8,
+    top_k=2,
+    n_shared_experts=1,
+    d_expert=32,
+    q_lora=48,
+    kv_lora=32,
+    rope_head_dim=8,
+    nope_head_dim=16,
+    v_head_dim=16,
+)

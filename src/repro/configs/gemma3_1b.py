@@ -1,0 +1,34 @@
+"""gemma3-1b [dense]: 26L, 5:1 local:global sliding-window attention.
+[hf:google/gemma-3-1b-pt; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    block_pattern=(("local", "dense"),) * 5 + (("global", "dense"),),
+    window=512,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    act="gelu",
+    supports_long_context=True,  # 5:1 sliding-window → sub-quadratic
+    notes="5 local (w=512) : 1 global; 128k context; 262k vocab",
+)
+
+SMOKE = FULL.replace(
+    n_layers=12,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    window=16,
+)

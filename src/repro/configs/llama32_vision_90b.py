@@ -1,0 +1,34 @@
+"""llama-3.2-vision-90b [vlm]: cross-attn image layers every 5th layer.
+The vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings (B, n_image_tokens, d_model).  [hf:meta-llama/...-Vision; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    block_pattern=(("global", "dense"),) * 4 + (("cross", "dense"),),
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    n_image_tokens=2048,
+    notes="80 self-attn + 20 gated cross-attn layers; full attention → "
+    "long_500k skipped",
+)
+
+SMOKE = FULL.replace(
+    n_layers=5,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=128,
+    vocab_size=512,
+    n_image_tokens=128,
+)

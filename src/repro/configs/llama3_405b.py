@@ -1,0 +1,29 @@
+"""llama3-405b [dense]: 126L GQA, 128k vocab.  [arXiv:2407.21783; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    block_pattern=(("global", "dense"),),
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    notes="dense GQA; full attention → long_500k skipped",
+)
+
+SMOKE = FULL.replace(
+    n_layers=4,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=192,
+    vocab_size=512,
+)

@@ -1,0 +1,37 @@
+"""mamba2-1.3b [ssm]: attention-free SSD.  [arXiv:2405.21060; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,  # unused (attention-free)
+    n_kv_heads=1,
+    head_dim=1,
+    d_ff=0,
+    vocab_size=50280,
+    block_pattern=(("ssm", "none"),),
+    d_inner=4096,
+    ssm_state=128,
+    ssm_heads=64,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    conv_width=4,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    supports_long_context=True,  # O(1) state decode
+    notes="SSD (state-space duality); no attention, no FFN",
+)
+
+SMOKE = FULL.replace(
+    n_layers=4,
+    d_model=64,
+    d_inner=128,
+    ssm_state=16,
+    ssm_heads=4,
+    ssm_head_dim=32,
+    vocab_size=512,
+    ssm_chunk=32,
+)

@@ -1,0 +1,35 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,  # per-expert hidden
+    vocab_size=32064,
+    block_pattern=(("global", "moe"),),
+    n_experts=16,
+    top_k=2,
+    d_expert=6400,
+    tie_embeddings=False,
+    notes="GQA kv=8; 16 experts top-2; full attention → long_500k skipped",
+)
+
+SMOKE = FULL.replace(
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=64,
+    vocab_size=512,
+    n_experts=4,
+    top_k=2,
+    d_expert=64,
+)

@@ -1,0 +1,28 @@
+"""phi3-mini-3.8b [dense]: 32L RoPE SwiGLU.  [arXiv:2404.14219; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    block_pattern=(("global", "dense"),),
+    tie_embeddings=False,
+    notes="MHA (kv=32), RoPE + SwiGLU",
+)
+
+SMOKE = FULL.replace(
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,29 @@
+"""qwen1.5-0.5b [dense]: 24L MHA with QKV bias.  [hf:Qwen/Qwen1.5-0.5B; hf]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151936,
+    block_pattern=(("global", "dense"),),
+    qkv_bias=True,
+    tie_embeddings=True,
+    notes="MHA (kv=16), QKV bias, 152k vocab",
+)
+
+SMOKE = FULL.replace(
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,40 @@
+"""recurrentgemma-2b [hybrid]: RG-LRU + local attention, 2:1.
+[arXiv:2402.19427; hf]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=(
+        ("recurrent", "dense"),
+        ("recurrent", "dense"),
+        ("local", "dense"),
+    ),
+    window=2048,
+    lru_width=2560,
+    conv_width=4,
+    tie_embeddings=True,
+    act="gelu",
+    supports_long_context=True,  # recurrent state + windowed attention
+    notes="Griffin-style: 2 RG-LRU blocks : 1 local-MQA (w=2048)",
+)
+
+SMOKE = FULL.replace(
+    n_layers=6,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    lru_width=64,
+    window=16,
+)

@@ -1,0 +1,75 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-arch shape cells.
+
+Every architecture runs ``train_4k``, ``prefill_32k``, ``decode_32k``.
+``long_500k`` requires sub-quadratic attention and runs only for
+gemma3-1b (5:1 sliding window), recurrentgemma-2b (hybrid), mamba2-1.3b
+(SSM); the skip rationale per arch is in each config's ``notes`` and
+DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs import (
+    deepseek_v2_236b,
+    gemma3_1b,
+    llama3_405b,
+    llama32_vision_90b,
+    mamba2_13b,
+    phi3_mini,
+    phi35_moe,
+    qwen15_05b,
+    recurrentgemma_2b,
+    whisper_medium,
+)
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+)
+
+_MODULES = {
+    "gemma3-1b": gemma3_1b,
+    "llama3-405b": llama3_405b,
+    "qwen1.5-0.5b": qwen15_05b,
+    "phi3-mini-3.8b": phi3_mini,
+    "recurrentgemma-2b": recurrentgemma_2b,
+    "mamba2-1.3b": mamba2_13b,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+    "whisper-medium": whisper_medium,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+}
+
+REGISTRY: Dict[str, ModelConfig] = {k: m.FULL for k, m in _MODULES.items()}
+SMOKE_REGISTRY: Dict[str, ModelConfig] = {k: m.SMOKE for k, m in _MODULES.items()}
+
+
+def get_config(name: str) -> ModelConfig:
+    return REGISTRY[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return SMOKE_REGISTRY[name]
+
+
+def shapes_for(cfg: ModelConfig) -> List[ShapeConfig]:
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.supports_long_context:
+        shapes.append(LONG_500K)
+    return shapes
+
+
+def all_cells() -> List[Tuple[str, ShapeConfig, bool]]:
+    """All 40 (arch, shape, live) cells; live=False are documented skips."""
+    cells = []
+    for name, cfg in REGISTRY.items():
+        for shape in ALL_SHAPES:
+            live = shape.name != "long_500k" or cfg.supports_long_context
+            cells.append((name, shape, live))
+    return cells

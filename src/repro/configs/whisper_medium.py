@@ -1,0 +1,36 @@
+"""whisper-medium [audio]: enc-dec; conv frontend is a STUB — input_specs()
+provides precomputed frame embeddings (B, n_frames, d_model).
+[arXiv:2212.04356; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,  # decoder layers; encoder_layers below
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    block_pattern=(("dec_cross", "dense"),),
+    encoder_layers=24,
+    n_frames=1536,  # 1500 mel frames, lane-padded
+    tie_embeddings=True,
+    act="gelu",
+    notes="24 enc + 24 dec layers; decoder = self + cross per layer; "
+    "full attention → long_500k skipped",
+)
+
+SMOKE = FULL.replace(
+    n_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    n_frames=64,
+)

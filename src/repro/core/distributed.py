@@ -1,0 +1,134 @@
+"""Multi-device streaming clustering: local pass + contracted global pass.
+
+Beyond-paper distributed extension (paper §5 names parallelism as future
+work).  The stream is split into ``P`` contiguous shards, one per device on
+the ``data`` mesh axis:
+
+1. **Local phase** (``shard_map``): every device runs the chunked Tier-2
+   clusterer on its shard only — zero communication.
+2. **Merge phase**: shard-local labels live in the global node-id space (a
+   label is the founding node's id), so merging is a second clustering run on
+   a *contracted stream*: (i) identity edges ``(c_s[i], c_{s+1}[i])`` linking
+   each node's supernodes across consecutive shards — streamed FIRST so merges
+   happen while volumes are small, then (ii) every original edge rewritten to
+   its shard's supernodes.  Final label of node ``i`` is the phase-2 label of
+   its first-active shard supernode.
+
+Quality vs the single-stream algorithm is measured in
+``benchmarks/table2_quality.py`` — not assumed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.chunked import cluster_stream_chunked
+from repro.core.streaming import PAD
+from repro.graph.stream import shard_stream
+
+Array = jax.Array
+
+
+def _local_phase(shards: Array, v_max: int, n: int, chunk: int):
+    """vmapped local clustering; one shard per device under pjit."""
+
+    def one(shard):
+        c, d, v = cluster_stream_chunked(shard, v_max, n, chunk)
+        return c, d, v
+
+    return jax.vmap(one)(shards)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("v_max", "n", "chunk", "v_max2")
+)
+def _merge_phase(
+    shards: Array,
+    cs: Array,
+    ds: Array,
+    v_max: int,
+    n: int,
+    chunk: int,
+    v_max2: int,
+):
+    """Contract + global clustering + label pull-back (replicated compute)."""
+    Pn = cs.shape[0]
+    # Identity edges: consecutive-shard supernodes of each active node.
+    active = ds > 0  # (P, n)
+    ident = []
+    for s in range(Pn - 1):
+        both = active[s] & active[s + 1]
+        a = jnp.where(both, cs[s], PAD)
+        b = jnp.where(both, cs[s + 1], PAD)
+        ident.append(jnp.stack([a, b], axis=1))
+    ident = (
+        jnp.concatenate(ident, axis=0)
+        if ident
+        else jnp.zeros((0, 2), jnp.int32)
+    )
+    # Original edges rewritten to their own shard's supernodes.
+    def rewrite(shard, c_s):
+        live = (shard[:, 0] != PAD) & (shard[:, 1] != PAD)
+        a = jnp.where(live, c_s[jnp.maximum(shard[:, 0], 0)], PAD)
+        b = jnp.where(live, c_s[jnp.maximum(shard[:, 1], 0)], PAD)
+        return jnp.stack([a, b], axis=1)
+
+    contracted = jax.vmap(rewrite)(shards, cs).reshape(-1, 2)
+    stream2 = jnp.concatenate([ident, contracted], axis=0)
+    # Intra-supernode contracted edges become self-loops, which the clusterer
+    # skips — seed the phase-2 state with that internal mass (+2 per edge) so
+    # the v_max threshold still sees each supernode's true volume.
+    selfmask = (stream2[:, 0] == stream2[:, 1]) & (stream2[:, 0] != PAD)
+    tgt = jnp.where(selfmask, stream2[:, 0], n)
+    self_mass = (
+        jnp.zeros(n + 1, jnp.int32).at[tgt].add(2 * selfmask.astype(jnp.int32))
+    )[:n]
+    c2, _, _ = cluster_stream_chunked(
+        stream2, v_max2, n, chunk, init_d=self_mass, init_v=self_mass
+    )
+
+    # Pull back: node -> first-active-shard supernode -> phase-2 label.
+    any_active = active.any(axis=0)
+    s_first = jnp.argmax(active, axis=0)
+    label1 = jnp.where(
+        any_active, cs[s_first, jnp.arange(n)], jnp.arange(n, dtype=jnp.int32)
+    )
+    return c2[label1]
+
+
+def distributed_cluster(
+    edges: np.ndarray,
+    v_max: int,
+    n: int,
+    mesh: Optional[Mesh] = None,
+    n_shards: Optional[int] = None,
+    chunk: int = 1024,
+    v_max2: Optional[int] = None,
+) -> Tuple[np.ndarray, dict]:
+    """Cluster an edge stream across devices.  Returns (labels, info)."""
+    if mesh is not None:
+        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    n_shards = n_shards or 1
+    v_max2 = v_max2 if v_max2 is not None else v_max
+    shards = jnp.asarray(shard_stream(edges, n_shards))
+
+    local = jax.jit(
+        functools.partial(_local_phase, v_max=v_max, n=n, chunk=chunk)
+    )
+    if mesh is not None:
+        spec = NamedSharding(mesh, P(mesh.axis_names))
+        shards = jax.device_put(shards, spec)
+        local = jax.jit(
+            functools.partial(_local_phase, v_max=v_max, n=n, chunk=chunk),
+            in_shardings=spec,
+        )
+    cs, ds, vs = local(shards)
+    labels = _merge_phase(shards, cs, ds, v_max, n, chunk, v_max2)
+    info = {"n_shards": n_shards}
+    return np.asarray(labels), info

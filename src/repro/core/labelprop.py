@@ -1,0 +1,36 @@
+"""Asynchronous label propagation baseline (speed-class stand-in for SCD).
+
+Simple and fast: each sweep, every node adopts the plurality label among its
+neighbours (ties -> keep / smallest label).  Included so the quality table has
+a second non-streaming baseline that *does* scale to the larger benchmark
+graphs in-container.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.louvain import _to_csr
+
+
+def label_propagation(
+    edges: np.ndarray, n: int, sweeps: int = 5, seed: int = 0
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    indptr, indices, _ = _to_csr(edges, n)
+    labels = np.arange(n, dtype=np.int64)
+    for _ in range(sweeps):
+        changed = 0
+        for u in rng.permutation(n):
+            lo, hi = indptr[u], indptr[u + 1]
+            if hi == lo:
+                continue
+            nbr_labels = labels[indices[lo:hi]]
+            uniq, cnt = np.unique(nbr_labels, return_counts=True)
+            best = uniq[np.argmax(cnt)]
+            if best != labels[u]:
+                labels[u] = best
+                changed += 1
+        if changed == 0:
+            break
+    return labels

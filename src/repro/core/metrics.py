@@ -1,0 +1,139 @@
+"""Clustering quality metrics: modularity, average F1 (Yang–Leskovec), NMI.
+
+Also the *edge-free* selection metrics of paper §2.5 (entropy, average
+density), computable from the streaming state ``(c, v)`` alone — i.e. without
+the graph — which is what makes them usable for one-pass multi-``v_max``
+selection.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Modularity (paper §3.1)
+# ---------------------------------------------------------------------------
+
+def modularity(edges: np.ndarray, labels: np.ndarray) -> float:
+    """Newman modularity of a partition given the edge multiset.
+
+    ``Q = (1/w) * (2*E_intra - sum_C Vol(C)^2 / w)`` with ``w = 2m``.
+    Self-loop/PAD rows are ignored.
+    """
+    edges = np.asarray(edges)
+    live = (edges[:, 0] >= 0) & (edges[:, 1] >= 0) & (edges[:, 0] != edges[:, 1])
+    e = edges[live]
+    m = e.shape[0]
+    if m == 0:
+        return 0.0
+    w = 2.0 * m
+    li, lj = labels[e[:, 0]], labels[e[:, 1]]
+    intra = float(np.count_nonzero(li == lj))
+    deg = np.bincount(e.ravel(), minlength=len(labels)).astype(np.float64)
+    vol = np.zeros(int(labels.max()) + 1, dtype=np.float64)
+    np.add.at(vol, labels, deg)
+    return (2.0 * intra - float((vol**2).sum()) / w) / w
+
+
+def streaming_modularity_terms(
+    edges: np.ndarray, labels: np.ndarray
+) -> Tuple[float, float]:
+    """(Int, Vol^2-sum) terms of the *unnormalised* streaming Q_t (paper §3.1)."""
+    edges = np.asarray(edges)
+    live = (edges[:, 0] >= 0) & (edges[:, 1] >= 0)
+    e = edges[live]
+    li, lj = labels[e[:, 0]], labels[e[:, 1]]
+    intra = float(np.count_nonzero(li == lj))
+    deg = np.bincount(e.ravel(), minlength=len(labels)).astype(np.float64)
+    vol = np.zeros(int(labels.max()) + 1, dtype=np.float64)
+    np.add.at(vol, labels, deg)
+    return intra, float((vol**2).sum())
+
+
+# ---------------------------------------------------------------------------
+# Average F1 score (Yang & Leskovec / SCD convention)
+# ---------------------------------------------------------------------------
+
+def _contingency(a: np.ndarray, b: np.ndarray):
+    """Sparse contingency counts between two labelings over the same nodes."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    key = a * (b.max() + 1) + b
+    uk, cnt = np.unique(key, return_counts=True)
+    return uk // (b.max() + 1), uk % (b.max() + 1), cnt
+
+
+def avg_f1(pred: np.ndarray, truth: np.ndarray) -> float:
+    """Average F1: mean of best-match F1 in both directions (paper §4.3)."""
+    pa, pb, cnt = _contingency(pred, truth)
+    sz_pred = np.bincount(np.asarray(pred, dtype=np.int64))
+    sz_truth = np.bincount(np.asarray(truth, dtype=np.int64))
+    inter = cnt.astype(np.float64)
+    prec = inter / sz_pred[pa]
+    rec = inter / sz_truth[pb]
+    f1 = 2 * prec * rec / np.maximum(prec + rec, 1e-12)
+
+    def best(keys, f1s, n_groups, live_sizes):
+        bst = np.zeros(n_groups, dtype=np.float64)
+        np.maximum.at(bst, keys, f1s)
+        mask = live_sizes > 0
+        return float(bst[mask].mean()) if mask.any() else 0.0
+
+    f_pred = best(pa, f1, len(sz_pred), sz_pred)
+    f_truth = best(pb, f1, len(sz_truth), sz_truth)
+    return 0.5 * (f_pred + f_truth)
+
+
+# ---------------------------------------------------------------------------
+# Normalized Mutual Information (disjoint partitions)
+# ---------------------------------------------------------------------------
+
+def nmi(pred: np.ndarray, truth: np.ndarray) -> float:
+    """NMI with sqrt normalisation over the joint node distribution."""
+    n = len(pred)
+    pa, pb, cnt = _contingency(pred, truth)
+    pxy = cnt / n
+    px = np.bincount(np.asarray(pred, dtype=np.int64)) / n
+    py = np.bincount(np.asarray(truth, dtype=np.int64)) / n
+    mi = float(np.sum(pxy * np.log(np.maximum(pxy / (px[pa] * py[pb]), 1e-300))))
+    hx = -float(np.sum(px[px > 0] * np.log(px[px > 0])))
+    hy = -float(np.sum(py[py > 0] * np.log(py[py > 0])))
+    denom = np.sqrt(hx * hy)
+    return mi / denom if denom > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Edge-free selection metrics (paper §2.5) — computable from (c, v) alone
+# ---------------------------------------------------------------------------
+
+def entropy_from_state(v: np.ndarray, w: float) -> float:
+    """H(v) = -sum_k (v_k/w) log(v_k/w) over non-empty communities."""
+    vk = np.asarray(v, dtype=np.float64)
+    vk = vk[vk > 0]
+    p = vk / w
+    return -float(np.sum(p * np.log(p)))
+
+
+def avg_density_from_state(c: np.ndarray, v: np.ndarray) -> float:
+    """D(c,v) = (1/|P|) sum_k v_k / (|C_k| (|C_k|-1)) over non-empty k."""
+    c = np.asarray(c, dtype=np.int64)
+    sizes = np.bincount(c, minlength=len(v))
+    live = sizes > 0
+    dens = np.zeros(len(v), dtype=np.float64)
+    big = live & (sizes > 1)
+    dens[big] = np.asarray(v)[big] / (sizes[big] * (sizes[big] - 1.0))
+    k = int(np.count_nonzero(live))
+    return float(dens[live].sum() / k) if k else 0.0
+
+
+def community_stats(labels: np.ndarray) -> Dict[str, float]:
+    sizes = np.bincount(np.asarray(labels, dtype=np.int64))
+    sizes = sizes[sizes > 0]
+    return {
+        "n_communities": int(len(sizes)),
+        "max_size": int(sizes.max()) if len(sizes) else 0,
+        "mean_size": float(sizes.mean()) if len(sizes) else 0.0,
+    }

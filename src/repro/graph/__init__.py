@@ -1,0 +1,1 @@
+from repro.graph import generators, stream  # noqa: F401

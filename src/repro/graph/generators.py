@@ -1,0 +1,108 @@
+"""Synthetic graph generators reproducing the paper's experimental regimes.
+
+SNAP datasets are not available offline; these generators produce graphs with
+the same *structure* the paper exploits: planted communities (SBM — quality
+benchmarks, F1/NMI vs ground truth) and heavy-tailed degree graphs
+(Chung–Lu — speed benchmarks up to ~1e8 edges).  All return edge *streams*
+(random order, as the paper assumes) as ``(m, 2) int32`` arrays.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GraphSpec:
+    name: str
+    n: int
+    m: int  # number of streamed edges (multi-edges possible, as in the paper)
+
+
+def sbm_stream(
+    n: int,
+    n_communities: int,
+    avg_degree: float = 16.0,
+    p_intra: float = 0.8,
+    seed: int = 0,
+    shuffle: bool = True,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Planted-partition stream: returns (edges, ground_truth labels).
+
+    ``p_intra`` is the probability an edge is intra-community.  Endpoints are
+    drawn uniformly inside the chosen block(s); self-loops resampled cheaply.
+    Multi-edges may occur (the paper's setting is an unweighted multi-graph).
+    """
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree / 2)
+    labels = rng.integers(0, n_communities, size=n).astype(np.int32)
+    # Bucket nodes by community for O(1) within-block sampling.
+    order = np.argsort(labels, kind="stable")
+    sorted_labels = labels[order]
+    starts = np.searchsorted(sorted_labels, np.arange(n_communities))
+    ends = np.searchsorted(sorted_labels, np.arange(n_communities), side="right")
+    sizes = ends - starts
+
+    intra = rng.random(m) < p_intra
+    # Community of each intra edge ~ proportional to block size (uniform edge).
+    comm = rng.integers(0, n_communities, size=m)
+    u = np.empty(m, dtype=np.int64)
+    w = np.empty(m, dtype=np.int64)
+
+    ss = np.maximum(sizes[comm], 1)
+    a = starts[comm] + rng.integers(0, 2**62, size=m) % ss
+    b = starts[comm] + rng.integers(0, 2**62, size=m) % ss
+    u_i, w_i = order[a], order[b]
+
+    u_o = rng.integers(0, n, size=m)
+    w_o = rng.integers(0, n, size=m)
+
+    u = np.where(intra, u_i, u_o)
+    w = np.where(intra, w_i, w_o)
+    # Remove self-loops by shifting one endpoint (keeps the distribution close
+    # enough; the paper assumes no self-loops).
+    loops = u == w
+    w = np.where(loops, (w + 1) % n, w)
+
+    edges = np.stack([u, w], axis=1).astype(np.int32)
+    if shuffle:
+        rng.shuffle(edges, axis=0)
+    return edges, labels
+
+
+def chung_lu_stream(
+    n: int, m: int, gamma: float = 2.5, seed: int = 0
+) -> np.ndarray:
+    """Power-law expected-degree stream (speed benchmarks; no ground truth)."""
+    rng = np.random.default_rng(seed)
+    w = (np.arange(1, n + 1, dtype=np.float64)) ** (-1.0 / (gamma - 1.0))
+    p = w / w.sum()
+    cdf = np.cumsum(p)
+    u = np.searchsorted(cdf, rng.random(m))
+    v = np.searchsorted(cdf, rng.random(m))
+    v = np.where(u == v, (v + 1) % n, v)
+    perm = rng.permutation(n)  # decorrelate node id from degree
+    return np.stack([perm[u], perm[v]], axis=1).astype(np.int32)
+
+
+def ring_of_cliques(
+    n_cliques: int, clique_size: int, seed: int = 0, shuffle: bool = True
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic ground truth used in unit tests: cliques + one ring edge."""
+    rng = np.random.default_rng(seed)
+    edges = []
+    for k in range(n_cliques):
+        base = k * clique_size
+        for a in range(clique_size):
+            for b in range(a + 1, clique_size):
+                edges.append((base + a, base + b))
+        nxt = ((k + 1) % n_cliques) * clique_size
+        edges.append((base, nxt))
+    edges = np.array(edges, dtype=np.int32)
+    labels = np.repeat(np.arange(n_cliques, dtype=np.int32), clique_size)
+    if shuffle:
+        rng.shuffle(edges, axis=0)
+    return edges, labels

@@ -1,0 +1,48 @@
+"""Edge-stream plumbing: chunking/padding to fixed shapes, device sharding.
+
+The streaming setting (paper §2.1): the graph arrives as an ordered sequence
+of edges processed strictly once.  TPUs want fixed shapes, so streams are cut
+into fixed-size chunks padded with ``PAD`` sentinel edges (no-ops in every
+clustering tier).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.streaming import PAD
+
+
+def pad_to_chunks(edges: np.ndarray, chunk: int) -> np.ndarray:
+    """(m, 2) -> (ceil(m/chunk), chunk, 2), padded with PAD edges."""
+    m = edges.shape[0]
+    n_chunks = max(1, -(-m // chunk))
+    out = np.full((n_chunks * chunk, 2), PAD, dtype=np.int32)
+    out[:m] = edges
+    return out.reshape(n_chunks, chunk, 2)
+
+
+def shard_stream(edges: np.ndarray, n_shards: int) -> np.ndarray:
+    """Contiguous split of the stream into ``n_shards`` equal padded shards.
+
+    Contiguous (not strided) so each shard preserves the stream order of its
+    slice — the streaming argument ("early edges are intra-community") applies
+    within every shard.  Returns (n_shards, shard_len, 2).
+    """
+    m = edges.shape[0]
+    shard_len = -(-m // n_shards)
+    out = np.full((n_shards, shard_len, 2), PAD, dtype=np.int32)
+    for s in range(n_shards):
+        part = edges[s * shard_len : (s + 1) * shard_len]
+        out[s, : part.shape[0]] = part
+    return out
+
+
+def edge_list_bytes(m: int, int_bytes: int = 8) -> int:
+    """Memory to store the edge list (paper's lower bound for non-streaming)."""
+    return 2 * m * int_bytes
+
+
+def state_bytes(n: int, int_bytes: int = 4) -> int:
+    """The streaming state: exactly three integers per node."""
+    return 3 * n * int_bytes

@@ -1,0 +1,1 @@
+from repro.kernels.edge_decide.ops import edge_decide  # noqa: F401

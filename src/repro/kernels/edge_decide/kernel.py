@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: vectorised per-edge join decision (Algorithm 1 line 10+).
+
+The decision stage of the chunked (Jacobi) tier: given the gathered
+post-arrival community volumes and degrees for a block of edges, emit the
+action code and the volume delta, 8×128-lane vectorised on the VPU.  The
+gather/scatter halves stay in XLA (they are data-movement, not compute); this
+kernel is the arithmetic hot loop.
+
+action: 0 = no-op, 1 = i joins C(j), 2 = j joins C(i).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def edge_decide_kernel(
+    vci_ref, vcj_ref, di_ref, dj_ref, live_ref, action_ref, amount_ref,
+    *, v_max: int,
+):
+    vci = vci_ref[...]
+    vcj = vcj_ref[...]
+    live = live_ref[...] != 0
+    ok = live & (vci <= v_max) & (vcj <= v_max)
+    i_joins = ok & (vci <= vcj)
+    j_joins = ok & (vci > vcj)
+    action = jnp.where(i_joins, 1, jnp.where(j_joins, 2, 0)).astype(jnp.int32)
+    amount = jnp.where(
+        i_joins, di_ref[...], jnp.where(j_joins, dj_ref[...], 0)
+    ).astype(jnp.int32)
+    action_ref[...] = action
+    amount_ref[...] = amount
+
+
+def build_call(rows: int, block_rows: int, v_max: int, interpret: bool):
+    kernel = functools.partial(edge_decide_kernel, v_max=v_max)
+    spec = pl.BlockSpec((block_rows, 128), lambda r: (r, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+            jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+        ],
+        interpret=interpret,
+    )

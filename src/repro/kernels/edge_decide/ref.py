@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the edge_decide kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_decide_ref(vci, vcj, di, dj, live, v_max: int):
+    live = live != 0
+    ok = live & (vci <= v_max) & (vcj <= v_max)
+    i_joins = ok & (vci <= vcj)
+    j_joins = ok & (vci > vcj)
+    action = jnp.where(i_joins, 1, jnp.where(j_joins, 2, 0)).astype(jnp.int32)
+    amount = jnp.where(i_joins, di, jnp.where(j_joins, dj, 0)).astype(jnp.int32)
+    return action, amount

@@ -1,0 +1,1 @@
+from repro.kernels.edge_stream.ops import edge_stream_cluster  # noqa: F401

@@ -1,0 +1,42 @@
+"""Jitted wrapper for the edge_stream Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streaming import PAD
+from repro.kernels.edge_stream.kernel import build_call
+
+
+@functools.partial(
+    jax.jit, static_argnames=("v_max", "n", "chunk", "interpret")
+)
+def edge_stream_cluster(
+    edges: jax.Array,
+    v_max: int,
+    n: int,
+    chunk: int = 2048,
+    interpret: bool = True,
+):
+    """Cluster an edge stream with the in-VMEM Pallas kernel.
+
+    Args:
+      edges: (m, 2) int32 stream (PAD rows are no-ops).
+      v_max: paper's volume threshold.
+      n: number of nodes (state = 3n int32 must fit VMEM; n ≤ ~1.3M).
+      chunk: edges per grid step (HBM→VMEM DMA granularity).
+      interpret: True on CPU (validation); False on real TPUs.
+
+    Returns:
+      (c, d, v) int32 arrays of size n — bit-exact with Algorithm 1.
+    """
+    m = edges.shape[0]
+    n_chunks = max(1, -(-m // chunk))
+    padded = jnp.full((n_chunks * chunk, 2), PAD, dtype=jnp.int32)
+    padded = jax.lax.dynamic_update_slice(padded, edges.astype(jnp.int32), (0, 0))
+    call = build_call(n, chunk, n_chunks, v_max, interpret)
+    d, c, v = call(padded)
+    return c, d, v

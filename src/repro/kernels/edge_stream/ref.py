@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the edge_stream kernel.
+
+``cluster_stream_scan`` (one edge per ``lax.scan`` step) is itself verified
+bit-exact against the paper's dictionary Algorithm 1 in
+``tests/test_streaming_core.py``; the kernel must match it bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.streaming import cluster_stream_scan
+
+
+def edge_stream_ref(edges: jax.Array, v_max: int, n: int):
+    """Returns (c, d, v) — same contract as the kernel wrapper."""
+    c, d, v = cluster_stream_scan(edges, v_max, n)
+    return c, d, v

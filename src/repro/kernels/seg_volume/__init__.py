@@ -1,0 +1,1 @@
+from repro.kernels.seg_volume.ops import seg_volume  # noqa: F401

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: community-volume histogram as one-hot MXU matmul.
+
+``bincount`` is a scatter on GPUs/CPUs; the TPU-native formulation is
+``ones(1, B) @ one_hot(labels, K)`` — a (1, B) x (B, K) matmul that runs on
+the MXU at full tile utilisation.  Used by the Jacobi tier and by metric
+computation to histogram weighted community volumes.
+
+Grid: (K_blocks, B_blocks); the output block (1, bk) for a given k-block is
+revisited across all B-blocks (TPU grids iterate the minor axis sequentially)
+and accumulated in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def seg_volume_kernel(labels_ref, weights_ref, out_ref, *, block_k: int):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    k0 = pl.program_id(0) * block_k
+    labels = labels_ref[...]  # (1, bb) int32
+    weights = weights_ref[...]  # (1, bb) float32
+    cols = jax.lax.broadcasted_iota(jnp.int32, (labels.shape[1], block_k), 1)
+    onehot = (labels.reshape(-1, 1) == cols + k0).astype(jnp.float32)
+    # (1, bb) @ (bb, bk) on the MXU.
+    out_ref[...] += jnp.dot(
+        weights, onehot, preferred_element_type=jnp.float32
+    )
+
+
+def build_call(
+    b: int, k: int, block_b: int, block_k: int, interpret: bool
+):
+    kernel = functools.partial(seg_volume_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(k // block_k, b // block_b),
+        in_specs=[
+            pl.BlockSpec((1, block_b), lambda kk, bb: (0, bb)),
+            pl.BlockSpec((1, block_b), lambda kk, bb: (0, bb)),
+        ],
+        out_specs=pl.BlockSpec((1, block_k), lambda kk, bb: (0, kk)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.float32),
+        interpret=interpret,
+    )

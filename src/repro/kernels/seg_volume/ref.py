@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for seg_volume: weighted bincount."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def seg_volume_ref(labels, weights, k: int):
+    return jnp.zeros(k, jnp.float32).at[labels].add(weights.astype(jnp.float32))

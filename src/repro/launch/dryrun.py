@@ -1,0 +1,425 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell with ShapeDtypeStruct inputs (no allocation), dump memory/cost/HLO
+analysis to results/dryrun/<arch>__<shape>__<mesh>.json.
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count on first init) — do not move it.
+
+    # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+        --shape train_4k --mesh single
+    # full sweep (each cell in a fresh subprocess, resumable)
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ALL_SHAPES, ShapeConfig
+from repro.configs.registry import REGISTRY, get_config
+from repro.dist.sharding import (
+    _fit_spec,
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+    replicated,
+    sharding_context,
+)
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import (
+    count_params_analytic,
+    init_params,
+    make_cache,
+)
+from repro.optim.adamw import AdamW
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import init_train_state, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+# Hardware constants (TPU v5e target).
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+HBM_BYTES = 16e9  # per chip
+
+# Per-arch memory/throughput knobs used by the BASELINE dry-run (chosen so
+# state fits the per-chip HBM budget; see DESIGN.md §4 and EXPERIMENTS.md).
+KNOBS = {
+    "llama3-405b": dict(
+        microbatch=16, remat_group=9, m_dtype="int8", v_dtype="int8",
+        accum_dtype="bfloat16", kv_dtype="float8_e4m3fn",
+    ),
+    "llama-3.2-vision-90b": dict(
+        microbatch=8, remat_group=5, m_dtype="int8", v_dtype="int8",
+        accum_dtype="bfloat16", kv_dtype="float8_e4m3fn",
+    ),
+    "deepseek-v2-236b": dict(
+        microbatch=8, m_dtype="int8", v_dtype="int8", accum_dtype="bfloat16",
+    ),
+    "phi3.5-moe-42b-a6.6b": dict(microbatch=4, m_dtype="int8", v_dtype="int8"),
+}
+
+
+def knobs_for(arch: str) -> dict:
+    base = dict(
+        microbatch=None, remat_group=0, m_dtype="float32", v_dtype="float32",
+        accum_dtype="float32", kv_dtype=None,
+    )
+    base.update(KNOBS.get(arch, {}))
+    return base
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    out = {}
+    if shape.kind == "train":
+        out = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": tok}
+    elif shape.kind == "decode":
+        out = {
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    if shape.kind in ("train", "prefill"):
+        if cfg.encoder_layers:
+            out["enc"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        elif cfg.n_image_tokens:
+            out["enc"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+    return out
+
+
+def _quant_aware_shardings(pshard, state_shape, mesh):
+    """Shardings for optimizer moments (handles int8-quantised dicts)."""
+
+    def is_q(x):
+        return isinstance(x, dict) and "q" in x and "scale" in x
+
+    def leaf(ms, ps):
+        if is_q(ms):
+            return {
+                "q": NamedSharding(mesh, _fit_spec(mesh, ps.spec, ms["q"].shape)),
+                "scale": NamedSharding(
+                    mesh, _fit_spec(mesh, ps.spec, ms["scale"].shape)
+                ),
+            }
+        return NamedSharding(mesh, _fit_spec(mesh, ps.spec, ms.shape))
+
+    return jax.tree.map(leaf, state_shape, pshard, is_leaf=is_q)
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: (jitted fn, abstract args, in_shardings)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg, shape: ShapeConfig, mesh, knobs):
+    if knobs["kv_dtype"]:
+        cfg = cfg.replace(kv_dtype=knobs["kv_dtype"])
+    specs = input_specs(cfg, shape)
+    pshape = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    pshard = param_shardings(pshape, mesh)
+
+    if shape.kind == "train":
+        opt = AdamW(m_dtype=knobs["m_dtype"], v_dtype=knobs["v_dtype"])
+        lr_fn = lambda step: jnp.float32(1e-4)
+        step_fn = make_train_step(
+            cfg, opt, lr_fn,
+            microbatch=knobs["microbatch"],
+            accum_dtype=knobs["accum_dtype"],
+            remat_group=knobs["remat_group"],
+            ce_chunk=512,
+        )
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        )
+        state_shard = {
+            "params": pshard,
+            "opt": {
+                "m": _quant_aware_shardings(pshard, state_shape["opt"]["m"], mesh),
+                "v": _quant_aware_shardings(pshard, state_shape["opt"]["v"], mesh),
+                "count": replicated(mesh),
+            },
+            "step": replicated(mesh),
+        }
+        batch_shard = {
+            k: batch_sharding(mesh, v.shape) for k, v in specs.items()
+        }
+        fn = jax.jit(step_fn, in_shardings=(state_shard, batch_shard),
+                     donate_argnums=0)
+        return fn, (state_shape, specs), (state_shard, batch_shard)
+
+    if shape.kind == "prefill":
+        pf = make_prefill_step(cfg, cache_size=shape.seq_len)
+        args = [pshape, specs["tokens"]]
+        shards = [pshard, batch_sharding(mesh, specs["tokens"].shape)]
+        if "enc" in specs:
+            args.append(specs["enc"])
+            shards.append(batch_sharding(mesh, specs["enc"].shape))
+            fn = jax.jit(pf, in_shardings=tuple(shards))
+        else:
+            fn = jax.jit(lambda p, t: pf(p, t), in_shardings=tuple(shards))
+        return fn, tuple(args), tuple(shards)
+
+    # decode
+    dec = make_decode_step(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: make_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    cshard = cache_shardings(cache_shape, mesh)
+    shards = (
+        pshard,
+        cshard,
+        batch_sharding(mesh, specs["token"].shape),
+        replicated(mesh),
+    )
+    fn = jax.jit(dec, in_shardings=shards, donate_argnums=1)
+    return fn, (pshape, cache_shape, specs["token"], specs["pos"]), shards
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def _spec_div(mesh, spec, shape) -> int:
+    div = 1
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        div *= int(np.prod([mesh.shape[a] for a in names]))
+    return div
+
+
+def tree_bytes_per_device(shape_tree, shard_tree, mesh) -> int:
+    """Exact per-device bytes of a sharded pytree (leaf sizes / shard factor)."""
+    leaves = jax.tree.leaves(shape_tree)
+    shards = jax.tree.leaves(
+        shard_tree, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    total = 0
+    for leaf, sh in zip(leaves, shards):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        b = n * leaf.dtype.itemsize
+        total += b // _spec_div(mesh, sh.spec, leaf.shape)
+    return total
+
+
+def analytic_transient_bytes(cfg, shape: ShapeConfig, knobs, mesh) -> int:
+    """Back-of-envelope transient HBM: remat residual stack + CE chunk +
+    flash working set.  The measured temp_size on the CPU backend is inflated
+    by bf16->f32 canonicalisation (CPU has no native bf16) and is reported
+    separately; this is the TPU-expected figure."""
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.shape]))
+    tp = mesh.shape.get("model", 1)
+    B_loc = max(shape.global_batch // dp, 1)
+    if shape.kind == "train":
+        mb = knobs["microbatch"]
+        k = (shape.global_batch // mb) if mb else 1
+        B_eff = max(B_loc // k, 1)
+        _, n_cycles, _ = cfg.layer_stack
+        g = knobs["remat_group"]
+        n_saved = (n_cycles // g + g) if (g and g > 1) else n_cycles
+        hidden = B_eff * shape.seq_len * cfg.d_model * 2
+        residuals = n_saved * hidden
+        ce = B_eff * 512 * (cfg.vocab_size // tp) * 4
+        accum = 0
+        if mb:
+            nbytes = {"float32": 4, "bfloat16": 2}[knobs["accum_dtype"]]
+            from repro.models.transformer import count_params_analytic as cpa
+            accum = cpa(cfg) * nbytes // n_dev
+        return residuals + ce + accum + (1 << 30)
+    if shape.kind == "prefill":
+        hidden = B_loc * shape.seq_len * cfg.d_model * 2
+        return 4 * hidden + (1 << 30)
+    return 1 << 30  # decode: O(B·S·heads_loc) scores + slack
+
+
+def model_flops(cfg, shape: ShapeConfig) -> float:
+    n_active = count_params_analytic(cfg, active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: per emitted token
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> dict:
+    cfg = get_config(arch)
+    shape = next(s for s in ALL_SHAPES if s.name == shape_name)
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "status": "skipped",
+                  "reason": "full attention (see DESIGN.md §5)"}
+        os.makedirs(out_dir, exist_ok=True)
+        fname = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(fname, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    knobs = knobs_for(arch)
+    t0 = time.time()
+    with mesh, sharding_context(mesh):
+        fn, args, shards = build_cell(cfg, shape, mesh, knobs)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = analyze(compiled.as_text())
+
+    if knobs["kv_dtype"]:
+        cfg = cfg.replace(kv_dtype=knobs["kv_dtype"])
+    state_bytes = tree_bytes_per_device(args, shards, mesh)
+    transient = analytic_transient_bytes(cfg, shape, knobs, mesh)
+    bytes_per_dev = state_bytes + transient
+    measured_bytes = (
+        mem.argument_size_in_bytes
+        + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    mf = model_flops(cfg, shape)
+    compute_s = hlo["flops"] / PEAK_FLOPS
+    memory_s = hlo["traffic_bytes"] / HBM_BW
+    coll_s = hlo["collective_bytes_total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "n_devices": n_dev,
+        "knobs": knobs,
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "state_bytes_per_device": state_bytes,
+            "analytic_transient_bytes": transient,
+            "bytes_per_device": bytes_per_dev,
+            "measured_bytes_per_device_cpu_backend": measured_bytes,
+            "fits_16GB": bool(bytes_per_dev <= HBM_BYTES),
+        },
+        "xla_cost_analysis": {
+            k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca
+        },
+        "hlo": {
+            "flops_per_device": hlo["flops"],
+            "traffic_bytes_per_device": hlo["traffic_bytes"],
+            "collective_bytes_per_device": hlo["collective_bytes_total"],
+            "collective_breakdown": hlo["collective_bytes"],
+            "collective_counts": hlo["collective_counts"],
+        },
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_total": mf,
+            "model_flops_per_device": mf / n_dev,
+            "useful_flops_ratio": (mf / n_dev) / max(hlo["flops"], 1.0),
+            "roofline_s": max(terms.values()),
+            "roofline_fraction": (mf / n_dev / PEAK_FLOPS)
+            / max(max(terms.values()), 1e-30),
+        },
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    with open(fname, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def run_all(out_dir: str, meshes=("single", "multi"), archs=None, timeout=3600):
+    """Sweep every cell in fresh subprocesses (resumable)."""
+    archs = archs or list(REGISTRY)
+    cells = []
+    for arch in archs:
+        for shape in ALL_SHAPES:
+            for mesh_kind in meshes:
+                cells.append((arch, shape.name, mesh_kind))
+    results = []
+    for arch, shape, mesh_kind in cells:
+        fname = os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+        if os.path.exists(fname):
+            print(f"[dryrun] cached   {arch} {shape} {mesh_kind}")
+            continue
+        print(f"[dryrun] running  {arch} {shape} {mesh_kind} ...", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh_kind, "--out", out_dir],
+            capture_output=True, text=True, timeout=timeout,
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        ok = proc.returncode == 0 and os.path.exists(fname)
+        print(f"[dryrun] {'done  ' if ok else 'FAILED'}  {arch} {shape} "
+              f"{mesh_kind} ({time.time()-t0:.0f}s)")
+        if not ok:
+            tail = (proc.stderr or "")[-2000:]
+            print(tail)
+            with open(fname + ".err", "w") as f:
+                f.write(proc.stdout + "\n" + proc.stderr)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args(argv)
+    if args.all:
+        run_all(args.out, archs=args.archs.split(",") if args.archs else None)
+        return
+    res = run_cell(args.arch, args.shape, args.mesh, args.out)
+    print(json.dumps(
+        {k: res[k] for k in ("arch", "shape", "mesh", "status") if k in res}
+    ))
+    if res["status"] == "ok":
+        print(f"  compile: {res['compile_s']}s  "
+              f"bytes/dev: {res['memory']['bytes_per_device']/1e9:.2f} GB  "
+              f"fits16GB: {res['memory']['fits_16GB']}")
+        r = res["roofline"]
+        print(f"  compute {r['compute_s']*1e3:.2f} ms | memory "
+              f"{r['memory_s']*1e3:.2f} ms | collective "
+              f"{r['collective_s']*1e3:.2f} ms -> dominant {r['dominant']}")
+        print(f"  useful-flops ratio {r['useful_flops_ratio']:.3f}  "
+              f"roofline fraction {r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,345 @@
+"""Static analysis of post-SPMD compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each computation ONCE — ``while``
+bodies (our layer scans, microbatch loops, flash-attention KV loops) are not
+multiplied by their trip counts (verified empirically).  This module
+re-derives roofline inputs from ``compiled.as_text()``:
+
+* parses computations + the call graph (while bodies/conditions, fusions,
+  calls, conditionals);
+* reads while trip counts from ``backend_config known_trip_count`` (with a
+  condition-literal fallback);
+* walks the graph from ENTRY accumulating an execution multiplier per
+  computation;
+* tallies per-device dot FLOPs (2 × numel(out) × contracted size — operand
+  shapes resolved through the computation's name→shape table), collective
+  bytes (result bytes of all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute), and approximate HBM traffic (operand +
+  result bytes of top-level ops — the "every op round-trips HBM" static
+  roofline convention; fusions count once at their call site).
+
+Post-SPMD HLO shapes are PER-DEVICE shapes, so all tallies are per device.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    args: str  # inside the op's parens
+    attrs: str  # after the op's parens
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+    is_entry: bool = False
+
+
+def _split_rhs(rhs: str) -> Optional[Tuple[str, str, str, str]]:
+    """'(shape) op(args), attrs' or 'shape op(args), attrs' ->
+    (shape, op, args, attrs)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape, rest = rhs[: i + 1], rhs[i + 1 :].strip()
+                    break
+        else:
+            return None
+    else:
+        parts = rhs.split(None, 1)
+        if len(parts) != 2:
+            return None
+        shape, rest = parts
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    op = m.group(1)
+    depth = 0
+    start = m.end() - 1
+    for i in range(start, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return shape, op, rest[start + 1 : i], rest[i + 1 :]
+    return shape, op, rest[start + 1 :], ""
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]:
+            name = stripped.split()[1] if stripped.startswith("ENTRY") else stripped.split()[0]
+            name = name.lstrip("%")
+            cur = Computation(name, is_entry=stripped.startswith("ENTRY"))
+            comps[name] = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None or "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        lhs = lhs.replace("ROOT", "").strip().lstrip("%")
+        if not re.fullmatch(r"[\w.\-]+", lhs):
+            continue
+        parsed = _split_rhs(rhs)
+        if not parsed:
+            continue
+        shape, op, args, attrs = parsed
+        cur.instrs.append(Instr(lhs, shape, op, args, attrs))
+        cur.shapes[lhs] = shape
+    return comps
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'known_trip_count[^}]*?"n":"(\d+)"', ins.attrs)
+    if m:
+        return max(int(m.group(1)), 1)
+    # Fallback: literal in the condition computation's compare.
+    cond = _named_attr(ins, "condition")
+    if cond and cond in comps:
+        consts = []
+        for ci in comps[cond].instrs:
+            mm = re.search(r"constant\((-?\d+)\)", ci.op + "(" + ci.args + ")")
+            if mm:
+                consts.append(int(mm.group(1)))
+        if consts:
+            return max(max(consts), 1)
+    return 1
+
+
+def _named_attr(ins: Instr, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", ins.attrs)
+    return m.group(1) if m else None
+
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "call", "conditional", "after-all", "iota", "partition-id",
+    "replica-id", "copy-start", "copy-done",
+}
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.shape)
+    numel_out = math.prod(out_dims) if out_dims else 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    operands = re.findall(r"%([\w.\-]+)", ins.args)
+    contract = 1
+    if m and operands and operands[0] in shapes:
+        lhs_dims = _shape_dims(shapes[operands[0]])
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * numel_out * contract
+
+
+def analyze(text: str) -> Dict[str, object]:
+    comps = parse_hlo(text)
+    entries = [c for c in comps.values() if c.is_entry]
+    if not entries:
+        raise ValueError("no ENTRY computation found")
+
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                body = _named_attr(ins, "calls")
+                if body:
+                    fusion_bodies.add(body)
+
+    def visit(comp: Computation, m: float, depth=0):
+        if depth > 64:
+            return
+        mult[comp.name] += m
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trips = _trip_count(ins, comps)
+                body = _named_attr(ins, "body")
+                cond = _named_attr(ins, "condition")
+                if body in comps:
+                    visit(comps[body], m * trips, depth + 1)
+                if cond in comps:
+                    mult[cond] += m * (trips + 1)
+            elif ins.op in ("call", "custom-call", "async-start"):
+                to = _named_attr(ins, "to_apply")
+                if to in comps:
+                    visit(comps[to], m, depth + 1)
+            elif ins.op == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    t = _named_attr(ins, key)
+                    if t in comps:
+                        visit(comps[t], m, depth + 1)
+                mm = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                if mm:
+                    for name in mm.group(1).replace("%", "").split(","):
+                        name = name.strip()
+                        if name in comps:
+                            visit(comps[name], m, depth + 1)
+
+    for entry in entries:
+        visit(entry, 1.0)
+
+    flops = 0.0
+    traffic = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_counts: Dict[str, float] = defaultdict(float)
+
+    _VIEWS = ("bitcast", "reshape", "copy", "convert", "transpose",
+              "broadcast", "slice")
+
+    def _sliced_params(body: Optional[Computation]) -> Dict[int, float]:
+        """Fusion params consumed through a dynamic-slice/gather inside the
+        body (possibly via bitcast/reshape view chains): traffic is the
+        slice, not the whole (loop-invariant) operand."""
+        out: Dict[int, float] = {}
+        if body is None:
+            return out
+        track: Dict[str, int] = {}  # name -> param idx it derives from
+        for ins in body.instrs:
+            if ins.op == "parameter":
+                m = re.match(r"(\d+)", ins.args)
+                if m:
+                    track[ins.name] = int(m.group(1))
+            elif ins.op in _VIEWS:
+                ops = re.findall(r"%([\w.\-]+)", ins.args)
+                if len(ops) == 1 and ops[0] in track:
+                    track[ins.name] = track[ops[0]]
+            elif ins.op in ("dynamic-slice", "gather"):
+                for opn in re.findall(r"%([\w.\-]+)", ins.args):
+                    if opn in track:
+                        idx = track[opn]
+                        b = _shape_bytes(ins.shape)
+                        out[idx] = min(out.get(idx, b), b)
+                        # the slice result is small; further views stay small
+                        track[ins.name] = idx
+        return out
+
+    def op_traffic(ins: Instr, shapes: Dict[str, str],
+                   root_op: Optional[str] = None,
+                   body: Optional[Computation] = None) -> float:
+        """HBM traffic model.  Slice-type ops touch only the slice, not the
+        whole (aliased/loop-invariant) buffer: a dynamic-update-slice into a
+        stacked remat residual writes one slice in place; a fusion gathering
+        one KV block from the stacked KV array reads one block."""
+        kind = root_op or ins.op
+        operands = [o for o in re.findall(r"%([\w.\-]+)", ins.args)
+                    if o in shapes]
+        sliced = _sliced_params(body)
+        operand_bytes = [
+            sliced.get(i, _shape_bytes(shapes[opn]))
+            for i, opn in enumerate(operands)
+        ]
+        if kind in ("dynamic-slice", "gather"):
+            return 2.0 * _shape_bytes(ins.shape)
+        if kind in ("dynamic-update-slice", "scatter"):
+            small = sum(operand_bytes) - (max(operand_bytes) if operand_bytes else 0)
+            return 3.0 * small
+        return _shape_bytes(ins.shape) + sum(operand_bytes)
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0 or comp.name in fusion_bodies:
+            continue
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += m * _dot_flops(ins, comp.shapes)
+                traffic += m * op_traffic(ins, comp.shapes)
+                continue
+            is_coll = any(
+                ins.op == c or ins.op.startswith(c + "-") for c in _COLLECTIVES
+            )
+            if is_coll:
+                if ins.op.endswith("-start"):
+                    continue  # counted at the -done
+                kind = next(c for c in _COLLECTIVES if ins.op.startswith(c))
+                b = _shape_bytes(ins.shape)
+                coll_bytes[kind] += m * b
+                coll_counts[kind] += m
+                traffic += m * b
+                continue
+            if ins.op == "fusion":
+                body = _named_attr(ins, "calls")
+                root_op = None
+                bcomp = comps.get(body)
+                if bcomp and bcomp.instrs:
+                    root_op = bcomp.instrs[-1].op
+                traffic += m * op_traffic(ins, comp.shapes, root_op, bcomp)
+                if body in comps:
+                    for sub in comps[body].instrs:
+                        if sub.op in ("dot", "convolution"):
+                            flops += m * _dot_flops(sub, comps[body].shapes)
+                continue
+            if ins.op in ("dynamic-slice", "dynamic-update-slice", "gather",
+                          "scatter"):
+                traffic += m * op_traffic(ins, comp.shapes)
+                continue
+            if ins.op not in _SKIP_TRAFFIC:
+                traffic += m * _shape_bytes(ins.shape)
+
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "collective_bytes": dict(coll_bytes),
+        "collective_bytes_total": float(sum(coll_bytes.values())),
+        "collective_counts": dict(coll_counts),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,126 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run cell profiler: rank top HBM-traffic / collective / FLOP
+contributors (with loop multipliers) for one (arch, shape, mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.profile_cell --arch deepseek-v2-236b \
+        --shape train_4k --top 15
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs.base import ALL_SHAPES
+from repro.configs.registry import get_config
+from repro.dist.sharding import sharding_context
+from repro.launch import hlo_analysis as H
+from repro.launch.dryrun import build_cell, knobs_for
+from repro.launch.mesh import make_production_mesh
+
+
+def contributors(text: str):
+    comps = H.parse_hlo(text)
+    mult = defaultdict(float)
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                b = H._named_attr(ins, "calls")
+                if b:
+                    fusion_bodies.add(b)
+
+    def visit(comp, m, depth=0):
+        if depth > 64:
+            return
+        mult[comp.name] += m
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trips = H._trip_count(ins, comps)
+                b = H._named_attr(ins, "body")
+                c = H._named_attr(ins, "condition")
+                if b in comps:
+                    visit(comps[b], m * trips, depth + 1)
+                if c in comps:
+                    mult[c] += m * (trips + 1)
+            elif ins.op in ("call", "custom-call", "async-start"):
+                t = H._named_attr(ins, "to_apply")
+                if t in comps:
+                    visit(comps[t], m, depth + 1)
+
+    for e in [c for c in comps.values() if c.is_entry]:
+        visit(e, 1.0)
+
+    rows = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0 or comp.name in fusion_bodies:
+            continue
+        for ins in comp.instrs:
+            meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+            tag = meta.group(1)[-70:] if meta else ins.name[-40:]
+            is_coll = any(ins.op.startswith(c) for c in H._COLLECTIVES)
+            if ins.op in ("dot", "convolution"):
+                t = H._shape_bytes(ins.shape)
+                f = H._dot_flops(ins, comp.shapes)
+                rows.append((m * t, m * f, 0.0, m, ins.op, ins.shape[:60], tag))
+            elif ins.op == "fusion":
+                b = H._named_attr(ins, "calls")
+                root = comps[b].instrs[-1].op if b in comps and comps[b].instrs else None
+                # approximate: output + operands (slice-aware)
+                ob = [H._shape_bytes(comp.shapes[o])
+                      for o in re.findall(r"%([\w.\-]+)", ins.args)
+                      if o in comp.shapes]
+                if root in ("dynamic-slice", "gather"):
+                    t = 2 * H._shape_bytes(ins.shape)
+                elif root in ("dynamic-update-slice", "scatter"):
+                    small = sum(ob) - (max(ob) if ob else 0)
+                    t = 3 * small
+                else:
+                    t = H._shape_bytes(ins.shape) + sum(ob)
+                f = 0.0
+                if b in comps:
+                    f = sum(H._dot_flops(s, comps[b].shapes)
+                            for s in comps[b].instrs
+                            if s.op in ("dot", "convolution"))
+                rows.append((m * t, m * f, 0.0, m, f"fusion:{root}",
+                             ins.shape[:60], tag))
+            elif is_coll and not ins.op.endswith("-start"):
+                t = H._shape_bytes(ins.shape)
+                rows.append((m * t, 0.0, m * t, m, ins.op, ins.shape[:60], tag))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--sort", choices=("traffic", "flops", "coll"),
+                    default="traffic")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = next(s for s in ALL_SHAPES if s.name == args.shape)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    knobs = knobs_for(args.arch)
+    with mesh, sharding_context(mesh):
+        fn, cell_args, _ = build_cell(cfg, shape, mesh, knobs)
+        compiled = fn.lower(*cell_args).compile()
+    rows = contributors(compiled.as_text())
+    key = {"traffic": 0, "flops": 1, "coll": 2}[args.sort]
+    rows.sort(key=lambda r: -r[key])
+    print(f"{'traffic':>10s} {'flops':>10s} {'coll':>10s} {'mult':>8s} "
+          f"{'op':24s} shape / origin")
+    for t, f, c, m, op, sh, tag in rows[: args.top]:
+        print(f"{t/1e9:9.1f}G {f/1e9:9.1f}G {c/1e9:9.1f}G {m:8.0f} {op:24s} "
+              f"{sh}")
+        print(f"{'':42s}{tag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serving driver: batched prefill + greedy decode with KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models.transformer import init_params
+from repro.train.serve_step import make_decode_step, make_prefill_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = args.batch, args.prompt_len
+    cache_size = S + args.gen
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    enc = None
+    if cfg.encoder_layers:
+        enc = jax.random.normal(key, (B, cfg.n_frames, cfg.d_model)).astype(cfg.dtype)
+    elif cfg.n_image_tokens:
+        enc = jax.random.normal(key, (B, cfg.n_image_tokens, cfg.d_model)).astype(cfg.dtype)
+
+    pf = jax.jit(make_prefill_step(cfg, cache_size))
+    dec = jax.jit(make_decode_step(cfg), donate_argnums=1)
+
+    t0 = time.perf_counter()
+    tok, _, cache = pf(params, prompt, enc)
+    tok.block_until_ready()
+    t1 = time.perf_counter()
+    toks = [tok]
+    for i in range(args.gen - 1):
+        tok, _, cache = dec(params, cache, tok, jnp.int32(S + i))
+        toks.append(tok)
+    tok.block_until_ready()
+    t2 = time.perf_counter()
+
+    out = jnp.stack(toks, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={S} gen={args.gen}")
+    print(f"[serve] prefill {t1 - t0:.3f}s; decode {(t2 - t1):.3f}s "
+          f"({B * (args.gen - 1) / max(t2 - t1, 1e-9):.1f} tok/s)")
+    print("[serve] sample tokens:", out[0, :8].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Training driver: data pipeline -> train_step loop with checkpointing,
+preemption drain, straggler monitoring, and elastic resume.
+
+CPU-runnable end to end with ``--smoke`` (reduced configs); the production
+mesh path is exercised by launch/dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config, get_smoke_config
+from repro.data.pipeline import make_pipeline
+from repro.dist.fault_tolerance import HeartbeatMonitor, PreemptionHandler
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_schedule
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--m-dtype", default="float32")
+    ap.add_argument("--v-dtype", default="float32")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt = AdamW(m_dtype=args.m_dtype, v_dtype=args.v_dtype)
+    lr_fn = cosine_schedule(args.lr, warmup_steps=10, total_steps=args.steps)
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, opt, lr_fn,
+            microbatch=args.microbatch or None,
+            grad_compress=args.grad_compress,
+            ce_chunk=min(1024, args.seq),
+        ),
+        donate_argnums=0,
+    )
+
+    state = init_train_state(
+        jax.random.PRNGKey(0), cfg, opt, grad_compress=args.grad_compress
+    )
+    pipe = make_pipeline(cfg, args.batch, args.seq)
+    manager = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    start = 0
+    if args.resume and manager and manager.latest_step() is not None:
+        full = {"state": state, "data": pipe.state_dict()}
+        restored = manager.restore(full)
+        state = restored["state"]
+        pipe.load_state_dict(restored["data"])
+        start = int(restored["state"]["step"])
+        print(f"[train] resumed from step {start}")
+
+    preempt = PreemptionHandler().install()
+    monitor = HeartbeatMonitor()
+    losses = []
+    for step in range(start, args.steps):
+        monitor.step_start()
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if monitor.step_end(step):
+            print(f"[train] straggler at step {step}: {monitor.stragglers[-1]}")
+        if step % args.log_every == 0:
+            print(
+                f"[train] step {step:5d} loss {loss:8.4f} "
+                f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.3f}"
+            )
+        should_ckpt = manager and (
+            (step + 1) % args.ckpt_every == 0 or preempt.preempted
+        )
+        if should_ckpt:
+            manager.save(step + 1, {"state": state, "data": pipe.state_dict()})
+            print(f"[train] checkpointed step {step + 1}")
+        if preempt.preempted:
+            print("[train] preemption drain complete; exiting")
+            break
+    print(
+        json.dumps(
+            {
+                "first_loss": losses[0] if losses else None,
+                "last_loss": losses[-1] if losses else None,
+                "median_step_s": monitor.median,
+            }
+        )
+    )
+    return losses
+
+
+if __name__ == "__main__":
+    main()

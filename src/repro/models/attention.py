@@ -1,0 +1,431 @@
+"""Attention kernels in pure JAX (TPU-idiomatic, blockwise/flash-style).
+
+Never materialises an (S, S) score matrix: prefill/train attention streams KV
+in blocks with a running (max, denom, acc) softmax — O(S·block) memory.
+Variants:
+
+* :func:`flash_attention` — causal / non-causal / sliding-window / cross,
+  GQA-aware (q heads grouped over kv heads), separate K and V head dims
+  (needed by MLA's expanded form).
+* :func:`banded_local_attention` — sliding-window specialisation that gathers
+  only the (window + block) KV band per query block, so compute is
+  O(S·window) instead of O(S²·masked) — used by gemma3 / recurrentgemma
+  local layers.
+* :func:`decode_attention` — single-token decode against a KV cache with a
+  length (and optional window) mask.
+* :func:`mla_decode_attention` — DeepSeek-V2 absorbed-form latent decode: the
+  cache stores the 512-d latent + shared rope key, never per-head K/V.
+
+Masked-out score entries use a large finite negative (-1e30); the running
+softmax self-corrects blocks that precede the first in-band block (their
+contribution is scaled by exp(-1e30 - m) = 0 once a real block arrives).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as _softcap
+
+Array = jax.Array
+NEG = -1.0e30
+
+
+def _mask_block(
+    qpos: Array, kpos: Array, causal: bool, window: int, kv_len: Optional[Array]
+) -> Array:
+    """(bq, bk) bool mask of allowed attention."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    bq: int = 512,
+    bk: int = 512,
+    custom_grad: bool = True,
+) -> Array:
+    """Blockwise attention.  q: (B,Sq,Hq,Dk); k: (B,Skv,Hkv,Dk);
+    v: (B,Skv,Hkv,Dv).  Returns (B,Sq,Hq,Dv).
+
+    ``custom_grad=True`` uses the blockwise custom-VJP backward: plain AD of
+    a blockwise forward re-materialises every (bq, bk) probability block into
+    a stacked (S/bq, …, bq, bk) ≈ S×S HBM buffer for the backward pass
+    (measured: 536 MB/device/layer at 4k×16 on qwen) — the classic reason
+    flash attention needs a hand-written backward.  The custom VJP recomputes
+    probability blocks from the saved (q, k, v, out, lse) instead.
+    """
+    if custom_grad:
+        return _flash_vjp(
+            q, k, v, causal, window, int(q_offset), float(softcap),
+            float(Dk_scale(q, scale)), int(bq), int(bk),
+        )
+    return _flash_fwd(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        softcap=softcap, scale=scale, bq=bq, bk=bk,
+    )[0]
+
+
+def Dk_scale(q, scale):
+    return q.shape[-1] ** -0.5 if scale is None else scale
+
+
+def _block_pairs(nq, nk, bq, bk, causal, window, q_offset):
+    """Static (iq, ik) schedule with BLOCK-LEVEL causal/window skip.
+
+    Full-grid masking computes nq*nk blocks and throws half (causal) or
+    almost all (sliding window) away; the pair list visits only blocks that
+    contain >= 1 legal position — the same skip a fused flash kernel does
+    with its grid.  Ordered by iq (running softmax needs in-order kv visits
+    within each q row).
+
+    Set REPRO_FLASH_FULL_GRID=1 to disable the skip (baseline-measurement
+    mode for EXPERIMENTS.md §Perf before/after under one analyzer)."""
+    import os
+    if os.environ.get("REPRO_FLASH_FULL_GRID"):
+        causal, window = False, 0  # visit every block (masks still applied)
+    pairs = []
+    for iq in range(nq):
+        qlo = q_offset + iq * bq
+        qhi = qlo + bq - 1
+        for ik in range(nk):
+            klo, khi = ik * bk, ik * bk + bk - 1
+            if causal and klo > qhi:
+                continue
+            if window > 0 and khi < qlo - window + 1:
+                continue
+            pairs.append((iq, ik))
+    return pairs
+
+
+def _flash_fwd(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    bq: int = 512,
+    bk: int = 512,
+):
+    """Returns (out, lse) with lse: (B, Hkv, G, Sq) row log-sum-exp."""
+    B, Sq, Hq, Dk = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = Dk**-0.5 if scale is None else scale
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+
+    qx = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, Dk), 1, 0)
+    kx = jnp.moveaxis(k.reshape(B, nk, bk, Hkv, Dk), 1, 0)
+    vx = jnp.moveaxis(v.reshape(B, nk, bk, Hkv, Dv), 1, 0)
+
+    pairs = _block_pairs(nq, nk, bq, bk, causal, window, int(q_offset))
+    iqs = jnp.array([p[0] for p in pairs], jnp.int32)
+    iks = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        iq, ik = pair
+        qb = qx[iq]
+        kb = kx[ik]
+        vb = vx[ik]
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+        kpos = ik * bk + jnp.arange(bk)
+        s = (
+            jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qb, kb,
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )
+        s = _softcap(s, softcap)
+        mask = _mask_block(qpos, kpos, causal, window, None)
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_row = m[iq]
+        m_new = jnp.maximum(m_row, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_row - m_new)
+        l_new = l[iq] * corr + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc[iq] * corr[..., None] + pv
+        return (
+            m.at[iq].set(m_new), l.at[iq].set(l_new), acc.at[iq].set(acc_new)
+        ), None
+
+    init = (
+        jnp.full((nq, B, Hkv, G, bq), NEG, jnp.float32),
+        jnp.zeros((nq, B, Hkv, G, bq), jnp.float32),
+        jnp.zeros((nq, B, Hkv, G, bq, Dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (iqs, iks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (nq, B, Hkv, G, bq, Dv) -> (B, nq, bq, Hkv, G, Dv) -> (B, Sq, Hq, Dv)
+    out = jnp.transpose(out, (1, 0, 4, 2, 3, 5)).reshape(B, Sq, Hq, Dv)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (nq, B, Hkv, G, bq)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, Hkv, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+# ---------------------------------------------------------------------------
+# Custom-VJP flash attention (blockwise backward, no S x S residuals)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_vjp(q, k, v, causal, window, q_offset, softcap, scale, bq, bk):
+    out, _ = _flash_fwd(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        softcap=softcap, scale=scale, bq=bq, bk=bk,
+    )
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, softcap, scale, bq, bk):
+    out, lse = _flash_fwd(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        softcap=softcap, scale=scale, bq=bq, bk=bk,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _p_block(qb, kb, lse_b, qpos, kpos, causal, window, softcap, scale):
+    """Recompute one probability block (B,Hkv,G,bq,bk) + pre-softcap factor."""
+    s = (
+        jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                   preferred_element_type=jnp.float32)
+        * scale
+    )
+    cap_factor = None
+    if softcap > 0.0:
+        t = jnp.tanh(s / softcap)
+        cap_factor = 1.0 - jnp.square(t)  # d softcap / ds
+        s = softcap * t
+    mask = _mask_block(qpos, kpos, causal, window, None)
+    p = jnp.where(
+        mask[None, None, None], jnp.exp(s - lse_b[..., None]), 0.0
+    )
+    return p, cap_factor
+
+
+def _flash_vjp_bwd(causal, window, q_offset, softcap, scale, bq, bk, res, g):
+    """Single pass over the (block-skipped) pair schedule accumulating
+    dq, dk, dv together — one probability recompute total."""
+    q, k, v, out, lse = res
+    B, Sq, Hq, Dk = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    bq_ = min(bq, Sq)
+    bk_ = min(bk, Skv)
+    nq, nk = Sq // bq_, Skv // bk_
+
+    qx = jnp.moveaxis(q.reshape(B, nq, bq_, Hkv, G, Dk), 1, 0)
+    gx = jnp.moveaxis(g.reshape(B, nq, bq_, Hkv, G, Dv), 1, 0)
+    kx = jnp.moveaxis(k.reshape(B, nk, bk_, Hkv, Dk), 1, 0)
+    vx = jnp.moveaxis(v.reshape(B, nk, bk_, Hkv, Dv), 1, 0)
+    lse_x = jnp.moveaxis(lse.reshape(B, Hkv, G, nq, bq_), 3, 0)
+    # D_i = rowsum(dout * out): (nq, B, Hkv, G, bq)
+    delta = jnp.einsum(
+        "bshgd,bshgd->bhgs",
+        g.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32),
+        out.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32),
+    )
+    delta_x = jnp.moveaxis(delta.reshape(B, Hkv, G, nq, bq_), 3, 0)
+
+    pairs = _block_pairs(nq, nk, bq_, bk_, causal, window, int(q_offset))
+    iqs = jnp.array([p[0] for p in pairs], jnp.int32)
+    iks = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    def step(carry, pair):
+        dq_s, dk_s, dv_s = carry
+        iq, ik = pair
+        qb, gb, lse_b, d_b = qx[iq], gx[iq], lse_x[iq], delta_x[iq]
+        kb, vb = kx[ik], vx[ik]
+        qpos = q_offset + iq * bq_ + jnp.arange(bq_)
+        kpos = ik * bk_ + jnp.arange(bk_)
+        p, cap = _p_block(qb, kb, lse_b, qpos, kpos, causal, window,
+                          softcap, scale)
+        dv_blk = jnp.einsum(
+            "bhgqk,bqhgd->bkhd", p.astype(gb.dtype), gb,
+            preferred_element_type=jnp.float32,
+        )
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", gb, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - d_b[..., None])
+        if cap is not None:
+            ds = ds * cap
+        dq_blk = jnp.einsum(
+            "bhgqk,bkhd->bqhgd", ds.astype(kb.dtype), kb,
+            preferred_element_type=jnp.float32,
+        )
+        dk_blk = jnp.einsum(
+            "bhgqk,bqhgd->bkhd", ds.astype(qb.dtype), qb,
+            preferred_element_type=jnp.float32,
+        )
+        return (
+            dq_s.at[iq].add(dq_blk),
+            dk_s.at[ik].add(dk_blk),
+            dv_s.at[ik].add(dv_blk),
+        ), None
+
+    init = (
+        jnp.zeros((nq, B, bq_, Hkv, G, Dk), jnp.float32),
+        jnp.zeros((nk, B, bk_, Hkv, Dk), jnp.float32),
+        jnp.zeros((nk, B, bk_, Hkv, Dv), jnp.float32),
+    )
+    (dq_s, dk_s, dv_s), _ = jax.lax.scan(step, init, (iqs, iks))
+    dq = (jnp.moveaxis(dq_s, 0, 1).reshape(B, Sq, Hq, Dk) * scale).astype(q.dtype)
+    dk = (jnp.moveaxis(dk_s, 0, 1).reshape(B, Skv, Hkv, Dk) * scale).astype(k.dtype)
+    dv = jnp.moveaxis(dv_s, 0, 1).reshape(B, Skv, Hkv, Dv).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+
+def banded_local_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    window: int,
+    q_offset=0,
+    softcap: float = 0.0,
+    bq: int = 512,
+) -> Array:
+    """Sliding-window causal attention, gathering only the needed KV band.
+
+    Compute is O(Sq · (window + bq)) — the full-mask version wastes
+    O(Sq · Skv) at 32k context with a 512 window (~64×).
+    """
+    B, Sq, Hq, Dk = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = Dk**-0.5
+    bq = min(bq, Sq)
+    assert Sq % bq == 0
+    nq = Sq // bq
+    band = -(-(window + bq) // 128) * 128  # lane-aligned band length
+    band = min(band, Skv)
+
+    qx = jnp.moveaxis(q.reshape(B, nq, bq, Hkv, G, Dk), 1, 0)
+
+    def per_q_block(_, q_in):
+        iq, qb = q_in
+        qpos = q_offset + iq * bq + jnp.arange(bq)
+        start = jnp.clip(iq * bq + bq - band + q_offset * 0, 0, Skv - band)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        kpos = start + jnp.arange(band)
+        s = (
+            jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qb, kb, preferred_element_type=jnp.float32
+            )
+            * scale
+        )
+        s = _softcap(s, softcap)
+        mask = _mask_block(qpos, kpos, True, window, None)
+        s = jnp.where(mask[None, None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return None, jnp.moveaxis(out, 3, 1)
+
+    _, outs = jax.lax.scan(per_q_block, None, (jnp.arange(nq), qx))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    cache_len: Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> Array:
+    """One-token decode.  q: (B,Hq,Dk); caches: (B,S,Hkv,D*).  Returns (B,Hq,Dv)."""
+    B, S, Hkv, Dk = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = Dk**-0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, G, Dk)
+    s = (
+        jnp.einsum(
+            "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+        )
+        * scale
+    )
+    s = _softcap(s, softcap)
+    pos = jnp.arange(S)
+    mask = pos[None, :] < cache_len[:, None]  # (B, S)
+    if window > 0:
+        mask &= pos[None, :] >= cache_len[:, None] - window
+    s = jnp.where(mask[:, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Hq, -1).astype(q.dtype)
+
+
+def mla_decode_attention(
+    q_nope: Array,  # (B, H, dn)
+    q_rope: Array,  # (B, H, dr)
+    latent_cache: Array,  # (B, S, dl)
+    rope_cache: Array,  # (B, S, dr)
+    w_uk: Array,  # (H, dn, dl)  k up-projection (absorbed into q)
+    w_uv: Array,  # (H, dl, dv)  v up-projection (absorbed into out)
+    cache_len: Array,
+    *,
+    scale: float,
+) -> Array:
+    """DeepSeek-V2 absorbed MLA decode: score and aggregate in latent space."""
+    B, S, dl = latent_cache.shape
+    q_lat = jnp.einsum("bhn,hnl->bhl", q_nope, w_uk)  # (B, H, dl)
+    s = jnp.einsum(
+        "bhl,bsl->bhs", q_lat, latent_cache, preferred_element_type=jnp.float32
+    )
+    s += jnp.einsum(
+        "bhr,bsr->bhs", q_rope, rope_cache, preferred_element_type=jnp.float32
+    )
+    s *= scale
+    mask = jnp.arange(S)[None, :] < cache_len[:, None]
+    s = jnp.where(mask[:, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum(
+        "bhs,bsl->bhl", p.astype(latent_cache.dtype), latent_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = jnp.einsum("bhl,hlv->bhv", ctx.astype(w_uv.dtype), w_uv)
+    return out

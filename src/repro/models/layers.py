@@ -1,0 +1,81 @@
+"""Shared layer primitives: norms, activations, RoPE, embeddings, MLP."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm with f32 variance accumulation but NO full-tensor upcast.
+
+    Upcasting x to f32 here makes XLA hoist the convert out of the layer scan
+    and store f32 residuals for the backward pass — measured +3.2 GB/device
+    on qwen train_4k.  The (B,S,1) variance is f32; the normalise/scale
+    multiply stays in the compute dtype.
+    """
+    var = (
+        jnp.einsum(
+            "...d,...d->...", x, x, preferred_element_type=jnp.float32
+        )
+        / x.shape[-1]
+    )[..., None]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def gated_mlp(x: Array, wi_gate: Array, wi_up: Array, wo: Array, act: str) -> Array:
+    """SwiGLU / GeGLU feed-forward."""
+    g = act_fn(act)(jnp.einsum("...d,df->...f", x, wi_gate))
+    u = jnp.einsum("...d,df->...f", x, wi_up)
+    return jnp.einsum("...f,fd->...d", g * u, wo)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: Array, cap: float) -> Array:
+    if cap <= 0.0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16) -> Array:
+    fan_in = shape[in_axis]
+    std = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

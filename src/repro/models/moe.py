@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN: top-k router + sort-based fixed-capacity dispatch.
+
+Dispatch avoids the GShard O(T·E·C·d) one-hot einsum: (token, expert) pairs
+are sorted by expert id (fixed-shape ``argsort``), written into an (E, C, d)
+buffer by their rank within the expert segment, processed with one batched
+per-expert matmul (MXU), and combined back with the router gates.  Overflow
+beyond capacity ``C = ceil(cf · T · k / E)`` is dropped (standard).
+
+Parallelism: tensor-parallel experts — the expert weight tensors are sharded
+on the ``d_expert`` axis over "model" (no all-to-all).  An expert-parallel
+all_to_all dispatch (experts over "model") is the next lever for the MoE
+train cells (EXPERIMENTS.md §Perf stopping note); it requires a shard_map
+rewrite of this function and is left as the documented follow-up.
+
+Returns the load-balancing auxiliary loss alongside the output.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn
+
+Array = jax.Array
+
+
+class MoEOut(NamedTuple):
+    y: Array
+    aux_loss: Array
+
+
+def capacity(tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(tokens * top_k * factor / n_experts) + 1
+    return -(-c // 8) * 8  # sublane-aligned
+
+
+def moe_ffn(
+    x: Array,  # (T, d)
+    router_w: Array,  # (d, E) — kept/used in float32
+    w_gate: Array,  # (E, d, f)
+    w_up: Array,  # (E, d, f)
+    w_down: Array,  # (E, f, d)
+    *,
+    top_k: int,
+    capacity_factor: float,
+    act: str = "silu",
+    renormalize: bool = True,
+) -> MoEOut:
+    T, d = x.shape
+    E = router_w.shape[1]
+    C = capacity(T, top_k, E, capacity_factor)
+
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gates, idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    if renormalize:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing loss (Switch-style): E * sum_e f_e * p_e.
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(E, jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * top_k)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -------------------------------------------
+    TK = T * top_k
+    eid = idx.reshape(-1)
+    tid = jnp.repeat(jnp.arange(T), top_k)
+    g = gates.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tid_s, g_s = eid[order], tid[order], g[order]
+    seg_start = jnp.searchsorted(eid_s, jnp.arange(E))
+    slot = jnp.arange(TK) - seg_start[eid_s]
+    keep = slot < C
+    buf = jnp.where(keep, eid_s * C + jnp.minimum(slot, C - 1), E * C)
+
+    xin = jnp.zeros((E * C + 1, d), x.dtype).at[buf].set(x[tid_s])
+    h = xin[: E * C].reshape(E, C, d)
+
+    # ---- batched per-expert gated MLP (MXU) ----------------------------
+    hg = act_fn(act)(
+        jnp.einsum("ecd,edf->ecf", h, w_gate, preferred_element_type=jnp.float32)
+    ).astype(x.dtype)
+    hu = jnp.einsum("ecd,edf->ecf", h, w_up)
+    out = jnp.einsum("ecf,efd->ecd", hg * hu, w_down)
+
+    # ---- combine --------------------------------------------------------
+    contrib = out.reshape(E * C, d)
+    picked = jnp.where(keep[:, None], contrib[jnp.minimum(buf, E * C - 1)], 0.0)
+    y = (
+        jnp.zeros((T, d), jnp.float32)
+        .at[tid_s]
+        .add(picked.astype(jnp.float32) * g_s[:, None].astype(jnp.float32))
+    )
+    return MoEOut(y.astype(x.dtype), aux)
+
+
+def moe_ffn_ref(
+    x, router_w, w_gate, w_up, w_down, *, top_k, act="silu", renormalize=True
+):
+    """Dense per-token reference (no capacity drops) — test oracle."""
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    if renormalize:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for kk in range(top_k):
+        wg = w_gate[idx[:, kk]]  # (T, d, f)
+        wu = w_up[idx[:, kk]]
+        wd = w_down[idx[:, kk]]
+        hg = act_fn(act)(jnp.einsum("td,tdf->tf", x, wg).astype(jnp.float32))
+        hu = jnp.einsum("td,tdf->tf", x, wu).astype(jnp.float32)
+        o = jnp.einsum("tf,tfd->td", (hg * hu).astype(x.dtype), wd)
+        y += gates[:, kk : kk + 1].astype(jnp.float32) * o.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,844 @@
+"""Config-driven model composition for all 10 assigned architectures.
+
+Layer stacking uses *super-block scan*: the repeating ``block_pattern`` cycle
+is scanned with per-position weights stacked on a leading ``n_cycles`` axis
+(HLO size = one cycle, O(1) compile in depth); non-multiple remainders and
+dense-prefix layers (deepseek) are unrolled.  Heterogeneous stacks (gemma3's
+5 local : 1 global, recurrentgemma's 2 RG-LRU : 1 local-MQA, vision
+cross-attn every 5th layer) map naturally onto the cycle.
+
+Three execution modes share one ``apply_block``:
+  * ``train``   — full sequence, no cache.
+  * ``prefill`` — full sequence, emits per-layer cache slices.
+  * ``decode``  — one token against the cache at position ``pos``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.attention import (
+    banded_local_attention,
+    decode_attention,
+    flash_attention,
+    mla_decode_attention,
+)
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    embed_init,
+    gated_mlp,
+    rms_norm,
+    softcap,
+)
+from repro.models.moe import moe_ffn
+from repro.models.rglru import rglru_decode_step, rglru_scan
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Parameter initialisation
+# ===========================================================================
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_params(key, cfg: ModelConfig, cross: bool, gated: bool) -> Params:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "wq": dense_init(ks[0], (d, H * Dh), dtype=_dt(cfg)),
+        "wk": dense_init(ks[1], (d, Hkv * Dh), dtype=_dt(cfg)),
+        "wv": dense_init(ks[2], (d, Hkv * Dh), dtype=_dt(cfg)),
+        "wo": dense_init(ks[3], (H * Dh, d), dtype=_dt(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), _dt(cfg))
+        p["bk"] = jnp.zeros((Hkv * Dh,), _dt(cfg))
+        p["bv"] = jnp.zeros((Hkv * Dh,), _dt(cfg))
+    if cross:
+        p["lnc"] = jnp.zeros((d,), jnp.float32)
+        p["wq_c"] = dense_init(ks[4], (d, H * Dh), dtype=_dt(cfg))
+        p["wk_c"] = dense_init(ks[5], (d, Hkv * Dh), dtype=_dt(cfg))
+        p["wv_c"] = dense_init(ks[6], (d, Hkv * Dh), dtype=_dt(cfg))
+        p["wo_c"] = dense_init(ks[7], (H * Dh, d), dtype=_dt(cfg))
+    if gated:
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def _mla_params(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora), dtype=_dt(cfg)),
+        "q_norm": jnp.zeros((cfg.q_lora,), jnp.float32),
+        "wq_b": dense_init(ks[1], (cfg.q_lora, H * (dn + dr)), dtype=_dt(cfg)),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora + dr), dtype=_dt(cfg)),
+        "kv_norm": jnp.zeros((cfg.kv_lora,), jnp.float32),
+        "w_uk": dense_init(ks[3], (H, dn, cfg.kv_lora), in_axis=2, dtype=_dt(cfg)),
+        "w_uv": dense_init(ks[4], (H, cfg.kv_lora, dv), in_axis=1, dtype=_dt(cfg)),
+        "wo": dense_init(ks[5], (H * dv, d), dtype=_dt(cfg)),
+    }
+
+
+def _ssm_params(key, cfg: ModelConfig) -> Params:
+    d, di, G, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * G * N + H), dtype=_dt(cfg)),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_dim), dtype=_dt(cfg)),
+        "conv_b": jnp.zeros((conv_dim,), _dt(cfg)),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "ssm_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d), dtype=_dt(cfg)),
+    }
+
+
+def _rec_params(key, cfg: ModelConfig) -> Params:
+    d, L = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "in_x": dense_init(ks[0], (d, L), dtype=_dt(cfg)),
+        "in_gate": dense_init(ks[1], (d, L), dtype=_dt(cfg)),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, L), dtype=_dt(cfg)),
+        "conv_b": jnp.zeros((L,), _dt(cfg)),
+        "w_a": dense_init(ks[3], (L, L), dtype=_dt(cfg)),
+        "b_a": jnp.full((L,), 1.0, jnp.float32),
+        "w_x": dense_init(ks[4], (L, L), dtype=_dt(cfg)),
+        "b_x": jnp.zeros((L,), jnp.float32),
+        "lam": jnp.full((L,), 0.7, jnp.float32),
+        "out": dense_init(jax.random.fold_in(key, 9), (L, d), dtype=_dt(cfg)),
+    }
+
+
+def _ffn_params(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wi_gate": dense_init(ks[0], (d, f), dtype=_dt(cfg)),
+        "wi_up": dense_init(ks[1], (d, f), dtype=_dt(cfg)),
+        "wo_ff": dense_init(ks[2], (f, d), dtype=_dt(cfg)),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig) -> Params:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), in_axis=1, dtype=_dt(cfg)),
+        "w_up": dense_init(ks[2], (E, d, f), in_axis=1, dtype=_dt(cfg)),
+        "w_down": dense_init(ks[3], (E, f, d), in_axis=1, dtype=_dt(cfg)),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        p["sh_gate"] = dense_init(ks[4], (d, fs), dtype=_dt(cfg))
+        p["sh_up"] = dense_init(ks[5], (d, fs), dtype=_dt(cfg))
+        p["sh_down"] = dense_init(ks[6], (fs, d), dtype=_dt(cfg))
+    return p
+
+
+def init_block_params(key, cfg: ModelConfig, block: Tuple[str, str]) -> Params:
+    mixing, ffn = block
+    k1, k2 = jax.random.split(key)
+    if mixing in ("global", "local", "enc"):
+        p = _attn_params(k1, cfg, cross=False, gated=False)
+    elif mixing == "dec_cross":
+        p = _attn_params(k1, cfg, cross=True, gated=False)
+    elif mixing == "cross":
+        p = _attn_params(k1, cfg, cross=True, gated=True)
+        # pure-cross layers have no self-attention projections
+        for k in ("wq", "wk", "wv", "wo"):
+            del p[k]
+    elif mixing == "mla":
+        p = _mla_params(k1, cfg)
+    elif mixing == "ssm":
+        p = _ssm_params(k1, cfg)
+    elif mixing == "recurrent":
+        p = _rec_params(k1, cfg)
+    else:
+        raise ValueError(mixing)
+    if ffn == "dense":
+        p.update(_ffn_params(k2, cfg))
+    elif ffn == "moe":
+        p.update(_moe_params(k2, cfg))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    prefix, n_cycles, suffix = cfg.layer_stack
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), _dt(cfg)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype=_dt(cfg)
+        )
+    params["prefix"] = [
+        init_block_params(jax.random.fold_in(keys[2], i), cfg, b)
+        for i, b in enumerate(prefix)
+    ]
+    stacked = []
+    for p_idx, block in enumerate(cfg.block_pattern):
+        ck = jax.random.split(jax.random.fold_in(keys[3], p_idx), max(n_cycles, 1))
+        stacked.append(
+            jax.vmap(lambda k: init_block_params(k, cfg, block))(ck)
+            if n_cycles
+            else None
+        )
+    params["cycles"] = stacked
+    params["suffix"] = [
+        init_block_params(jax.random.fold_in(keys[4], i), cfg, b)
+        for i, b in enumerate(suffix)
+    ]
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_block_params(k, cfg, ("enc", "dense"))
+        )(ek)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ===========================================================================
+# Depthwise causal conv (ssm / recurrent blocks)
+# ===========================================================================
+
+def causal_conv(x: Array, w: Array, b: Array, state: Optional[Array]):
+    """x: (B,S,D); w: (W,D).  state: (B,W-1,D) carried context or None.
+
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xp[:, k : k + x.shape[1]] * w[k][None, None, :] for k in range(W)
+    )
+    return y + b[None, None, :], xp[:, -(W - 1) :]
+
+
+def causal_conv_step(x: Array, w: Array, b: Array, state: Array):
+    """x: (B,D); state: (B,W-1,D).  Returns (y, new_state)."""
+    W = w.shape[0]
+    xp = jnp.concatenate([state, x[:, None]], axis=1)  # (B, W, D)
+    y = jnp.einsum("bwd,wd->bd", xp, w) + b[None, :]
+    return y, xp[:, 1:]
+
+
+# ===========================================================================
+# Block application
+# ===========================================================================
+
+def _proj_qkv(p, cfg, h):
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,df->bsf", h, p["wq"])
+    k = jnp.einsum("bsd,df->bsf", h, p["wk"])
+    v = jnp.einsum("bsd,df->bsf", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _self_attention(p, cfg, x, mixing, mode, cache, pos):
+    """Self-attention sublayer.  Returns (out, new_cache)."""
+    h = rms_norm(x, p["ln1"])
+    window = cfg.window if mixing == "local" else 0
+    if mode == "decode":
+        B = x.shape[0]
+        q, k, v = _proj_qkv(p, cfg, h)  # S == 1
+        posn = jnp.full((B, 1), pos, jnp.int32)
+        q = apply_rope(q, posn, cfg.rope_theta)
+        k = apply_rope(k, posn, cfg.rope_theta)
+        kvdt = jnp.dtype(cfg.kv_dtype)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(kvdt), pos, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(kvdt), pos, axis=1
+        )
+        lens = jnp.full((B,), pos + 1, jnp.int32)
+        out = decode_attention(
+            q[:, 0], kc.astype(q.dtype), vc.astype(q.dtype), lens, window=window
+        )
+        out = out[:, None]
+        new_cache = {"k": kc, "v": vc}
+    else:
+        B, S, _ = x.shape
+        q, k, v = _proj_qkv(p, cfg, h)
+        posn = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if mixing != "enc":
+            q = apply_rope(q, posn, cfg.rope_theta)
+            k = apply_rope(k, posn, cfg.rope_theta)
+        q = constrain(q, "q_heads")
+        k = constrain(k, "kv_heads")
+        v = constrain(v, "kv_heads")
+        if mixing == "local" and window and mode == "prefill":
+            # inference-only: banded single-shot softmax (fewest passes);
+            # training uses pair-skip flash whose custom VJP avoids the
+            # S x band probability stack in the backward.
+            out = banded_local_attention(q, k, v, window=window)
+        else:
+            # flash with window does block-level skip (O(S*window))
+            out = flash_attention(
+                q, k, v, causal=(mixing != "enc"),
+                window=window if mixing == "local" else 0,
+            )
+        new_cache = None
+        if mode == "prefill":
+            kvdt = jnp.dtype(cfg.kv_dtype)
+            new_cache = {"k": k.astype(kvdt), "v": v.astype(kvdt)}
+    out = constrain(out.reshape(*x.shape[:-1], -1), "act_heads")
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"]), new_cache
+
+
+def _cross_attention(p, cfg, x, enc_out, mode, cache):
+    """Cross-attention sublayer (whisper dec / vlm).  enc_out may be None in
+    decode mode (cached KV used instead)."""
+    h = rms_norm(x, p["lnc"])
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,df->bsf", h, p["wq_c"]).reshape(
+        B, S, cfg.n_heads, cfg.head_dim
+    )
+    if mode == "decode":
+        ck = cache["ck"].astype(q.dtype)
+        cv = cache["cv"].astype(q.dtype)
+        lens = jnp.full((B,), ck.shape[1], jnp.int32)
+        out = decode_attention(q[:, 0], ck, cv, lens)[:, None]
+        new_cache = None  # cross KV is static
+    else:
+        Se = enc_out.shape[1]
+        ck = jnp.einsum("bsd,df->bsf", enc_out, p["wk_c"]).reshape(
+            B, Se, cfg.n_kv_heads, cfg.head_dim
+        )
+        cv = jnp.einsum("bsd,df->bsf", enc_out, p["wv_c"]).reshape(
+            B, Se, cfg.n_kv_heads, cfg.head_dim
+        )
+        out = flash_attention(q, ck, cv, causal=False)
+        kvdt = jnp.dtype(cfg.kv_dtype)
+        new_cache = (
+            {"ck": ck.astype(kvdt), "cv": cv.astype(kvdt)}
+            if mode == "prefill"
+            else None
+        )
+    return (
+        jnp.einsum("bsf,fd->bsd", out.reshape(B, S, -1), p["wo_c"]),
+        new_cache,
+    )
+
+
+def _mla_attention(p, cfg, x, mode, cache, pos):
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    H = cfg.n_heads
+    scale = (dn + dr) ** -0.5
+    h = rms_norm(x, p["ln1"])
+    B, S, _ = h.shape
+    cq = rms_norm(jnp.einsum("bsd,dl->bsl", h, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsl,lf->bsf", cq, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = jnp.einsum("bsd,dl->bsl", h, p["wkv_a"])
+    latent = rms_norm(kv[..., : cfg.kv_lora], p["kv_norm"])
+    k_rope = kv[..., cfg.kv_lora :]  # (B, S, dr) shared across heads
+
+    if mode == "decode":
+        posn = jnp.full((B, 1), pos, jnp.int32)
+        q_rope = apply_rope(q_rope, posn, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None], posn, cfg.rope_theta)[:, :, 0]
+        kvdt = jnp.dtype(cfg.kv_dtype)
+        lat_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["lat"], latent.astype(kvdt), pos, axis=1
+        )
+        rk_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["rk"], k_rope.astype(kvdt), pos, axis=1
+        )
+        lens = jnp.full((B,), pos + 1, jnp.int32)
+        out = mla_decode_attention(
+            q_nope[:, 0], q_rope[:, 0],
+            lat_c.astype(latent.dtype), rk_c.astype(latent.dtype),
+            p["w_uk"], p["w_uv"], lens, scale=scale,
+        )[:, None]
+        new_cache = {"lat": lat_c, "rk": rk_c}
+    else:
+        posn = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        q_rope = apply_rope(q_rope, posn, cfg.rope_theta)
+        k_rope_r = apply_rope(k_rope[:, :, None], posn, cfg.rope_theta)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_nope = jnp.einsum("bsl,hnl->bshn", latent, p["w_uk"])
+        v = jnp.einsum("bsl,hlv->bshv", latent, p["w_uv"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_r, (B, S, H, dr))], axis=-1
+        )
+        out = flash_attention(q_full, k_full, v, causal=True, scale=scale)
+        # Cache stores the *roped* shared key (decode scores against it).
+        kvdt = jnp.dtype(cfg.kv_dtype)
+        new_cache = (
+            {"lat": latent.astype(kvdt), "rk": k_rope_r[:, :, 0].astype(kvdt)}
+            if mode == "prefill"
+            else None
+        )
+    out = out.reshape(B, S, H * dv)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"]), new_cache
+
+
+def _ssm_block(p, cfg, x, mode, cache):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    h = rms_norm(x, p["ln1"])
+    zxbcdt = jnp.einsum("bsd,df->bsf", h, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * G * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * G * N :]  # (B, S, H)
+
+    if mode == "decode":
+        y_c, conv_state = causal_conv_step(
+            xbc[:, 0], p["conv_w"], p["conv_b"], cache["conv"]
+        )
+        xbc = y_c[:, None]
+    else:
+        xbc, conv_state = causal_conv(xbc, p["conv_w"], p["conv_b"], None)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    b = xbc[..., di : di + G * N].reshape(*xbc.shape[:2], G, N)
+    c = xbc[..., di + G * N :].reshape(*xbc.shape[:2], G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(*xs.shape[:2], H, P) * dt[..., None].astype(xs.dtype)
+    a = -jnp.exp(p["a_log"]) * dt  # (B, S, H)
+
+    if mode == "decode":
+        y, h_new = ssd_decode_step(cache["h"], xh[:, 0], a[:, 0], b[:, 0], c[:, 0])
+        y = y[:, None]
+        new_cache = {"h": h_new, "conv": conv_state}
+    else:
+        y, h_final = ssd_chunked(xh, a, b, c, min(cfg.ssm_chunk, xs.shape[1]))
+        new_cache = (
+            {"h": h_final, "conv": conv_state} if mode == "prefill" else None
+        )
+    y = y + p["d_skip"][:, None].astype(y.dtype) * xs.reshape(
+        *y.shape[:2], H, P
+    )
+    y = y.reshape(*x.shape[:-1], di)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    return jnp.einsum("bsf,fd->bsd", y, p["out_proj"]), new_cache
+
+
+def _recurrent_block(p, cfg, x, mode, cache):
+    h = rms_norm(x, p["ln1"])
+    xb = jnp.einsum("bsd,dl->bsl", h, p["in_x"])
+    gate = jnp.einsum("bsd,dl->bsl", h, p["in_gate"])
+    if mode == "decode":
+        y_c, conv_state = causal_conv_step(
+            xb[:, 0], p["conv_w"], p["conv_b"], cache["conv"]
+        )
+        y, h_new = rglru_decode_step(
+            cache["h"], y_c, p["w_a"], p["b_a"], p["w_x"], p["b_x"], p["lam"]
+        )
+        y = y[:, None]
+        new_cache = {"h": h_new, "conv": conv_state}
+    else:
+        xb, conv_state = causal_conv(xb, p["conv_w"], p["conv_b"], None)
+        y, h_final = rglru_scan(
+            xb, p["w_a"], p["b_a"], p["w_x"], p["b_x"], p["lam"]
+        )
+        new_cache = (
+            {"h": h_final, "conv": conv_state} if mode == "prefill" else None
+        )
+    out = jax.nn.gelu(gate.astype(jnp.float32)).astype(y.dtype) * y
+    return jnp.einsum("bsl,ld->bsd", out, p["out"]), new_cache
+
+
+def _ffn(p, cfg, x, ffn_kind):
+    h = rms_norm(x, p["ln2"])
+    if ffn_kind == "dense":
+        return gated_mlp(h, p["wi_gate"], p["wi_up"], p["wo_ff"], cfg.act), 0.0
+    # MoE
+    B, S, d = h.shape
+    flat = h.reshape(B * S, d)
+    out = moe_ffn(
+        flat, p["router"], p["w_gate"], p["w_up"], p["w_down"],
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, act=cfg.act,
+    )
+    y = out.y.reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + gated_mlp(h, p["sh_gate"], p["sh_up"], p["sh_down"], cfg.act)
+    return y, out.aux_loss
+
+
+def apply_block(
+    p: Params,
+    cfg: ModelConfig,
+    block: Tuple[str, str],
+    x: Array,
+    *,
+    mode: str,
+    cache: Optional[Params] = None,
+    pos=0,
+    enc_out: Optional[Array] = None,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    mixing, ffn_kind = block
+    new_cache = None
+    if mixing in ("global", "local", "enc"):
+        out, new_cache = _self_attention(p, cfg, x, mixing, mode, cache, pos)
+        x = x + out
+    elif mixing == "dec_cross":
+        out, sc = _self_attention(p, cfg, x, "global", mode, cache, pos)
+        x = x + out
+        out, cc = _cross_attention(p, cfg, x, enc_out, mode, cache)
+        x = x + out
+        if mode == "prefill":
+            new_cache = {**sc, **cc}
+        elif mode == "decode":
+            new_cache = {**sc, "ck": cache["ck"], "cv": cache["cv"]}
+    elif mixing == "cross":
+        out, cc = _cross_attention(p, cfg, x, enc_out, mode, cache)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
+        if mode == "prefill":
+            new_cache = cc
+        elif mode == "decode":
+            new_cache = {"ck": cache["ck"], "cv": cache["cv"]}
+    elif mixing == "mla":
+        out, new_cache = _mla_attention(p, cfg, x, mode, cache, pos)
+        x = x + out
+    elif mixing == "ssm":
+        out, new_cache = _ssm_block(p, cfg, x, mode, cache)
+        x = x + out
+    elif mixing == "recurrent":
+        out, new_cache = _recurrent_block(p, cfg, x, mode, cache)
+        x = x + out
+    else:
+        raise ValueError(mixing)
+
+    aux = jnp.float32(0.0)
+    if ffn_kind != "none":
+        out, aux_l = _ffn(p, cfg, x, ffn_kind)
+        if mixing == "cross":
+            out = jnp.tanh(p["gate_mlp"]).astype(x.dtype) * out
+        x = x + out
+        aux = aux + aux_l
+    x = constrain(x, "act")
+    return x, new_cache, aux
+
+
+# ===========================================================================
+# Full-model forward passes
+# ===========================================================================
+
+def _embed(params, cfg, tokens):
+    x = params["embed"][tokens]
+    # gemma-family scales embeddings by sqrt(d_model)
+    if cfg.name.startswith(("gemma", "recurrentgemma")):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, "act")
+
+
+def unembed(params, cfg, x):
+    x = rms_norm(x, params["final_norm"])
+    # f32 logits come from the MXU accumulator (preferred_element_type), not
+    # from upcasting inputs — avoids XLA hoisting a full-tensor f32 convert
+    # out of the CE chunk loop (measured +5 GB/device on qwen train_4k).
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"],
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, params["lm_head"],
+            preferred_element_type=jnp.float32,
+        )
+    logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, "logits")
+
+
+def run_encoder(params, cfg, frames):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    x = frames
+
+    def enc_cycle(x, p):
+        x, _, _ = apply_block(p, cfg, ("enc", "dense"), x, mode="train")
+        return x, None
+
+    x, _ = jax.lax.scan(enc_cycle, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    enc_inputs: Optional[Array] = None,
+    remat: bool = True,
+    remat_group: int = 0,
+) -> Tuple[Array, Array]:
+    """Training forward.  Returns (hidden (B,S,D), total aux loss)."""
+    prefix, n_cycles, suffix = cfg.layer_stack
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = run_encoder(params, cfg, enc_inputs)
+    elif cfg.n_image_tokens:
+        enc_out = enc_inputs
+
+    x = _embed(params, cfg, tokens)
+    aux_total = jnp.float32(0.0)
+
+    for p, b in zip(params["prefix"], prefix):
+        x, _, aux = apply_block(p, cfg, b, x, mode="train", enc_out=enc_out)
+        aux_total += aux
+
+    def cycle_fn(x, pslices):
+        aux_c = jnp.float32(0.0)
+        for p, b in zip(pslices, cfg.block_pattern):
+            x, _, aux = apply_block(p, cfg, b, x, mode="train", enc_out=enc_out)
+            aux_c += aux
+        return x, aux_c
+
+    if n_cycles:
+        body = jax.checkpoint(cycle_fn) if remat else cycle_fn
+        if remat_group > 1 and n_cycles % remat_group == 0:
+            # Two-level (sqrt-style) remat: outer scan over groups keeps
+            # O(n_cycles / G) residency; inner scan recomputes within a group.
+            def group_fn(x, pgroup):
+                x, auxs_g = jax.lax.scan(body, x, pgroup)
+                return x, auxs_g.sum()
+
+            grouped = jax.tree.map(
+                lambda a: a.reshape(
+                    n_cycles // remat_group, remat_group, *a.shape[1:]
+                ),
+                tuple(params["cycles"]),
+            )
+            gbody = jax.checkpoint(group_fn) if remat else group_fn
+            x, auxs = jax.lax.scan(gbody, x, grouped)
+        else:
+            x, auxs = jax.lax.scan(body, x, tuple(params["cycles"]))
+        aux_total += auxs.sum()
+
+    for p, b in zip(params["suffix"], suffix):
+        x, _, aux = apply_block(p, cfg, b, x, mode="train", enc_out=enc_out)
+        aux_total += aux
+
+    return x, aux_total
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count from abstract init (no allocation)."""
+    tree = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg)
+    )
+
+    def size(path, leaf):
+        n = int(np.prod(leaf.shape))
+        name = path[-1] if path else ""
+        if active_only and name in ("w_gate", "w_up", "w_down") and cfg.n_experts:
+            n = n * cfg.top_k // cfg.n_experts
+        return n
+
+    total = 0
+
+    def walk(node, path):
+        nonlocal total
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + [k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path)
+        elif node is not None:
+            total += size(path, node)
+
+    walk(tree, [])
+    return total
+
+
+# ===========================================================================
+# Serving: cache construction, prefill, decode
+# ===========================================================================
+
+def _block_cache_shapes(cfg: ModelConfig, block, B: int, S: int):
+    """Zero-state cache entries for one block."""
+    mixing, _ = block
+    dt = jnp.dtype(cfg.kv_dtype)
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    if mixing in ("global", "local", "enc"):
+        return {
+            "k": jnp.zeros((B, S, Hkv, Dh), dt),
+            "v": jnp.zeros((B, S, Hkv, Dh), dt),
+        }
+    if mixing == "dec_cross":
+        return {
+            "k": jnp.zeros((B, S, Hkv, Dh), dt),
+            "v": jnp.zeros((B, S, Hkv, Dh), dt),
+            "ck": jnp.zeros((B, cfg.n_frames, Hkv, Dh), dt),
+            "cv": jnp.zeros((B, cfg.n_frames, Hkv, Dh), dt),
+        }
+    if mixing == "cross":
+        return {
+            "ck": jnp.zeros((B, cfg.n_image_tokens, Hkv, Dh), dt),
+            "cv": jnp.zeros((B, cfg.n_image_tokens, Hkv, Dh), dt),
+        }
+    if mixing == "mla":
+        return {
+            "lat": jnp.zeros((B, S, cfg.kv_lora), dt),
+            "rk": jnp.zeros((B, S, cfg.rope_head_dim), dt),
+        }
+    if mixing == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "h": jnp.zeros(
+                (B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+            ),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, conv_dim), _dt(cfg)),
+        }
+    if mixing == "recurrent":
+        return {
+            "h": jnp.zeros((B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.lru_width), _dt(cfg)),
+        }
+    raise ValueError(mixing)
+
+
+def make_cache(cfg: ModelConfig, B: int, S: int) -> Params:
+    """Zero-initialised decode cache for the whole stack."""
+    prefix, n_cycles, suffix = cfg.layer_stack
+
+    def stack(entry):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_cycles, *x.shape)), entry
+        )
+
+    return {
+        "prefix": [_block_cache_shapes(cfg, b, B, S) for b in prefix],
+        "cycles": [
+            stack(_block_cache_shapes(cfg, b, B, S)) for b in cfg.block_pattern
+        ],
+        "suffix": [_block_cache_shapes(cfg, b, B, S) for b in suffix],
+    }
+
+
+def _pad_cache_seq(entry: Params, cache_size: int) -> Params:
+    """Pad the sequence dim of prefill cache entries up to cache_size."""
+    def pad(name, val):
+        if name in ("k", "v", "lat", "rk"):
+            pad_len = cache_size - val.shape[1]
+            if pad_len > 0:
+                cfgpad = [(0, 0)] * val.ndim
+                cfgpad[1] = (0, pad_len)
+                return jnp.pad(val, cfgpad)
+        return val
+
+    return {k: pad(k, v) for k, v in entry.items()}
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: Array,
+    cache_size: Optional[int] = None,
+    enc_inputs: Optional[Array] = None,
+):
+    """Full-sequence prefill.  Returns (last-position logits, cache)."""
+    prefix, n_cycles, suffix = cfg.layer_stack
+    cache_size = cache_size or tokens.shape[1]
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = run_encoder(params, cfg, enc_inputs)
+    elif cfg.n_image_tokens:
+        enc_out = enc_inputs
+
+    x = _embed(params, cfg, tokens)
+    pre_caches = []
+    for p, b in zip(params["prefix"], prefix):
+        x, c, _ = apply_block(p, cfg, b, x, mode="prefill", enc_out=enc_out)
+        pre_caches.append(_pad_cache_seq(c, cache_size))
+
+    def cycle_fn(x, pslices):
+        cs = []
+        for p, b in zip(pslices, cfg.block_pattern):
+            x, c, _ = apply_block(p, cfg, b, x, mode="prefill", enc_out=enc_out)
+            cs.append(_pad_cache_seq(c, cache_size))
+        return x, tuple(cs)
+
+    cyc_caches = []
+    if n_cycles:
+        x, ys = jax.lax.scan(cycle_fn, x, tuple(params["cycles"]))
+        cyc_caches = list(ys)
+
+    suf_caches = []
+    for p, b in zip(params["suffix"], suffix):
+        x, c, _ = apply_block(p, cfg, b, x, mode="prefill", enc_out=enc_out)
+        suf_caches.append(_pad_cache_seq(c, cache_size))
+
+    logits = unembed(params, cfg, x[:, -1:])
+    cache = {"prefix": pre_caches, "cycles": cyc_caches, "suffix": suf_caches}
+    return logits, cache
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Params, token: Array, pos
+):
+    """One-token decode.  token: (B, 1) int32; pos: scalar int32 (current
+    cache length / write position, uniform across the batch).
+
+    Returns (logits (B, 1, V), new_cache)."""
+    prefix, n_cycles, suffix = cfg.layer_stack
+    x = _embed(params, cfg, token)
+
+    new_prefix = []
+    for p, b, c in zip(params["prefix"], prefix, cache["prefix"]):
+        x, nc, _ = apply_block(p, cfg, b, x, mode="decode", cache=c, pos=pos)
+        new_prefix.append(nc)
+
+    def cycle_fn(x, xs):
+        pslices, cslices = xs
+        ncs = []
+        for p, b, c in zip(pslices, cfg.block_pattern, cslices):
+            x, nc, _ = apply_block(p, cfg, b, x, mode="decode", cache=c, pos=pos)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    new_cycles = []
+    if n_cycles:
+        x, ys = jax.lax.scan(
+            cycle_fn, x, (tuple(params["cycles"]), tuple(cache["cycles"]))
+        )
+        new_cycles = list(ys)
+
+    new_suffix = []
+    for p, b, c in zip(params["suffix"], suffix, cache["suffix"]):
+        x, nc, _ = apply_block(p, cfg, b, x, mode="decode", cache=c, pos=pos)
+        new_suffix.append(nc)
+
+    logits = unembed(params, cfg, x)
+    new_cache = {"prefix": new_prefix, "cycles": new_cycles, "suffix": new_suffix}
+    return logits, new_cache

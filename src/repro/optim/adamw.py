@@ -1,0 +1,97 @@
+"""AdamW from scratch with optional int8-quantised moment states.
+
+State dtypes per moment: "float32" | "bfloat16" | "int8" (block-quantised,
+see optim/quant.py).  8-bit moments cost 1 B + 1/128 scale per parameter —
+the difference between llama3-405b training state fitting 256 chips or not:
+
+    bf16 param + bf16 grad + fp32 m + fp32 v  = 12 B/param → 19.0 GB/chip
+    bf16 param + bf16 grad + int8 m + int8 v  ≈ 6.1 B/param →  9.7 GB/chip
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quant import dequantize_to, quantize, zeros_like_quantized
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+    clip_norm: float = 1.0
+
+    # ------------------------------------------------------------------
+    def _zeros(self, p: Array, dtype: str):
+        if dtype == "int8":
+            return zeros_like_quantized(p.astype(jnp.float32))
+        return jnp.zeros_like(p, jnp.dtype(dtype))
+
+    def _read(self, s, p: Array, dtype: str) -> Array:
+        if dtype == "int8":
+            return dequantize_to(s, p.shape[-1])
+        return s.astype(jnp.float32)
+
+    def _write(self, x: Array, dtype: str):
+        if dtype == "int8":
+            return quantize(x)
+        return x.astype(jnp.dtype(dtype))
+
+    # ------------------------------------------------------------------
+    def init(self, params) -> Dict[str, Any]:
+        return {
+            "m": jax.tree.map(lambda p: self._zeros(p, self.m_dtype), params),
+            "v": jax.tree.map(lambda p: self._zeros(p, self.v_dtype), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params, lr: Array):
+        count = state["count"] + 1
+        # Global-norm clip in f32.
+        if self.clip_norm > 0:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            factor = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        else:
+            gnorm = jnp.float32(0.0)
+            factor = jnp.float32(1.0)
+
+        bc1 = 1.0 - self.b1**count.astype(jnp.float32)
+        bc2 = 1.0 - self.b2**count.astype(jnp.float32)
+
+        def leaf(g, m_s, v_s, p):
+            g = g.astype(jnp.float32) * factor
+            m = self._read(m_s, p, self.m_dtype)
+            v = self._read(v_s, p, self.v_dtype)
+            m = self.b1 * m + (1.0 - self.b1) * g
+            v = self.b2 * v + (1.0 - self.b2) * jnp.square(g)
+            update = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay > 0:
+                update = update + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+            return new_p, self._write(m, self.m_dtype), self._write(v, self.v_dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return new_p, new_state, {"grad_norm": gnorm}

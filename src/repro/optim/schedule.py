@@ -1,0 +1,40 @@
+"""LR schedules: warmup-stable-decay (wsd) and cosine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    decay_frac: float = 0.1,
+    floor: float = 0.0,
+):
+    decay_steps = max(1, int(total_steps * decay_frac))
+    stable_end = total_steps - decay_steps
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        decay = peak_lr + (floor - peak_lr) * jnp.clip(
+            (step - stable_end) / decay_steps, 0.0, 1.0
+        )
+        return jnp.where(step < stable_end, warm, decay)
+
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / max(warmup_steps, 1))
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * warm * cos
+
+    return lr

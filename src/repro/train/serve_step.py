@@ -1,0 +1,57 @@
+"""Serving steps: prefill + KV-cache greedy decode."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, make_cache, prefill
+
+Array = jax.Array
+
+
+def make_prefill_step(cfg: ModelConfig, cache_size: int):
+    def prefill_step(params, tokens, enc_inputs=None):
+        logits, cache = prefill(
+            params, cfg, tokens, cache_size=cache_size, enc_inputs=enc_inputs
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_decode(params, cache, token, pos):
+        """token: (B,) int32; pos: scalar int32 write position."""
+        logits, cache = decode_step(params, cfg, cache, token[:, None], pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_decode
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    prompt: Array,
+    n_steps: int,
+    cache_size: Optional[int] = None,
+    enc_inputs=None,
+):
+    """Prefill + greedy decode loop (lax.fori over decode steps)."""
+    B, S = prompt.shape
+    cache_size = cache_size or (S + n_steps)
+    pf = jax.jit(make_prefill_step(cfg, cache_size))
+    dec = jax.jit(make_decode_step(cfg))
+
+    next_tok, _, cache = pf(params, prompt, enc_inputs)
+    out = [next_tok]
+    for i in range(n_steps - 1):
+        next_tok, _, cache = dec(params, cache, next_tok, jnp.int32(S + i))
+        out.append(next_tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,12 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the single real CPU device; multi-device
+tests spawn subprocesses with their own XLA_FLAGS (see test_distributed.py).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + finite values (required deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import REGISTRY, SMOKE_REGISTRY, shapes_for
+from repro.models.transformer import (
+    count_params_analytic,
+    decode_step,
+    forward,
+    init_params,
+    make_cache,
+    prefill,
+    unembed,
+)
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_schedule
+from repro.train.train_step import init_train_state, make_train_step
+
+ARCHS = list(SMOKE_REGISTRY)
+
+
+def _enc_inputs(cfg, B, key):
+    if cfg.encoder_layers:
+        return jax.random.normal(key, (B, cfg.n_frames, cfg.d_model)).astype(
+            cfg.dtype
+        )
+    if cfg.n_image_tokens:
+        return jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model)
+        ).astype(cfg.dtype)
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = SMOKE_REGISTRY[arch]
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 64
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    x, aux = forward(params, cfg, tokens, enc_inputs=_enc_inputs(cfg, B, key),
+                     remat=False)
+    assert x.shape == (B, S, cfg.d_model)
+    logits = unembed(params, cfg, x)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = SMOKE_REGISTRY[arch]
+    opt = AdamW()
+    lr_fn = lambda s: jnp.float32(1e-3)  # constant: step 0 must move params
+    step = jax.jit(make_train_step(cfg, opt, lr_fn, ce_chunk=32))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 64
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    enc = _enc_inputs(cfg, B, key)
+    if enc is not None:
+        batch["enc"] = enc
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    before = jax.tree.leaves(state["params"])[1]
+    after = jax.tree.leaves(new_state["params"])[1]
+    assert not np.array_equal(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Decode after prefill matches the train-mode forward at high precision
+    (fp32 smoke config; MoE capacity relaxed to avoid drop differences)."""
+    cfg = SMOKE_REGISTRY[arch].replace(
+        dtype="float32", kv_dtype="float32", capacity_factor=16.0
+    )
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    enc = _enc_inputs(cfg, B, key)
+    if enc is not None:
+        enc = enc.astype(jnp.float32)
+    x, _ = forward(params, cfg, tokens, enc_inputs=enc, remat=False)
+    want = unembed(params, cfg, x)[:, -1]
+    _, cache = prefill(params, cfg, tokens[:, :S], cache_size=S + 4,
+                       enc_inputs=enc)
+    got, _ = decode_step(params, cfg, cache, tokens[:, S:S + 1], jnp.int32(S))
+    np.testing.assert_allclose(
+        np.asarray(got[:, 0]), np.asarray(want), rtol=2e-3, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = REGISTRY[arch]
+    expected = {
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected
+    # layer stack covers exactly n_layers blocks
+    prefix, n_cycles, suffix = cfg.layer_stack
+    assert len(prefix) + n_cycles * len(cfg.block_pattern) + len(suffix) == \
+        cfg.n_layers
+
+
+def test_param_counts_in_range():
+    """Analytic totals land near the advertised model sizes."""
+    expect = {
+        "gemma3-1b": (0.9e9, 1.1e9),
+        "llama3-405b": (395e9, 415e9),
+        "qwen1.5-0.5b": (0.4e9, 0.52e9),
+        "phi3-mini-3.8b": (3.6e9, 4.0e9),
+        "recurrentgemma-2b": (2.5e9, 3.1e9),
+        "mamba2-1.3b": (1.2e9, 1.45e9),
+        "llama-3.2-vision-90b": (82e9, 92e9),
+        "whisper-medium": (0.7e9, 1.05e9),
+        "deepseek-v2-236b": (228e9, 244e9),
+        "phi3.5-moe-42b-a6.6b": (40e9, 44e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params_analytic(REGISTRY[arch])
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    n_act = count_params_analytic(REGISTRY["deepseek-v2-236b"],
+                                  active_only=True)
+    assert 18e9 <= n_act <= 24e9  # ~21B active
+    n_act2 = count_params_analytic(REGISTRY["phi3.5-moe-42b-a6.6b"],
+                                   active_only=True)
+    assert 5.5e9 <= n_act2 <= 7.5e9  # ~6.6B active
+
+
+def test_long_context_shape_assignment():
+    long_archs = {n for n, c in REGISTRY.items() if c.supports_long_context}
+    assert long_archs == {"gemma3-1b", "recurrentgemma-2b", "mamba2-1.3b"}
+    for name, cfg in REGISTRY.items():
+        names = [s.name for s in shapes_for(cfg)]
+        assert ("long_500k" in names) == (name in long_archs)

@@ -1,0 +1,151 @@
+"""Multi-device integration tests.  Each test runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main test process
+keeps its single-device view (smoke tests must see 1 device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_subprocess(body: str, n_devices: int = 8, timeout: int = 600):
+    script = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n_devices}'\n"
+        + textwrap.dedent(body)
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+        cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def test_distributed_clustering_quality_multi_device():
+    out = run_in_subprocess("""
+        import jax, numpy as np
+        from repro.core.distributed import distributed_cluster
+        from repro.core.streaming import cluster_stream_dense, canonical_labels
+        from repro.graph.generators import sbm_stream
+        from repro.core.metrics import avg_f1, modularity
+
+        mesh = jax.make_mesh((8,), ("data",))
+        n = 2000
+        edges, truth = sbm_stream(n, 100, avg_degree=12, p_intra=0.8, seed=5)
+        c_seq, _, _ = cluster_stream_dense(edges, 48, n)
+        f_seq = avg_f1(canonical_labels(c_seq), truth)
+        c_dist, info = distributed_cluster(edges, 48, n, mesh=mesh, chunk=256)
+        f_dist = avg_f1(canonical_labels(c_dist), truth)
+        assert info["n_shards"] == 8
+        assert f_dist > 0.6 * f_seq, (f_dist, f_seq)
+        q = modularity(edges, c_dist)
+        assert q > 0.15, q
+        print("OK", f_seq, f_dist, q)
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """Loss on a (4, 2) mesh == loss on 1 device (same params/batch)."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.registry import get_smoke_config
+        from repro.dist.sharding import param_shardings, batch_sharding, sharding_context
+        from repro.models.transformer import init_params
+        from repro.optim.adamw import AdamW
+        from repro.train.train_step import init_train_state, make_train_step
+
+        cfg = get_smoke_config("qwen1.5-0.5b").replace(dtype="float32")
+        opt = AdamW()
+        lr = lambda s: jnp.float32(1e-3)
+        step = make_train_step(cfg, opt, lr, ce_chunk=32)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        key = jax.random.PRNGKey(1)
+        batch = {
+            "tokens": jax.random.randint(key, (8, 64), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (8, 64), 0, cfg.vocab_size),
+        }
+        # single device
+        s1, m1 = jax.jit(step)(state, batch)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        with mesh, sharding_context(mesh):
+            pshard = param_shardings(
+                jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg)), mesh
+            )
+            state2 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+            sharded = jax.jit(step)
+            s2, m2 = sharded(state2, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+        a = np.asarray(jax.tree.leaves(s1["params"])[0])
+        b = np.asarray(jax.tree.leaves(s2["params"])[0])
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+        print("OK", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "OK" in out
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a (4,2) mesh, restore onto (2,4) — values identical."""
+    out = run_in_subprocess("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint.manager import CheckpointManager
+
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+        x = jnp.arange(64.0 * 32).reshape(64, 32)
+        xs = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"x": xs})
+        restored = mgr.restore(
+            {"x": jnp.zeros((64, 32))},
+            shardings={"x": NamedSharding(mesh_b, P("data", "model"))},
+        )
+        np.testing.assert_array_equal(np.asarray(restored["x"]), np.asarray(x))
+        assert restored["x"].sharding.mesh.shape["model"] == 4
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_decode_step_sharded_cache():
+    """Sharded decode (cache over dp/model) matches unsharded decode."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_smoke_config
+        from repro.dist.sharding import cache_shardings, param_shardings, sharding_context
+        from repro.models.transformer import init_params, make_cache, prefill, decode_step
+
+        cfg = get_smoke_config("gemma3-1b").replace(dtype="float32", kv_dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 8, 32
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+        _, cache = prefill(params, cfg, tokens[:, :S], cache_size=S + 4)
+        want, _ = decode_step(params, cfg, cache, tokens[:, S:S+1], jnp.int32(S))
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        with mesh, sharding_context(mesh):
+            cshard = cache_shardings(jax.eval_shape(lambda: cache), mesh)
+            cache_s = jax.device_put(cache, cshard)
+            got, _ = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, jnp.int32(S)))(
+                params, cache_s, tokens[:, S:S+1]
+            )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+        )
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,91 @@
+"""Numerical verification of the paper's §3 analysis (Lemmas 1–2, Theorem 1).
+
+All lemmas are identities over a finite prefix + partition, so they are
+asserted to ~machine precision against brute-force recomputation of Q_t.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+
+
+def _instance(seed, n=24, t=120):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(t, 2))
+    e[:, 1] = np.where(e[:, 0] == e[:, 1], (e[:, 1] + 1) % n, e[:, 1])
+    labels = rng.integers(0, 5, size=n)
+    w = 2.0 * (t + 60)  # full-stream weight (> prefix weight, as in the paper)
+    return e, labels, w
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lemma1_is_exact(seed):
+    """Q_{t+1} = Q_t + 2[δ - (Vol(C(i)) + Vol(C(j)) + 1 + δ)/w]."""
+    e, labels, w = _instance(seed)
+    rng = np.random.default_rng(seed + 1)
+    i, j = rng.integers(0, len(labels), size=2)
+    if i == j:
+        j = (j + 1) % len(labels)
+    q_t = theory.streaming_q(e, labels, w)
+    e_t1 = np.concatenate([e, [[i, j]]], axis=0)
+    q_t1 = theory.streaming_q(e_t1, labels, w)
+    same = labels[i] == labels[j]
+    vci = theory.vol_t(e, labels, int(labels[i]))
+    vcj = theory.vol_t(e, labels, int(labels[j]))
+    pred = q_t + theory.lemma1_increment(vci, vcj, bool(same), w)
+    assert q_t1 == pytest.approx(pred, abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lemma2_is_exact(seed):
+    """ΔQ_t for moving node i from C(i) to C(j) matches the L_t form."""
+    e, labels, w = _instance(seed)
+    rng = np.random.default_rng(seed + 2)
+    i = int(rng.integers(0, len(labels)))
+    dst_options = np.unique(labels[labels != labels[i]])
+    if len(dst_options) == 0:
+        return
+    dst = int(rng.choice(dst_options))
+    q_before = theory.streaming_q(e, labels, w)
+    moved = labels.copy()
+    moved[i] = dst
+    q_after = theory.streaming_q(e, moved, w)
+    pred = theory.lemma2_delta(e, labels, i, dst, w)
+    assert q_after - q_before == pytest.approx(pred, abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_appendix_c_closed_form(seed):
+    """ΔQ_{t+1} closed form == brute force Q^(a) - Q^(c)."""
+    e, labels, w = _instance(seed)
+    rng = np.random.default_rng(seed + 3)
+    i, j = rng.integers(0, len(labels), size=2)
+    if i == j or labels[i] == labels[j]:
+        return
+    q_a, q_c = theory.brute_force_delta_q_t1(e, labels, int(i), int(j), w)
+    pred = theory.delta_q_t1(e, labels, int(i), int(j), w)
+    assert q_a - q_c == pytest.approx(pred, abs=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_theorem1_sufficient_condition(seed):
+    """Vol(C(i)) <= Vol(C(j)) <= v_t(i,j)  ⇒  ΔQ_{t+1} >= 0."""
+    e, labels, w = _instance(seed)
+    rng = np.random.default_rng(seed + 4)
+    i, j = rng.integers(0, len(labels), size=2)
+    if i == j or labels[i] == labels[j]:
+        return
+    vci = theory.vol_t(e, labels, int(labels[i]))
+    vcj = theory.vol_t(e, labels, int(labels[j]))
+    if vci > vcj:
+        return  # theorem's precondition
+    thr = theory.theorem1_threshold(e, labels, int(i), int(j), w)
+    if vcj <= thr:
+        q_a, q_c = theory.brute_force_delta_q_t1(e, labels, int(i), int(j), w)
+        assert q_a - q_c >= -1e-9
