@@ -1,5 +1,9 @@
 """Kernel-tier micro-benchmarks (CPU; interpret-mode Pallas is a correctness
-vehicle, not a perf proxy — TPU perf is covered by the §Roofline analysis)."""
+vehicle, not a perf proxy — TPU perf is covered by the §Roofline analysis).
+
+Clustering tiers are exercised through the unified ``repro.cluster`` API so
+the benchmark measures exactly what callers get.
+"""
 
 from __future__ import annotations
 
@@ -8,8 +12,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunked import cluster_stream_chunked
-from repro.core.streaming import cluster_stream_scan
+from repro.cluster import ClusterConfig, cluster
 from repro.graph.generators import chung_lu_stream
 from repro.kernels.seg_volume.ops import seg_volume
 from repro.kernels.seg_volume.ref import seg_volume_ref
@@ -17,7 +20,8 @@ from repro.kernels.seg_volume.ref import seg_volume_ref
 
 def _t(fn, *args):
     out = fn(*args)
-    jnp.asarray(out).block_until_ready() if hasattr(out, "block_until_ready") else None
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
     t0 = time.perf_counter()
     out = fn(*args)
     if hasattr(out, "block_until_ready"):
@@ -28,13 +32,14 @@ def _t(fn, *args):
 def run():
     rows = []
     n, m = 20_000, 200_000
-    edges = jnp.asarray(chung_lu_stream(n, m, seed=1))
-    t_scan = _t(lambda e: cluster_stream_scan(e, 64, n)[0], edges)
+    edges = chung_lu_stream(n, m, seed=1)
+    scan_cfg = ClusterConfig(n=n, v_max=64, backend="scan")
+    t_scan = _t(lambda e: cluster(e, scan_cfg), edges)
     rows.append({"name": "cluster_scan(1edge/step)", "us_per_call": t_scan * 1e6,
                  "derived": f"{m/t_scan:,.0f} edges/s"})
     for chunk in (512, 4096):
-        t_c = _t(lambda e: cluster_stream_chunked(e, 64, n, chunk=chunk)[0],
-                 edges)
+        cfg = ClusterConfig(n=n, v_max=64, backend="chunked", chunk=chunk)
+        t_c = _t(lambda e: cluster(e, cfg), edges)
         rows.append({"name": f"cluster_chunked(B={chunk})",
                      "us_per_call": t_c * 1e6,
                      "derived": f"{m/t_c:,.0f} edges/s"})

@@ -1,34 +1,36 @@
-"""Paper §2.5 — one-pass multi-v_max sweep vs A independent passes."""
+"""Paper §2.5 — one-pass multi-v_max sweep vs A independent passes.
+
+Both sides run through ``repro.cluster``: the sweep is one ``multiparam``
+call, the baseline is A separate ``scan`` calls.
+"""
 
 from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.multiparam import cluster_stream_multiparam, select_result
-from repro.core.streaming import cluster_stream_scan
+from repro.cluster import ClusterConfig, cluster
 from repro.graph.generators import sbm_stream
 
 
 def run(n=5000, a_values=(4, 8)):
     edges, _ = sbm_stream(n, 100, avg_degree=12, seed=3)
-    ej = jnp.asarray(edges)
     rows = []
     for A in a_values:
-        vms = jnp.asarray([2 ** (i + 3) for i in range(A)])
+        vms = tuple(2 ** (i + 3) for i in range(A))
+        sweep_cfg = ClusterConfig(n=n, backend="multiparam", v_maxes=vms)
         # one pass, A parameters
-        cluster_stream_multiparam(ej, vms, n).c.block_until_ready()
+        cluster(edges, sweep_cfg).block_until_ready()
         t0 = time.perf_counter()
-        res = cluster_stream_multiparam(ej, vms, n)
-        res.c.block_until_ready()
+        cluster(edges, sweep_cfg).block_until_ready()
         t_sweep = time.perf_counter() - t0
         # A independent passes
-        cluster_stream_scan(ej, int(vms[0]), n)[0].block_until_ready()
+        cluster(edges, ClusterConfig(n=n, v_max=vms[0], backend="scan"))\
+            .block_until_ready()
         t0 = time.perf_counter()
         for v in vms:
-            cluster_stream_scan(ej, int(v), n)[0].block_until_ready()
+            cluster(
+                edges, ClusterConfig(n=n, v_max=int(v), backend="scan")
+            ).block_until_ready()
         t_sep = time.perf_counter() - t0
         rows.append({"A": A, "sweep_s": t_sweep, "separate_s": t_sep,
                      "speedup": t_sep / t_sweep})

@@ -6,20 +6,19 @@ complexity claim), and report per-edge throughput so the Friendster-scale
 runtime is a direct extrapolation.  The `stream_read` row reproduces the
 paper's `cat` comparison: a pass over the edge stream that does no clustering
 work (memory-bandwidth lower bound).
+
+All streaming tiers run through the unified ``repro.cluster`` API.
 """
 
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunked import cluster_stream_chunked
+from repro.cluster import ClusterConfig, cluster
 from repro.core.labelprop import label_propagation
 from repro.core.louvain import louvain
-from repro.core.streaming import cluster_stream_dense
 from repro.graph.generators import chung_lu_stream
 
 
@@ -30,8 +29,6 @@ def _time(fn, *args, repeat=1):
         out = fn(*args)
     if hasattr(out, "block_until_ready"):
         out.block_until_ready()
-    elif isinstance(out, tuple) and hasattr(out[0], "block_until_ready"):
-        out[0].block_until_ready()
     return (time.perf_counter() - t0) / repeat
 
 
@@ -40,12 +37,11 @@ def run(sizes=(100_000, 1_000_000, 5_000_000), v_max=64, baselines_at=300_000):
     for m in sizes:
         n = max(m // 10, 1000)
         edges = chung_lu_stream(n, m, seed=m % 97)
-        ej = jnp.asarray(edges)
+        chunked_cfg = ClusterConfig(n=n, v_max=v_max, backend="chunked",
+                                    chunk=4096)
 
         t_read = _time(lambda e: np.bitwise_xor.reduce(e, axis=None), edges)
-        t_str = _time(
-            lambda e: cluster_stream_chunked(e, v_max, n, chunk=4096)[0], ej
-        )
+        t_str = _time(lambda e: cluster(e, chunked_cfg), edges)
         rows.append(
             {"algo": "stream_read(cat)", "m": m, "seconds": t_read,
              "edges_per_s": m / t_read}
@@ -55,9 +51,8 @@ def run(sizes=(100_000, 1_000_000, 5_000_000), v_max=64, baselines_at=300_000):
              "edges_per_s": m / t_str}
         )
         if m <= baselines_at:
-            t_oracle = _time(
-                lambda e: cluster_stream_dense(e, v_max, n)[0], edges
-            )
+            dense_cfg = ClusterConfig(n=n, v_max=v_max, backend="dense")
+            t_oracle = _time(lambda e: cluster(e, dense_cfg), edges)
             t_lv = _time(lambda e: louvain(e, n, seed=0), edges)
             t_lp = _time(lambda e: label_propagation(e, n, sweeps=3), edges)
             rows.append({"algo": "STR-sequential(paper)", "m": m,

@@ -6,22 +6,25 @@ communities (SNAP-like: Amazon/DBLP ground truth averages ~10-30 nodes) and
 fewer large ones.  STR runs the one-pass multi-v_max sweep (paper §2.5) with
 density-based selection; the best-in-sweep entry is also reported (upper
 bound of the selector).  Distributed STR (8 shards) quantifies the 2-level
-merge quality cost.
+merge quality cost.  All STR tiers run through ``repro.cluster``.
 """
 
 from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import distributed_cluster
+from repro.cluster import (
+    ClusterConfig,
+    avg_f1,
+    canonical_labels,
+    cluster,
+    modularity,
+    nmi,
+)
 from repro.core.labelprop import label_propagation
 from repro.core.louvain import louvain
-from repro.core.metrics import avg_f1, modularity, nmi
-from repro.core.multiparam import cluster_stream_multiparam, select_result
-from repro.core.streaming import canonical_labels
 from repro.graph.generators import sbm_stream
 
 REGIMES = {
@@ -30,18 +33,6 @@ REGIMES = {
 }
 
 V_MAXES = (8, 16, 32, 64, 128, 256, 512, 1024)
-
-
-def _score(name, labels, edges, truth, seconds, rows):
-    labels = canonical_labels(labels)
-    rows.append({
-        "regime": rows[-1]["regime"] if rows else None,
-        "algo": name,
-        "f1": avg_f1(labels, truth),
-        "nmi": nmi(labels, truth),
-        "modularity": modularity(edges, labels),
-        "seconds": seconds,
-    })
 
 
 def run():
@@ -59,26 +50,25 @@ def run():
             })
 
         t0 = time.perf_counter()
-        sweep = cluster_stream_multiparam(
-            jnp.asarray(edges), jnp.asarray(V_MAXES), n
-        )
-        sel = select_result(sweep, criterion="density")
+        sweep = cluster(edges, ClusterConfig(
+            n=n, backend="multiparam", v_maxes=V_MAXES, criterion="density"))
         t1 = time.perf_counter()
-        add("STR(sweep,density-pick)", sel["labels"], t1 - t0)
+        add("STR(sweep,density-pick)", sweep.labels, t1 - t0)
 
+        sweep_labels = sweep.info["sweep_labels"]
         f1s = [
-            avg_f1(canonical_labels(np.asarray(sweep.c[a])), truth)
+            avg_f1(canonical_labels(np.asarray(sweep_labels[a])), truth)
             for a in range(len(V_MAXES))
         ]
         best = int(np.argmax(f1s))
-        add(f"STR(best v_max={V_MAXES[best]})", np.asarray(sweep.c[best]),
+        add(f"STR(best v_max={V_MAXES[best]})", np.asarray(sweep_labels[best]),
             t1 - t0)
 
         t0 = time.perf_counter()
-        c_dist, _ = distributed_cluster(
-            edges, V_MAXES[best], n, n_shards=8, chunk=2048
-        )
-        add("STR-distributed(8 shards)", c_dist, time.perf_counter() - t0)
+        dist = cluster(edges, ClusterConfig(
+            n=n, v_max=V_MAXES[best], backend="distributed", n_shards=8,
+            chunk=2048))
+        add("STR-distributed(8 shards)", dist.labels, time.perf_counter() - t0)
 
         t0 = time.perf_counter()
         add("Louvain", louvain(edges, n, seed=0), time.perf_counter() - t0)

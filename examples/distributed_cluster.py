@@ -14,11 +14,8 @@ if "XLA_FLAGS" not in os.environ:
     os.execv(sys.executable, [sys.executable] + sys.argv)
 
 import jax  # noqa: E402
-import numpy as np  # noqa: E402
 
-from repro.core.distributed import distributed_cluster  # noqa: E402
-from repro.core.metrics import avg_f1, modularity  # noqa: E402
-from repro.core.streaming import canonical_labels, cluster_stream_dense  # noqa: E402
+from repro.cluster import ClusterConfig, avg_f1, cluster, modularity  # noqa: E402
 from repro.graph.generators import sbm_stream  # noqa: E402
 
 
@@ -28,13 +25,17 @@ def main():
     edges, truth = sbm_stream(n, 500, avg_degree=12, p_intra=0.8, seed=2)
     print(f"devices: {len(jax.devices())}; stream: {len(edges)} edges")
 
-    c_seq, _, _ = cluster_stream_dense(edges, 48, n)
-    print(f"[1-stream ] Q={modularity(edges, c_seq):.3f} "
-          f"F1={avg_f1(canonical_labels(c_seq), truth):.3f}")
+    seq = cluster(edges, ClusterConfig(n=n, v_max=48, backend="dense"))
+    print(f"[1-stream ] Q={modularity(edges, seq.labels):.3f} "
+          f"F1={avg_f1(seq.labels, truth):.3f}")
 
-    c_dist, info = distributed_cluster(edges, 48, n, mesh=mesh, chunk=1024)
-    print(f"[8-shard  ] Q={modularity(edges, c_dist):.3f} "
-          f"F1={avg_f1(canonical_labels(c_dist), truth):.3f} ({info})")
+    dist = cluster(
+        edges,
+        ClusterConfig(n=n, v_max=48, backend="distributed", chunk=1024),
+        mesh=mesh,
+    )
+    print(f"[8-shard  ] Q={modularity(edges, dist.labels):.3f} "
+          f"F1={avg_f1(dist.labels, truth):.3f} ({dist.info})")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,9 @@ surface expert-affinity communities — an analysis tool for router health.
 
 Edges: for every token, each pair of its top-k experts is one edge in a
 stream over expert ids.  Dense expert communities = experts that co-fire;
-a router collapse shows up as one giant community.
+a router collapse shows up as one giant community.  The stream arrives
+batch-by-batch through ``StreamClusterer.partial_fit`` — exactly how a
+router monitor would consume routing decisions during serving.
 
     PYTHONPATH=src python examples/moe_routing_graph.py
 """
@@ -15,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import ClusterConfig, StreamClusterer
 from repro.configs.registry import get_smoke_config
-from repro.core.metrics import community_stats
-from repro.core.streaming import canonical_labels, cluster_stream_dense
-from repro.models.transformer import init_params, forward
+from repro.models.transformer import init_params
 
 
 def main():
@@ -47,11 +48,14 @@ def main():
     rng.shuffle(edges, axis=0)
     print(f"co-routing stream: {len(edges)} edges over {cfg.n_experts} experts")
 
-    c, d, v = cluster_stream_dense(edges, v_max=len(edges) // 4,
-                                   n=cfg.n_experts)
-    labels = canonical_labels(c)
-    print("expert -> community:", dict(enumerate(labels.tolist())))
-    print("stats:", community_stats(labels))
+    # Incremental ingestion, one partial_fit per "serving step".
+    sc = StreamClusterer(ClusterConfig(
+        n=cfg.n_experts, v_max=max(len(edges) // 4, 1), backend="dense"))
+    for batch in np.array_split(edges, 8):
+        sc.partial_fit(batch)
+    res = sc.finalize()
+    print("expert -> community:", dict(enumerate(res.labels.tolist())))
+    print("stats:", res.community_stats)
 
 
 if __name__ == "__main__":

@@ -4,27 +4,27 @@ selection — then compare the selector's pick to the hindsight-best.
     PYTHONPATH=src python examples/multiparam_sweep.py
 """
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.metrics import avg_f1, modularity
-from repro.core.multiparam import cluster_stream_multiparam, select_result
-from repro.core.streaming import canonical_labels
+from repro.cluster import ClusterConfig, avg_f1, canonical_labels, cluster, modularity
 from repro.graph.generators import sbm_stream
 
 
 def main():
     n = 8000
     edges, truth = sbm_stream(n, 400, avg_degree=12, p_intra=0.75, seed=1)
-    v_maxes = jnp.asarray([8, 16, 32, 64, 128, 256, 512, 1024])
-    sweep = cluster_stream_multiparam(jnp.asarray(edges), v_maxes, n)
+    res = cluster(edges, ClusterConfig(
+        n=n, backend="multiparam",
+        v_maxes=(8, 16, 32, 64, 128, 256, 512, 1024),
+        criterion="density",
+    ))
 
     print(f"{'v_max':>6s} {'entropy':>8s} {'density':>8s} "
           f"{'Q':>7s} {'F1':>7s}   (Q/F1 need the graph; selector does not)")
-    sel = select_result(sweep, criterion="density")
-    for a, row in enumerate(sel["rows"]):
-        c = canonical_labels(np.asarray(sweep.c[a]))
-        mark = " <= selected" if a == sel["best_index"] else ""
+    sweep_labels = res.info["sweep_labels"]
+    for a, row in enumerate(res.info["rows"]):
+        c = canonical_labels(np.asarray(sweep_labels[a]))
+        mark = " <= selected" if a == res.info["best_index"] else ""
         print(f"{row['v_max']:6d} {row['entropy']:8.3f} {row['density']:8.3f} "
               f"{modularity(edges, c):7.3f} {avg_f1(c, truth):7.3f}{mark}")
 

@@ -1,15 +1,20 @@
-"""Quickstart: stream a graph through the paper's clustering algorithm.
+"""Quickstart: the unified ``repro.cluster`` API (canonical snippet, DESIGN.md §6).
+
+One config-driven call — ``cluster(edges, ClusterConfig(...))`` — reaches
+every backend; ``StreamClusterer`` ingests the same stream incrementally.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunked import cluster_stream_chunked
-from repro.core.metrics import avg_f1, community_stats, modularity, nmi
-from repro.core.multiparam import cluster_stream_multiparam, select_result
-from repro.core.streaming import canonical_labels, cluster_stream_dense
+from repro.cluster import (
+    ClusterConfig,
+    StreamClusterer,
+    avg_f1,
+    cluster,
+    modularity,
+)
 from repro.graph.generators import sbm_stream
 
 
@@ -19,30 +24,36 @@ def main():
     edges, truth = sbm_stream(n, k, avg_degree=14, p_intra=0.8, seed=0)
     print(f"graph: {n} nodes, {len(edges)} streamed edges, {k} communities")
 
-    # 1. Paper-faithful sequential Algorithm 1 (numpy oracle).
-    c_seq, d, v = cluster_stream_dense(edges, v_max=64, n=n)
-    print(f"[sequential  ] Q={modularity(edges, c_seq):.3f} "
-          f"F1={avg_f1(canonical_labels(c_seq), truth):.3f} "
-          f"{community_stats(c_seq)}")
+    # 1. Paper-faithful sequential Algorithm 1 (numpy loop).
+    seq = cluster(edges, ClusterConfig(n=n, v_max=64, backend="dense"))
+    print(f"[sequential  ] Q={modularity(edges, seq.labels):.3f} "
+          f"F1={avg_f1(seq.labels, truth):.3f} {seq.community_stats}")
 
     # 2. TPU-adapted chunked tier (jit; quality parity measured in tests).
-    c_chk, _, _ = cluster_stream_chunked(jnp.asarray(edges), 64, n, chunk=2048)
-    c_chk = np.asarray(c_chk)
-    print(f"[chunked     ] Q={modularity(edges, c_chk):.3f} "
-          f"F1={avg_f1(canonical_labels(c_chk), truth):.3f}")
+    chk = cluster(edges, ClusterConfig(n=n, v_max=64, backend="chunked",
+                                       chunk=2048))
+    print(f"[chunked     ] Q={modularity(edges, chk.labels):.3f} "
+          f"F1={avg_f1(chk.labels, truth):.3f}")
 
     # 3. One-pass multi-v_max sweep + edge-free selection (paper §2.5).
-    sweep = cluster_stream_multiparam(
-        jnp.asarray(edges), jnp.asarray([16, 32, 64, 128, 256, 512]), n
-    )
-    sel = select_result(sweep, criterion="density")
-    c_best = sel["labels"]
-    print(f"[sweep pick  ] v_max={sel['best_v_max']} "
-          f"Q={modularity(edges, c_best):.3f} "
-          f"F1={avg_f1(canonical_labels(c_best), truth):.3f}")
-    for row in sel["rows"]:
+    sweep = cluster(edges, ClusterConfig(
+        n=n, backend="multiparam", v_maxes=(16, 32, 64, 128, 256, 512)))
+    print(f"[sweep pick  ] v_max={sweep.info['best_v_max']} "
+          f"Q={modularity(edges, sweep.labels):.3f} "
+          f"F1={avg_f1(sweep.labels, truth):.3f}")
+    for row in sweep.info["rows"]:
         print(f"    v_max={row['v_max']:4d} entropy={row['entropy']:.2f} "
               f"density={row['density']:.3f}")
+
+    # 4. Incremental ingestion: edges arrive in batches; identical labels to
+    #    the one-shot call for the sequential backends.
+    sc = StreamClusterer(ClusterConfig(n=n, v_max=64, backend="scan"))
+    for batch in np.array_split(edges, 10):
+        sc.partial_fit(batch)
+    inc = sc.finalize()
+    ref = cluster(edges, ClusterConfig(n=n, v_max=64, backend="scan"))
+    print(f"[partial_fit ] 10 batches, {sc.edges_seen} edges, "
+          f"identical to one-shot: {np.array_equal(inc.labels, ref.labels)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,53 @@
+"""``repro.cluster`` — the single public API for streaming graph clustering.
+
+    from repro.cluster import cluster, StreamClusterer, ClusterConfig
+
+    cfg = ClusterConfig(n=10_000, v_max=64, backend="chunked")
+    result = cluster(edges, cfg)                  # one-shot
+    sc = StreamClusterer(cfg)                     # incremental
+    for batch in arriving_batches:
+        sc.partial_fit(batch)
+    result = sc.finalize()
+
+Backends (``ClusterConfig(backend=...)``): oracle, dense, scan, chunked,
+pallas, multiparam, distributed — see ``available_backends()`` and
+DESIGN.md §3/§6.  Quality metrics are re-exported for convenience so
+examples and benchmarks need only this package.
+"""
+
+from repro.core.metrics import (  # noqa: F401
+    avg_f1,
+    community_stats,
+    modularity,
+    nmi,
+)
+from repro.core.state import ClusterState  # noqa: F401
+from repro.core.streaming import PAD, canonical_labels  # noqa: F401
+from repro.cluster.api import Clustering, StreamClusterer, cluster  # noqa: F401
+from repro.cluster.config import ClusterConfig  # noqa: F401
+from repro.cluster.registry import (  # noqa: F401
+    Backend,
+    BackendResult,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+
+__all__ = [
+    "PAD",
+    "Backend",
+    "BackendResult",
+    "ClusterConfig",
+    "ClusterState",
+    "Clustering",
+    "StreamClusterer",
+    "available_backends",
+    "avg_f1",
+    "canonical_labels",
+    "cluster",
+    "community_stats",
+    "get_backend",
+    "modularity",
+    "nmi",
+    "register_backend",
+]

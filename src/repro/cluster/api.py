@@ -1,0 +1,252 @@
+"""The unified public clustering API: ``cluster`` / ``StreamClusterer``.
+
+One call — ``cluster(edges, ClusterConfig(...))`` — dispatches through the
+backend registry; ``StreamClusterer`` exposes the same engine incrementally
+(``partial_fit`` per arriving batch, ``finalize`` for the result), with the
+:class:`ClusterState` suspendable to disk via ``repro.checkpoint.manager``
+and resumable in a later session.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.metrics import community_stats, entropy_from_state
+from repro.core.state import ClusterState
+from repro.core.streaming import canonical_labels
+from repro.cluster.config import ClusterConfig
+from repro.cluster.registry import Backend, get_backend
+
+_CONFIG_FILE = "cluster_config.json"
+
+
+def _check_state_n(state: ClusterState, config: ClusterConfig) -> None:
+    """A carried state must match config.n — out-of-range node ids would be
+    silently dropped by device scatters otherwise."""
+    if state.n != config.n:
+        raise ValueError(
+            f"state has n={state.n} but config.n={config.n}; a carried "
+            "ClusterState must come from a run with the same node-id space"
+        )
+
+
+class Clustering:
+    """A clustering result: labels + edge-free metrics (paper §2.5).
+
+    Everything derivable is lazy/cached so benchmarks can time the backends
+    without paying for canonicalisation or metrics they don't read.
+    """
+
+    def __init__(
+        self,
+        state: Optional[ClusterState],
+        config: ClusterConfig,
+        raw_labels,
+        info: Optional[Dict[str, Any]] = None,
+    ):
+        self.state = state
+        self.config = config
+        self.raw_labels = raw_labels
+        self.info = dict(info or {})
+        self._labels: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def labels(self) -> np.ndarray:
+        """Canonical labels 0..K-1 by first appearance (cross-backend
+        comparable)."""
+        if self._labels is None:
+            self._labels = canonical_labels(np.asarray(self.raw_labels))
+        return self._labels
+
+    @property
+    def entropy(self) -> Optional[float]:
+        """H over community volumes — edge-free, from ``(v, sum d)`` alone.
+        ``None`` when the backend returns no state (distributed)."""
+        if self.state is None:
+            return None
+        v = np.asarray(self.state.v)
+        w = float(np.asarray(self.state.d).sum())
+        return entropy_from_state(v, w) if w > 0 else 0.0
+
+    @property
+    def avg_density(self) -> Optional[float]:
+        """Average community density — edge-free, from ``(c, v)`` alone.
+
+        Works in any backend label space by looking up each node's community
+        volume (dense: ``v[label]``; oracle: ``v[label - 1]``, synthesized
+        singleton labels for never-seen nodes have volume 0)."""
+        if self.state is None:
+            return None
+        v = np.asarray(self.state.v)
+        raw = np.asarray(self.raw_labels)
+        space = get_backend(self.config.backend).label_space
+        idx = raw - 1 if space == "oracle" else raw
+        in_bounds = (idx >= 0) & (idx < v.shape[0])
+        node_vol = np.where(in_bounds, v[np.clip(idx, 0, v.shape[0] - 1)], 0)
+        _, first, counts = np.unique(raw, return_index=True, return_counts=True)
+        vol_u = node_vol[first].astype(np.float64)
+        pairs = np.maximum(counts * (counts - 1.0), 1.0)
+        dens = np.where(counts > 1, vol_u / pairs, 0.0)
+        return float(dens.mean()) if dens.size else 0.0
+
+    @property
+    def community_stats(self) -> Dict[str, float]:
+        return community_stats(self.labels)
+
+    @property
+    def n_communities(self) -> int:
+        return int(self.community_stats["n_communities"])
+
+    def block_until_ready(self) -> "Clustering":
+        if self.state is not None:
+            self.state.block_until_ready()
+        return self
+
+    def __repr__(self) -> str:
+        return (
+            f"Clustering(backend={self.config.backend!r}, n={self.config.n}, "
+            f"edges_seen={int(self.state.edges_seen) if self.state else '?'})"
+        )
+
+
+def cluster(
+    edges,
+    config: ClusterConfig,
+    *,
+    state: Optional[ClusterState] = None,
+    mesh=None,
+) -> Clustering:
+    """Cluster an edge stream in one call, via ``config.backend``.
+
+    Args:
+      edges: (m, 2) int array in stream order (PAD rows are no-ops).
+      config: validated :class:`ClusterConfig`.
+      state: optional carried :class:`ClusterState` (resumable backends only);
+        fresh state is created when omitted.  Must come from a run with the
+        same ``n`` and the same backend label space (see ``Backend.label_space``
+        — an oracle-space state is not interchangeable with dense-space ones).
+      mesh: optional ``jax.sharding.Mesh`` for ``backend="distributed"``.
+
+    Returns:
+      a :class:`Clustering` bundling labels, state, and edge-free metrics.
+    """
+    backend = get_backend(config.backend)
+    if state is None:
+        state = backend.init_fn(config.n)
+    _check_state_n(state, config)
+    result = backend.fn(edges, config, state, mesh=mesh)
+    return Clustering(
+        state=result.state,
+        config=config,
+        raw_labels=result.labels,
+        info=result.info,
+    )
+
+
+class StreamClusterer:
+    """Incremental ingestion: ``partial_fit`` per arriving edge batch.
+
+    The production streaming scenario — edges arrive over time, state is the
+    paper's ``3n`` ints, and the run can be suspended (:meth:`save`) and
+    resumed (:meth:`restore`) across processes.  Only resumable backends
+    (oracle / dense / scan / chunked / pallas) support ``partial_fit``; for
+    the strictly-sequential tiers the result is identical to one
+    :func:`cluster` call over the concatenated stream, regardless of batching.
+    """
+
+    def __init__(self, config: ClusterConfig, state: Optional[ClusterState] = None):
+        self.config = config
+        self._backend: Backend = get_backend(config.backend)
+        if not self._backend.resumable:
+            raise ValueError(
+                f"backend {config.backend!r} does not support incremental "
+                "partial_fit; use cluster() for one-shot runs"
+            )
+        if state is None:
+            state = self._backend.init_fn(config.n)
+        _check_state_n(state, config)
+        self._state = state
+        self._last_result = None
+
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> ClusterState:
+        return self._state
+
+    @property
+    def edges_seen(self) -> int:
+        return int(self._state.edges_seen)
+
+    def partial_fit(self, edge_batch) -> "StreamClusterer":
+        """Ingest one batch of edges; returns ``self`` for chaining."""
+        result = self._backend.fn(edge_batch, self.config, self._state)
+        self._state = result.state
+        self._last_result = result
+        return self
+
+    def finalize(self) -> Clustering:
+        """The clustering of everything ingested so far.  Does not consume
+        the state — more ``partial_fit`` calls may follow."""
+        if self._last_result is not None:
+            raw = self._last_result.labels
+            info = self._last_result.info
+        else:  # no batch ingested yet: every node is its own singleton
+            empty = np.zeros((0, 2), np.int32)
+            result = self._backend.fn(empty, self.config, self._state)
+            self._state = result.state
+            raw, info = result.labels, result.info
+        return Clustering(
+            state=self._state, config=self.config, raw_labels=raw, info=info
+        )
+
+    # ------------------------------------------------------------------
+    # Suspend / resume across sessions (repro.checkpoint.manager)
+    # ------------------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        """Checkpoint state (step-atomic, step = edges seen) + config sidecar.
+
+        The config is written first via atomic replace, so a preemption at
+        any point leaves either a restorable checkpoint or a clean
+        "no checkpoints" failure — never a state/config torn pair.
+        """
+        mgr = CheckpointManager(directory)  # creates the directory
+        tmp = os.path.join(directory, _CONFIG_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            f.write(self.config.to_json())
+        os.replace(tmp, os.path.join(directory, _CONFIG_FILE))
+        return mgr.save(self.edges_seen, {"cluster_state": self._state})
+
+    @classmethod
+    def restore(
+        cls, directory: str, config: Optional[ClusterConfig] = None
+    ) -> "StreamClusterer":
+        """Resume from :meth:`save`; ``config`` overrides the saved one.
+
+        An override may switch backends only within the same label space
+        (dense → scan → pallas → chunked); an oracle state read as dense
+        state (or vice versa) would silently mislabel, so it is rejected.
+        """
+        with open(os.path.join(directory, _CONFIG_FILE)) as f:
+            saved = ClusterConfig.from_json(f.read())
+        if config is None:
+            config = saved
+        else:
+            saved_space = get_backend(saved.backend).label_space
+            new_space = get_backend(config.backend).label_space
+            if saved_space != new_space:
+                raise ValueError(
+                    f"cannot restore a {saved.backend!r} checkpoint "
+                    f"({saved_space} label space) with backend="
+                    f"{config.backend!r} ({new_space} label space)"
+                )
+        backend = get_backend(config.backend)
+        template = {"cluster_state": backend.init_fn(config.n)}
+        restored = CheckpointManager(directory).restore(template)
+        return cls(config, state=restored["cluster_state"])

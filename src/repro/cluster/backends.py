@@ -1,0 +1,179 @@
+"""The seven built-in backends behind ``repro.cluster.cluster``.
+
+Thin adapters from the registry's uniform contract onto the state-threading
+tiers in ``repro.core`` / ``repro.kernels`` (DESIGN.md §3):
+
+======== ============================== ========= =========
+name     implementation                 resumable bit-exact
+======== ============================== ========= =========
+oracle   dict Algorithm 1 (paper space) yes       yes
+dense    numpy loop, node-id space      yes       yes
+scan     jax.lax.scan, 1 edge/step      yes       yes
+chunked  Jacobi chunks on the VPU       yes (†)   no
+pallas   serial-in-VMEM Pallas kernel   yes       yes
+multiparam  one-pass multi-v_max sweep  no        yes (‡)
+distributed local shards + merge pass   no        no
+======== ============================== ========= =========
+
+† chunked partial_fit is deterministic but batch boundaries are Jacobi chunk
+  boundaries, so labels depend on how the stream was batched.
+‡ per sweep entry; the selected entry equals a scan run at that v_max.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multiparam as _multiparam
+from repro.core.chunked import chunked_update
+from repro.core.distributed import distributed_cluster
+from repro.core.state import ClusterState
+from repro.core.streaming import dense_update, oracle_init, oracle_update, scan_update
+from repro.cluster.registry import BackendResult, register_backend
+from repro.kernels.edge_stream.ops import pallas_update
+
+
+def _require_fresh(state: ClusterState, name: str) -> None:
+    if int(state.edges_seen) != 0:
+        raise ValueError(
+            f"backend {name!r} is one-shot and cannot resume from a non-empty "
+            "state; use a resumable backend (oracle/dense/scan/chunked/pallas) "
+            "for StreamClusterer.partial_fit"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Sequential tiers (bit-exact with the paper's Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@register_backend(
+    "oracle",
+    init_fn=oracle_init,
+    resumable=True,
+    bit_exact=True,
+    label_space="oracle",
+    description="paper-faithful dictionary Algorithm 1 (pure Python)",
+)
+def _oracle(edges, config, state, mesh=None) -> BackendResult:
+    state = oracle_update(state, np.asarray(edges), int(config.v_max))
+    c = np.asarray(state.c)
+    # Unseen nodes (label 0) become their own singletons, mirroring the dense
+    # layout where an untouched node keeps its own id.
+    labels = np.where(c > 0, c, config.n + 1 + np.arange(config.n))
+    return BackendResult(state=state, labels=labels, info={})
+
+
+@register_backend(
+    "dense",
+    resumable=True,
+    bit_exact=True,
+    description="dense-array Algorithm 1 (numpy loop, node-id label space)",
+)
+def _dense(edges, config, state, mesh=None) -> BackendResult:
+    state = dense_update(state, np.asarray(edges), int(config.v_max))
+    return BackendResult(state=state, labels=state.c, info={})
+
+
+@register_backend(
+    "scan",
+    resumable=True,
+    bit_exact=True,
+    description="jax.lax.scan port, one edge per step (on-device oracle)",
+)
+def _scan(edges, config, state, mesh=None) -> BackendResult:
+    state = scan_update(
+        state.to_device(), jnp.asarray(edges), jnp.int32(config.v_max)
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
+@register_backend(
+    "pallas",
+    resumable=True,
+    bit_exact=True,
+    description="serial-in-VMEM Pallas kernel (bit-exact, TPU-native)",
+)
+def _pallas(edges, config, state, mesh=None) -> BackendResult:
+    state = pallas_update(
+        state.to_device(),
+        jnp.asarray(edges),
+        int(config.v_max),
+        chunk=config.chunk,
+        interpret=config.interpret,
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
+# ---------------------------------------------------------------------------
+# Parallel tiers (quality parity measured, not assumed)
+# ---------------------------------------------------------------------------
+
+@register_backend(
+    "chunked",
+    resumable=True,
+    bit_exact=False,
+    description="Jacobi chunked tier (vectorised decisions, scatter conflict "
+    "resolution)",
+)
+def _chunked(edges, config, state, mesh=None) -> BackendResult:
+    state = chunked_update(
+        state.to_device(),
+        jnp.asarray(edges),
+        jnp.int32(config.v_max),
+        chunk=config.chunk,
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
+@register_backend(
+    "multiparam",
+    resumable=False,
+    bit_exact=True,
+    description="one-pass multi-v_max sweep + edge-free selection (paper §2.5)",
+)
+def _multiparam_backend(edges, config, state, mesh=None) -> BackendResult:
+    _require_fresh(state, "multiparam")
+    ej = jnp.asarray(edges)
+    sweep = _multiparam.cluster_stream_multiparam(
+        ej, jnp.asarray(config.v_maxes, jnp.int32), config.n
+    )
+    sel = _multiparam.select_result(sweep, criterion=config.criterion)
+    best = sel["best_index"]
+    state = _multiparam.sweep_state(sweep, best, ej)
+    info = {
+        "best_index": best,
+        "best_v_max": sel["best_v_max"],
+        "rows": sel["rows"],
+        # select_result above already pulls (A, n) to host once for the
+        # edge-free metrics; keeping the device array here avoids storing a
+        # second host copy for callers that never read sweep_labels.
+        "sweep_labels": sweep.c,
+    }
+    return BackendResult(state=state, labels=state.c, info=info)
+
+
+@register_backend(
+    "distributed",
+    resumable=False,
+    bit_exact=False,
+    description="multi-device local shards + contracted global merge pass",
+)
+def _distributed(edges, config, state, mesh=None) -> BackendResult:
+    _require_fresh(state, "distributed")
+    n_shards = config.n_shards
+    if mesh is None and n_shards is None:
+        n_shards = jax.device_count()
+    labels, info = distributed_cluster(
+        np.asarray(edges),
+        int(config.v_max),
+        config.n,
+        mesh=mesh,
+        n_shards=n_shards,
+        chunk=config.chunk,
+        v_max2=config.v_max2,
+    )
+    return BackendResult(state=None, labels=labels, info=info)

@@ -1,0 +1,95 @@
+""":class:`ClusterConfig` — the single, validated knob surface of the API.
+
+One config drives every backend (DESIGN.md §6).  Validation happens at
+construction so a bad parameterization fails before any edges stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Parameters of one clustering run.
+
+    Args:
+      n: number of nodes in the stream's id space (state is ``3n`` ints).
+      v_max: the paper's volume threshold (required by every backend except
+        ``multiparam``, which sweeps ``v_maxes`` instead).
+      backend: registry key — one of ``repro.cluster.available_backends()``
+        (``oracle`` / ``dense`` / ``scan`` / ``chunked`` / ``pallas`` /
+        ``multiparam`` / ``distributed``).
+      chunk: edges per device step for the ``chunked`` / ``pallas`` /
+        ``distributed`` tiers (Jacobi batch size resp. DMA granularity).
+      v_maxes: multi-sweep thresholds for ``backend="multiparam"`` (paper
+        §2.5: one pass, many parameters).
+      criterion: edge-free sweep selector, ``"density"`` or ``"entropy"``.
+      n_shards: stream shards for ``backend="distributed"`` (defaults to the
+        visible device count at call time).
+      v_max2: merge-phase threshold for ``distributed`` (defaults to
+        ``v_max``).
+      interpret: run Pallas kernels in interpret mode (True on CPU; set
+        False on real TPUs).
+    """
+
+    n: int
+    v_max: Optional[int] = None
+    backend: str = "chunked"
+    chunk: int = 1024
+    v_maxes: Optional[Tuple[int, ...]] = None
+    criterion: str = "density"
+    n_shards: Optional[int] = None
+    v_max2: Optional[int] = None
+    interpret: bool = True
+
+    def __post_init__(self):
+        from repro.cluster.registry import available_backends
+
+        if self.backend not in available_backends():
+            raise ValueError(
+                f"unknown backend {self.backend!r}; registered backends: "
+                f"{', '.join(available_backends())}"
+            )
+        if not isinstance(self.n, int) or self.n < 1:
+            raise ValueError(f"n must be a positive int, got {self.n!r}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.criterion not in ("density", "entropy"):
+            raise ValueError(
+                f"criterion must be 'density' or 'entropy', got "
+                f"{self.criterion!r}"
+            )
+        if self.backend == "multiparam":
+            if not self.v_maxes:
+                raise ValueError("backend='multiparam' requires v_maxes")
+            if any(int(v) < 1 for v in self.v_maxes):
+                raise ValueError(f"v_maxes must be >= 1, got {self.v_maxes}")
+            # normalise to a plain int tuple (hashable, JSON-friendly)
+            object.__setattr__(self, "v_maxes", tuple(int(v) for v in self.v_maxes))
+        else:
+            if self.v_max is None or int(self.v_max) < 1:
+                raise ValueError(
+                    f"v_max must be >= 1 for backend={self.backend!r}, got "
+                    f"{self.v_max!r}"
+                )
+        if self.n_shards is not None and self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.v_max2 is not None and self.v_max2 < 1:
+            raise ValueError(f"v_max2 must be >= 1, got {self.v_max2}")
+
+    # ------------------------------------------------------------------
+    def replace(self, **changes: Any) -> "ClusterConfig":
+        return dataclasses.replace(self, **changes)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, text: str) -> "ClusterConfig":
+        raw = json.loads(text)
+        if raw.get("v_maxes") is not None:
+            raw["v_maxes"] = tuple(raw["v_maxes"])
+        return cls(**raw)

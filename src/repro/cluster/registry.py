@@ -1,0 +1,100 @@
+"""String-keyed backend registry (mirrors ``configs/registry.py``).
+
+Every clustering implementation registers here under a stable name; the
+unified :func:`repro.cluster.cluster` call and
+:class:`repro.cluster.StreamClusterer` dispatch through this table, so later
+subsystems (sharding, caching, serving) plug in new backends once instead of
+adding an eighth top-level entry point.
+
+Backend contract::
+
+    fn(edges, config, state, mesh=None) -> BackendResult(state, labels, info)
+
+* ``edges``: (m, 2) int array in stream order (PAD rows are no-ops).
+* ``state``: a :class:`ClusterState` produced by this backend's ``init_fn``
+  (fresh or carried from a previous batch when ``resumable``).
+* ``labels``: raw per-node label array in the backend's label space;
+  compare across backends via ``canonical_labels``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+from repro.core.state import ClusterState
+
+
+class BackendResult(NamedTuple):
+    state: Optional[ClusterState]  # None if the backend has no state pullback
+    labels: Any  # (n,) raw label array
+    info: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered clustering implementation + its capabilities."""
+
+    name: str
+    fn: Callable[..., BackendResult]
+    init_fn: Callable[[int], ClusterState]
+    resumable: bool  # supports partial_fit state threading
+    bit_exact: bool  # strict stream order (identical to Algorithm 1)
+    label_space: str = "dense"  # "dense": c[i] is a node id, v[cid] its volume
+    #                             "oracle": 1-based paper ids, v[cid-1]
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(
+    name: str,
+    *,
+    init_fn: Callable[[int], ClusterState] = ClusterState.init,
+    resumable: bool = False,
+    bit_exact: bool = False,
+    label_space: str = "dense",
+    description: str = "",
+):
+    """Decorator: register ``fn`` as backend ``name``.  Re-registration under
+    an existing name is an error (shadowing a tier silently would poison the
+    cross-backend equivalence tests)."""
+
+    def deco(fn: Callable[..., BackendResult]):
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = Backend(
+            name=name,
+            fn=fn,
+            init_fn=init_fn,
+            resumable=resumable,
+            bit_exact=bit_exact,
+            label_space=label_space,
+            description=description,
+        )
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> Backend:
+    _ensure_builtin_backends()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    _ensure_builtin_backends()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_builtin_backends() -> None:
+    # Import for side effect: backends.py registers the seven built-in tiers.
+    # Deferred (not at module import) to keep registry importable from the
+    # backend module itself without a cycle.
+    from repro.cluster import backends  # noqa: F401

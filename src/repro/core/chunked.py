@@ -11,7 +11,9 @@ bit-exact serial-in-VMEM Pallas kernel is provided in
 ``repro.kernels.edge_stream`` for when exact semantics are required.
 
 State layout: arrays of size ``n + 1`` — slot ``n`` is a write sink for
-padded/no-op edges, so the inner loop is branch-free.
+padded/no-op edges, so the inner loop is branch-free.  The public surface
+takes/returns :class:`repro.core.state.ClusterState` (size ``n``); the sink
+slot is an internal detail appended/stripped here.
 """
 
 from __future__ import annotations
@@ -22,7 +24,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.streaming import PAD
+from repro.core.state import ClusterState, count_live_edges
+from repro.core.streaming import PAD, pad_edges_to_chunks
 
 Array = jax.Array
 
@@ -69,6 +72,37 @@ def _chunk_update(state, chunk, *, v_max: int, n: int):
     return (d, c, v), ()
 
 
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_update(
+    state: ClusterState, edges: Array, v_max: Array, chunk: int = 1024
+) -> ClusterState:
+    """State-threading chunked tier: ingest ``edges`` into ``state``.
+
+    ``edges``: (m, 2) int32 (PAD-padded ok); the batch is padded up to a
+    multiple of ``chunk`` internally, and PAD edges are no-ops — but note the
+    *grouping* of edges into Jacobi chunks restarts at every call, so batch
+    boundaries are chunk boundaries (deterministic, batching-dependent).
+    """
+    n = state.d.shape[0]
+    padded, n_chunks = pad_edges_to_chunks(edges, chunk)
+    chunks = padded.reshape(n_chunks, chunk, 2)
+
+    init = (
+        jnp.concatenate([state.d.astype(jnp.int32), jnp.int32([0])]),
+        jnp.concatenate([state.c.astype(jnp.int32), jnp.int32([n])]),
+        jnp.concatenate([state.v.astype(jnp.int32), jnp.int32([0])]),
+    )
+    (d, c, v), _ = jax.lax.scan(
+        functools.partial(_chunk_update, v_max=jnp.int32(v_max), n=n), init, chunks
+    )
+    return ClusterState(
+        d=d[:n],
+        c=c[:n],
+        v=v[:n],
+        edges_seen=state.edges_seen + count_live_edges(edges, PAD),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("v_max", "n", "chunk"))
 def cluster_stream_chunked(
     edges: Array,
@@ -78,26 +112,18 @@ def cluster_stream_chunked(
     init_d: Array | None = None,
     init_v: Array | None = None,
 ) -> Tuple[Array, Array, Array]:
-    """Chunked streaming clustering.  ``edges``: (m, 2) int32 (PAD-padded ok).
+    """One-shot chunked streaming clustering.  Returns ``(c, d, v)`` size n.
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="chunked")``.
 
     ``init_d`` / ``init_v`` (size n) seed the degree/volume state — used by the
     distributed merge phase to carry supernode internal mass into the
-    contracted stream.  Returns ``(c, d, v)`` of size ``n`` (sink stripped).
+    contracted stream.
     """
-    m = edges.shape[0]
-    n_chunks = -(-m // chunk)
-    padded = jnp.full((n_chunks * chunk, 2), PAD, dtype=jnp.int32)
-    padded = jax.lax.dynamic_update_slice(padded, edges.astype(jnp.int32), (0, 0))
-    chunks = padded.reshape(n_chunks, chunk, 2)
-
-    d0 = jnp.zeros(n, jnp.int32) if init_d is None else init_d.astype(jnp.int32)
-    v0 = jnp.zeros(n, jnp.int32) if init_v is None else init_v.astype(jnp.int32)
-    init = (
-        jnp.concatenate([d0, jnp.int32([0])]),
-        jnp.concatenate([jnp.arange(n, dtype=jnp.int32), jnp.int32([n])]),
-        jnp.concatenate([v0, jnp.int32([0])]),
-    )
-    (d, c, v), _ = jax.lax.scan(
-        functools.partial(_chunk_update, v_max=jnp.int32(v_max), n=n), init, chunks
-    )
-    return c[:n], d[:n], v[:n]
+    state = ClusterState.init(n)
+    if init_d is not None:
+        state.d = init_d.astype(jnp.int32)
+    if init_v is not None:
+        state.v = init_v.astype(jnp.int32)
+    s = chunked_update(state, edges, jnp.int32(v_max), chunk=chunk)
+    return s.c, s.d, s.v

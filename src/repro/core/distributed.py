@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.chunked import cluster_stream_chunked
+from repro.core.chunked import chunked_update
+from repro.core.state import ClusterState
 from repro.core.streaming import PAD
 from repro.graph.stream import shard_stream
 
@@ -39,8 +40,10 @@ def _local_phase(shards: Array, v_max: int, n: int, chunk: int):
     """vmapped local clustering; one shard per device under pjit."""
 
     def one(shard):
-        c, d, v = cluster_stream_chunked(shard, v_max, n, chunk)
-        return c, d, v
+        s = chunked_update(
+            ClusterState.init(n), shard, jnp.int32(v_max), chunk=chunk
+        )
+        return s.c, s.d, s.v
 
     return jax.vmap(one)(shards)
 
@@ -89,9 +92,10 @@ def _merge_phase(
     self_mass = (
         jnp.zeros(n + 1, jnp.int32).at[tgt].add(2 * selfmask.astype(jnp.int32))
     )[:n]
-    c2, _, _ = cluster_stream_chunked(
-        stream2, v_max2, n, chunk, init_d=self_mass, init_v=self_mass
-    )
+    seed = ClusterState.init(n)
+    seed.d = self_mass
+    seed.v = self_mass
+    c2 = chunked_update(seed, stream2, jnp.int32(v_max2), chunk=chunk).c
 
     # Pull back: node -> first-active-shard supernode -> phase-2 label.
     any_active = active.any(axis=0)

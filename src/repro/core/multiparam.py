@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.metrics import avg_density_from_state, entropy_from_state
+from repro.core.state import ClusterState, count_live_edges
 from repro.core.streaming import PAD
 
 Array = jax.Array
@@ -78,6 +79,18 @@ def cluster_stream_multiparam(edges: Array, v_maxes: Array, n: int) -> SweepResu
         functools.partial(_edge_update_multi, n=n), init, edges
     )
     return SweepResult(c=c[:, :n], d=d[:n], v=v[:, :n], v_max=v_maxes)
+
+
+def sweep_state(result: SweepResult, index: int, edges: Array) -> ClusterState:
+    """The :class:`ClusterState` of one sweep entry (shared ``d``, per-``v_max``
+    ``c``/``v``) — lets the unified API return sweep picks in the common state
+    representation."""
+    return ClusterState(
+        d=result.d,
+        c=result.c[index],
+        v=result.v[index],
+        edges_seen=count_live_edges(edges, PAD),
+    )
 
 
 def select_result(result: SweepResult, criterion: str = "density") -> Dict:

@@ -1,0 +1,98 @@
+"""The streaming-clustering state pytree — the paper's ``3n`` integers.
+
+:class:`ClusterState` is the single state representation shared by every
+clustering backend (DESIGN.md §3/§6): degree ``d``, community label ``c``,
+community volume ``v`` (all size ``n``, int32, dense node-id label space)
+plus an ``edges_seen`` counter of live edges ingested so far.
+
+It is a registered JAX pytree, so it flows through ``jit``/``scan`` and is
+serializable as-is by :class:`repro.checkpoint.manager.CheckpointManager` —
+that is what makes clustering suspendable/resumable across sessions
+(:class:`repro.cluster.StreamClusterer`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Union[jax.Array, np.ndarray]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClusterState:
+    """Dense-layout Algorithm-1 state.
+
+    ``c[i]`` is the id of the founding node of ``i``'s community (a pure
+    relabeling of the paper's incrementing-``k`` scheme; see
+    ``core/streaming.py``).  The dict-oracle backend stores its 1-based
+    community ids in the same arrays (``c[i] = 0`` means "never seen",
+    ``v[k - 1]`` is the volume of community ``k``) — structure and footprint
+    are identical, only the label space differs.
+    """
+
+    d: Array  # (n,) int32 node degrees
+    c: Array  # (n,) int32 community labels
+    v: Array  # (n,) int32 community volumes (indexed by community id)
+    edges_seen: Array  # () live (non-PAD, non-self) edges ingested.  int64 on
+    #   the numpy tiers; int32 on device tiers (JAX's default without x64
+    #   enabled), so the counter wraps past ~2.1e9 live edges there — above
+    #   the paper's largest graph (Friendster, 1.8e9) but a known ceiling.
+
+    @classmethod
+    def init(cls, n: int, *, numpy: bool = False) -> "ClusterState":
+        """Fresh dense-layout state for an ``n``-node stream."""
+        if numpy:
+            return cls(
+                d=np.zeros(n, np.int32),
+                c=np.arange(n, dtype=np.int32),
+                v=np.zeros(n, np.int32),
+                edges_seen=np.int64(0),
+            )
+        return cls(
+            d=jnp.zeros(n, jnp.int32),
+            c=jnp.arange(n, dtype=jnp.int32),
+            v=jnp.zeros(n, jnp.int32),
+            edges_seen=jnp.int32(0),
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.d.shape[0])
+
+    def to_numpy(self) -> "ClusterState":
+        return ClusterState(
+            d=np.asarray(self.d),
+            c=np.asarray(self.c),
+            v=np.asarray(self.v),
+            edges_seen=np.int64(self.edges_seen),
+        )
+
+    def to_device(self) -> "ClusterState":
+        return ClusterState(
+            d=jnp.asarray(self.d, jnp.int32),
+            c=jnp.asarray(self.c, jnp.int32),
+            v=jnp.asarray(self.v, jnp.int32),
+            edges_seen=jnp.asarray(self.edges_seen, jnp.int32),
+        )
+
+    def block_until_ready(self) -> "ClusterState":
+        for leaf in (self.d, self.c, self.v):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return self
+
+
+def count_live_edges(edges: Array, pad: int) -> Array:
+    """Number of non-PAD, non-self edges in a (m, 2) batch (int32)."""
+    e = jnp.asarray(edges)
+    if e.shape[0] == 0:
+        return jnp.int32(0)
+    live = (e[:, 0] != pad) & (e[:, 1] != pad) & (e[:, 0] != e[:, 1])
+    return jnp.sum(live, dtype=jnp.int32)

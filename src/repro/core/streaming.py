@@ -2,17 +2,27 @@
 
 Three tiers (see DESIGN.md §3):
 
-* :func:`cluster_stream_oracle` — bit-faithful dictionary implementation of
+* :func:`oracle_update` — bit-faithful dictionary implementation of
   Algorithm 1 (the paper-faithful baseline; pure Python/numpy).
-* :func:`cluster_stream_dense` — dense-array variant where a node's initial
+* :func:`dense_update` — dense-array variant where a node's initial
   community index is its own node id (behaviourally identical up to community
   relabeling; this is the layout every JAX/Pallas tier uses).
-* :func:`cluster_stream_scan` — ``jax.lax.scan`` port, one edge per step,
-  bit-exact with the dense oracle.
+* :func:`scan_update` — ``jax.lax.scan`` port, one edge per step, bit-exact
+  with the dense oracle.
 
-State is exactly the paper's ``3n`` integers per node: degree ``d``, community
-``c``, community volume ``v`` (indexed by community id, which is a node id in
-the dense layout).
+Each tier takes and returns a :class:`repro.core.state.ClusterState` — the
+paper's ``3n`` integers per node (degree ``d``, community ``c``, community
+volume ``v``) plus an edges-seen counter — so a stream can be ingested in
+arbitrary batches and suspended/resumed (``repro.cluster.StreamClusterer``).
+
+The historical one-shot entry points (``cluster_stream_oracle``,
+``cluster_stream_dense``, ``cluster_stream_scan``) are retained as thin
+shims over the state-threading tiers.
+
+.. deprecated::
+   Call sites should use :func:`repro.cluster.cluster` /
+   :class:`repro.cluster.StreamClusterer` with ``ClusterConfig(backend=...)``
+   instead of these per-tier functions.
 
 Tie rule: Algorithm 1 line 11 — ``v[c_i] <= v[c_j]`` ⇒ *i joins the community
 of j*.  (The paper's §2.3 prose states the opposite tie-break; we follow the
@@ -28,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.state import ClusterState, count_live_edges
+
 Array = jax.Array
 
 # Sentinel node id used to pad edge chunks to fixed shapes; padded edges are
@@ -39,24 +51,23 @@ PAD = -1
 # Tier 0a: faithful dictionary oracle (paper's Algorithm 1, line by line)
 # ---------------------------------------------------------------------------
 
-def cluster_stream_oracle(edges: np.ndarray, v_max: int) -> Dict[int, int]:
-    """Algorithm 1, dictionaries with default value 0, community ids 1,2,...
+def _oracle_loop(
+    d: Dict[int, int],
+    v: Dict[int, int],
+    c: Dict[int, int],
+    k: int,
+    edges: np.ndarray,
+    v_max: int,
+) -> Tuple[int, int]:
+    """Algorithm 1 inner loop on the paper's dictionaries.
 
-    Args:
-      edges: int array of shape (m, 2); rows are stream order.
-      v_max: volume threshold parameter (``>= 1``).
-
-    Returns:
-      dict node id -> community id.
-    """
-    d: Dict[int, int] = {}
-    v: Dict[int, int] = {}
-    c: Dict[int, int] = {}
-    k = 1
+    Returns ``(next_k, live_edges_processed)``."""
+    seen = 0
     for i, j in np.asarray(edges):
         i, j = int(i), int(j)
         if i == PAD or j == PAD or i == j:
             continue
+        seen += 1
         if c.get(i, 0) == 0:
             c[i] = k
             k += 1
@@ -76,30 +87,101 @@ def cluster_stream_oracle(edges: np.ndarray, v_max: int) -> Dict[int, int]:
                 v[c[i]] += d[j]
                 v[c[j]] -= d[j]
                 c[j] = c[i]
+    return k, seen
+
+
+def oracle_update(
+    state: ClusterState, edges: np.ndarray, v_max: int
+) -> ClusterState:
+    """State-threading dict oracle (paper label space, resumable).
+
+    Layout (see :class:`ClusterState`): ``c[i] = 0`` means node ``i`` has
+    never appeared; community ids are 1-based and ``v`` is stored shifted by
+    one (``v[k - 1]`` is the volume of community ``k``).  Fresh state must be
+    created with ``c`` zeroed — use ``oracle_init(n)``.
+    """
+    s = state.to_numpy()
+    c = {i: int(lab) for i, lab in enumerate(s.c) if lab != 0}
+    d = {i: int(deg) for i, deg in enumerate(s.d) if deg != 0}
+    v = {kk: int(vol) for kk, vol in enumerate(np.asarray(s.v), start=1) if vol != 0}
+    # Every node gets a fresh id exactly once, so the next id is one past the
+    # number of ever-seen nodes (max(c) would wrongly reuse absorbed ids).
+    k = int(np.count_nonzero(np.asarray(s.c))) + 1
+    _, seen = _oracle_loop(d, v, c, k, edges, v_max)
+    out = ClusterState.init(s.n, numpy=True)
+    out.c[:] = 0
+    for i, lab in c.items():
+        out.c[i] = lab
+    for i, deg in d.items():
+        out.d[i] = deg
+    for kk, vol in v.items():
+        out.v[kk - 1] = vol
+    out.edges_seen = s.edges_seen + seen
+    return out
+
+
+def oracle_init(n: int) -> ClusterState:
+    """Fresh state in the dict-oracle label space (all nodes unassigned)."""
+    s = ClusterState.init(n, numpy=True)
+    s.c[:] = 0
+    return s
+
+
+def cluster_stream_oracle(edges: np.ndarray, v_max: int) -> Dict[int, int]:
+    """One-shot Algorithm 1, dictionaries with default 0, community ids 1,2,...
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="oracle")``.
+
+    Args:
+      edges: int array of shape (m, 2); rows are stream order.
+      v_max: volume threshold parameter (``>= 1``).
+
+    Returns:
+      dict node id -> community id.
+    """
+    d: Dict[int, int] = {}
+    v: Dict[int, int] = {}
+    c: Dict[int, int] = {}
+    _oracle_loop(d, v, c, 1, edges, v_max)
     return c
+
+
+def pad_edges_to_chunks(edges: Array, chunk: int):
+    """Pad a (m, 2) device batch with PAD rows up to a ``chunk`` multiple.
+
+    Shared by the chunked and Pallas tiers (their DMA/Jacobi granularity).
+    Returns ``(padded, n_chunks)`` with ``padded`` of shape
+    ``(n_chunks * chunk, 2)``; empty batches yield one all-PAD chunk.
+    """
+    m = edges.shape[0]
+    n_chunks = max(1, -(-m // chunk))
+    padded = jnp.full((n_chunks * chunk, 2), PAD, dtype=jnp.int32)
+    padded = jax.lax.dynamic_update_slice(padded, edges.astype(jnp.int32), (0, 0))
+    return padded, n_chunks
 
 
 # ---------------------------------------------------------------------------
 # Tier 0b: dense-array oracle (initial community of node i is i)
 # ---------------------------------------------------------------------------
 
-def cluster_stream_dense(
-    edges: np.ndarray, v_max: int, n: int
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Dense-layout Algorithm 1.  Returns ``(c, d, v)`` int64 arrays of size n.
+def dense_update(
+    state: ClusterState, edges: np.ndarray, v_max: int
+) -> ClusterState:
+    """State-threading dense-layout Algorithm 1 (numpy loop, resumable).
 
-    Community ids live in the node-id space (the founding node's id).  This is
-    a pure relabeling of the paper's incrementing-``k`` scheme: only equality
-    of community ids and the volumes ``v`` enter the decision rule, and both
-    are preserved.  Verified against :func:`cluster_stream_oracle` in tests.
+    Community ids live in the node-id space (the founding node's id).  This
+    is a pure relabeling of the paper's incrementing-``k`` scheme: only
+    equality of community ids and the volumes ``v`` enter the decision rule,
+    and both are preserved.  Verified against :func:`oracle_update` in tests.
     """
-    d = np.zeros(n, dtype=np.int64)
-    c = np.arange(n, dtype=np.int64)
-    v = np.zeros(n, dtype=np.int64)
+    s = state.to_numpy()
+    d, c, v = s.d.copy(), s.c.copy(), s.v.copy()
+    seen = 0
     for i, j in np.asarray(edges):
         i, j = int(i), int(j)
         if i == PAD or j == PAD or i == j:
             continue
+        seen += 1
         d[i] += 1
         d[j] += 1
         ci, cj = c[i], c[j]
@@ -114,7 +196,22 @@ def cluster_stream_dense(
                 v[ci] += d[j]
                 v[cj] -= d[j]
                 c[j] = ci
-    return c, d, v
+    return ClusterState(d=d, c=c, v=v, edges_seen=s.edges_seen + seen)
+
+
+def cluster_stream_dense(
+    edges: np.ndarray, v_max: int, n: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One-shot dense-layout Algorithm 1.  Returns ``(c, d, v)`` int64 arrays.
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="dense")``.
+    """
+    s = dense_update(ClusterState.init(n, numpy=True), edges, v_max)
+    return (
+        s.c.astype(np.int64),
+        s.d.astype(np.int64),
+        s.v.astype(np.int64),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -150,36 +247,51 @@ def _edge_update(state, edge, *, v_max):
     return (d, c, v), ()
 
 
-@functools.partial(jax.jit, static_argnames=("v_max", "n"))
-def cluster_stream_scan(edges: Array, v_max: int, n: int):
-    """``lax.scan`` over the stream; state = 3n int32 (paper footprint).
+@jax.jit
+def scan_update(state: ClusterState, edges: Array, v_max: Array) -> ClusterState:
+    """State-threading ``lax.scan`` tier (one edge per step, resumable).
 
-    Returns ``(c, d, v)``.  Sequential by construction — bit-exact with
-    :func:`cluster_stream_dense`; used as the on-device oracle and for small
-    graphs.  Large graphs use the chunked tier (``core.chunked``).
+    Sequential by construction — bit-exact with :func:`dense_update`; used as
+    the on-device oracle and for small graphs.  Large graphs use the chunked
+    tier (``core.chunked``) or the Pallas kernel (``kernels.edge_stream``).
     """
     edges = edges.astype(jnp.int32)
     init = (
-        jnp.zeros(n, jnp.int32),
-        jnp.arange(n, dtype=jnp.int32),
-        jnp.zeros(n, jnp.int32),
+        state.d.astype(jnp.int32),
+        state.c.astype(jnp.int32),
+        state.v.astype(jnp.int32),
     )
     (d, c, v), _ = jax.lax.scan(
         functools.partial(_edge_update, v_max=jnp.int32(v_max)), init, edges
     )
-    return c, d, v
+    return ClusterState(
+        d=d, c=c, v=v, edges_seen=state.edges_seen + count_live_edges(edges, PAD)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("v_max", "n"))
+def cluster_stream_scan(edges: Array, v_max: int, n: int):
+    """One-shot ``lax.scan`` tier; state = 3n int32 (paper footprint).
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="scan")``.
+
+    Returns ``(c, d, v)``.
+    """
+    s = scan_update(ClusterState.init(n), edges, jnp.int32(v_max))
+    return s.c, s.d, s.v
 
 
 def canonical_labels(c: np.ndarray) -> np.ndarray:
-    """Map community labels to 0..K-1 by first appearance (for comparisons)."""
+    """Map community labels to 0..K-1 by first appearance (for comparisons).
+
+    Fully vectorised: ``np.unique`` gives each label's first-occurrence index;
+    ranking those indices by argsort yields the first-appearance order without
+    any per-element Python work (this sits on every quality comparison, where
+    the old dict loop was O(n) interpreter time).
+    """
     c = np.asarray(c)
-    _, inv = np.unique(c, return_inverse=True)
-    first = {}
-    out = np.empty_like(inv)
-    nxt = 0
-    for idx, lab in enumerate(inv):
-        if lab not in first:
-            first[lab] = nxt
-            nxt += 1
-        out[idx] = first[lab]
-    return out
+    _, first, inv = np.unique(c, return_index=True, return_inverse=True)
+    order = np.argsort(first, kind="stable")
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.shape[0])
+    return rank[inv]

@@ -1,0 +1,6 @@
+"""Distribution substrate: sharding rules, gradient compression, fault
+tolerance.  Consumed by ``models/transformer.py`` (logical sharding
+constraints), ``train/train_step.py`` (int8 grad compression with error
+feedback), and the launch drivers (preemption drain, straggler detection)."""
+
+from repro.dist import compress, fault_tolerance, sharding  # noqa: F401

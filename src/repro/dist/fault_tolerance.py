@@ -1,0 +1,89 @@
+"""Fault tolerance for long training runs: preemption drain + straggler watch.
+
+:class:`PreemptionHandler` turns SIGTERM/SIGINT into a cooperative flag the
+training loop polls (checkpoint, then exit cleanly).  :class:`HeartbeatMonitor`
+tracks per-step wall time over a sliding window and flags steps that exceed
+``straggler_factor`` × the window median — the single-host stand-in for the
+multi-host heartbeat service.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+class PreemptionHandler:
+    """Cooperative preemption: ``install()`` hooks SIGTERM, loops poll
+    ``preempted`` and drain (checkpoint + exit) instead of dying mid-step."""
+
+    def __init__(self):
+        self._preempted = False
+        self._prev_handler = None
+
+    @property
+    def preempted(self) -> bool:
+        return self._preempted
+
+    def request(self) -> None:
+        """Mark preemption requested (signal handler / tests / schedulers)."""
+        self._preempted = True
+
+    def install(self, signals=(signal.SIGTERM,)) -> "PreemptionHandler":
+        for sig in signals:
+            try:
+                signal.signal(sig, lambda *_: self.request())
+            except ValueError:  # not in main thread — polling still works
+                pass
+        return self
+
+
+class HeartbeatMonitor:
+    """Sliding-window step timer with straggler detection.
+
+    ``step_start()`` / ``step_end(step)`` bracket each training step;
+    ``step_end`` returns True (and records the event in ``stragglers``) when
+    the step took more than ``straggler_factor`` × the median of the last
+    ``window`` step durations.  Needs ``min_history`` samples before flagging
+    so compile-heavy first steps don't trip it.
+    """
+
+    def __init__(
+        self,
+        window: int = 20,
+        straggler_factor: float = 3.0,
+        min_history: int = 3,
+    ):
+        self.window = window
+        self.straggler_factor = straggler_factor
+        self.min_history = min_history
+        self._durations: Deque[float] = deque(maxlen=window)
+        self._t0: Optional[float] = None
+        self.stragglers: List[Dict] = []
+
+    @property
+    def median(self) -> Optional[float]:
+        if not self._durations:
+            return None
+        ordered = sorted(self._durations)
+        return ordered[len(ordered) // 2]
+
+    def step_start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def step_end(self, step: int) -> bool:
+        assert self._t0 is not None, "step_end without step_start"
+        dur = time.perf_counter() - self._t0
+        self._t0 = None
+        med = self.median
+        is_straggler = (
+            len(self._durations) >= self.min_history
+            and med is not None
+            and dur > self.straggler_factor * med
+        )
+        if is_straggler:
+            self.stragglers.append({"step": step, "seconds": dur, "median": med})
+        self._durations.append(dur)
+        return is_straggler

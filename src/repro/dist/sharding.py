@@ -1,0 +1,183 @@
+"""Mesh-aware sharding rules for params, batches, caches, and activations.
+
+Two mesh axes: ``data`` (batch parallel) and ``model`` (tensor parallel).
+All helpers degrade gracefully — an axis is only used when it divides the
+corresponding array dimension (``_fit_spec``), so smoke configs with tiny
+dims run replicated instead of failing.
+
+:func:`constrain` applies *logical* activation constraints by name
+("q_heads", "act", "logits", ...) and is a no-op outside a
+:func:`sharding_context` — single-device code paths pay nothing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_dist_active_mesh", default=None
+)
+
+# Logical activation names -> per-axis mesh axes, aligned to the LAST dims of
+# the array (leading dims replicated).  Shapes: acts (B, S, D), per-head
+# tensors (B, S, H, Dh), logits (B, S, V).
+_LOGICAL_RULES = {
+    "act": ("data", None, None),
+    "act_heads": ("data", None, None),
+    "q_heads": ("data", None, "model", None),
+    "kv_heads": ("data", None, "model", None),
+    "logits": ("data", None, "model"),
+}
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh):
+    """Activate ``mesh`` for :func:`constrain` within the block."""
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape: Sequence[int]) -> P:
+    """Drop spec axes that are absent from the mesh or don't divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, entries):
+        if axes is None:
+            out.append(None)
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        if all(a in mesh.shape for a in names) and dim % _axis_size(mesh, names) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _aligned_spec(rule: Sequence, ndim: int) -> P:
+    """Align a logical rule to the trailing dims of an ``ndim``-array."""
+    rule = tuple(rule)
+    if ndim >= len(rule):
+        return P(*([None] * (ndim - len(rule)) + list(rule)))
+    return P(*rule[len(rule) - ndim :])
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the logical sharding constraint ``name`` (no-op w/o a mesh)."""
+    mesh = _ACTIVE_MESH.get()
+    if mesh is None:
+        return x
+    rule = _LOGICAL_RULES.get(name)
+    if rule is None:
+        return x
+    spec = _fit_spec(mesh, _aligned_spec(rule, x.ndim), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, shape: Sequence[int]) -> NamedSharding:
+    """Shard the leading (batch) dim over ``data`` when divisible."""
+    return NamedSharding(mesh, _fit_spec(mesh, P("data"), shape))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (name-rule + generic fallback)
+# ---------------------------------------------------------------------------
+
+# Leaf-name rules, aligned to trailing dims (stacked cycle leaves carry a
+# leading n_cycles axis).  Column-parallel projections shard their output
+# features; row-parallel (wo/out_proj/w2) shard their input features.
+_PARAM_RULES = {
+    "embed": ("model", None),
+    "lm_head": (None, "model"),
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wq_c": (None, "model"),
+    "wk_c": (None, "model"),
+    "wv_c": (None, "model"),
+    "wq_b": (None, "model"),
+    "w1": (None, "model"),
+    "w3": (None, "model"),
+    "in_proj": (None, "model"),
+    "wo": ("model", None),
+    "wo_c": ("model", None),
+    "w2": ("model", None),
+    "out_proj": ("model", None),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _generic_spec(mesh: Mesh, shape: Sequence[int]) -> P:
+    """Fallback: shard the largest dim that the ``model`` axis divides."""
+    if "model" not in mesh.shape or not shape:
+        return P()
+    msize = mesh.shape["model"]
+    best, best_dim = -1, 0
+    for i, dim in enumerate(shape):
+        if dim % msize == 0 and dim > best_dim and dim >= msize:
+            best, best_dim = i, dim
+    if best < 0:
+        return P()
+    out = [None] * len(shape)
+    out[best] = "model"
+    return P(*out)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree for a parameter (shape-)pytree."""
+
+    def leaf(path, p):
+        shape = tuple(np.shape(p)) if not hasattr(p, "shape") else tuple(p.shape)
+        rule = _PARAM_RULES.get(_leaf_name(path))
+        if rule is not None and len(shape) >= 1:
+            spec = _fit_spec(mesh, _aligned_spec(rule, len(shape)), shape)
+        else:
+            spec = _fit_spec(mesh, _generic_spec(mesh, shape), shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    """NamedSharding pytree for a decode cache: batch dim over ``data``."""
+
+    def leaf(p):
+        shape = tuple(p.shape) if hasattr(p, "shape") else ()
+        return NamedSharding(mesh, _fit_spec(mesh, P("data"), shape))
+
+    return jax.tree_util.tree_map(leaf, cache)

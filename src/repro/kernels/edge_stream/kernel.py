@@ -29,15 +29,22 @@ from jax.experimental import pallas as pl
 from repro.core.streaming import PAD
 
 
-def edge_stream_kernel(edges_ref, d_ref, c_ref, v_ref, *, v_max: int, n: int):
-    """Process one edge chunk; (d, c, v) persist in VMEM across grid steps."""
+def edge_stream_kernel(
+    edges_ref, d0_ref, c0_ref, v0_ref, d_ref, c_ref, v_ref, *, v_max: int, n: int
+):
+    """Process one edge chunk; (d, c, v) persist in VMEM across grid steps.
+
+    ``(d0, c0, v0)`` seed the state at grid step 0 — a fresh run passes
+    zeros/iota, a resumed run (``repro.cluster.StreamClusterer``) passes the
+    carried :class:`ClusterState` arrays.
+    """
     t = pl.program_id(0)
 
     @pl.when(t == 0)
     def _init():
-        d_ref[...] = jnp.zeros_like(d_ref)
-        c_ref[...] = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
-        v_ref[...] = jnp.zeros_like(v_ref)
+        d_ref[...] = d0_ref[...]
+        c_ref[...] = c0_ref[...]
+        v_ref[...] = v0_ref[...]
 
     chunk = edges_ref.shape[0]
 
@@ -90,7 +97,12 @@ def build_call(n: int, chunk: int, n_chunks: int, v_max: int, interpret: bool):
     return pl.pallas_call(
         kernel,
         grid=(n_chunks,),
-        in_specs=[pl.BlockSpec((chunk, 2), lambda t: (t, 0))],
+        in_specs=[
+            pl.BlockSpec((chunk, 2), lambda t: (t, 0)),
+            state_spec,
+            state_spec,
+            state_spec,
+        ],
         out_specs=[state_spec, state_spec, state_spec],
         out_shape=[
             jax.ShapeDtypeStruct((n,), jnp.int32),  # d

@@ -1,4 +1,4 @@
-"""Jitted wrapper for the edge_stream Pallas kernel."""
+"""Jitted wrappers for the edge_stream Pallas kernel."""
 
 from __future__ import annotations
 
@@ -7,8 +7,37 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.streaming import PAD
+from repro.core.state import ClusterState, count_live_edges
+from repro.core.streaming import PAD, pad_edges_to_chunks
 from repro.kernels.edge_stream.kernel import build_call
+
+
+@functools.partial(jax.jit, static_argnames=("v_max", "chunk", "interpret"))
+def pallas_update(
+    state: ClusterState,
+    edges: jax.Array,
+    v_max: int,
+    chunk: int = 2048,
+    interpret: bool = True,
+) -> ClusterState:
+    """State-threading in-VMEM Pallas tier: ingest ``edges`` into ``state``.
+
+    Bit-exact with ``core.streaming.dense_update`` (strict stream order) —
+    the kernel seeds its VMEM-resident (d, c, v) from ``state`` at grid step
+    0, so arbitrary batch boundaries produce identical results.
+    """
+    n = state.d.shape[0]
+    padded, n_chunks = pad_edges_to_chunks(edges, chunk)
+    call = build_call(n, chunk, n_chunks, int(v_max), interpret)
+    d, c, v = call(
+        padded,
+        state.d.astype(jnp.int32),
+        state.c.astype(jnp.int32),
+        state.v.astype(jnp.int32),
+    )
+    return ClusterState(
+        d=d, c=c, v=v, edges_seen=state.edges_seen + count_live_edges(edges, PAD)
+    )
 
 
 @functools.partial(
@@ -21,7 +50,9 @@ def edge_stream_cluster(
     chunk: int = 2048,
     interpret: bool = True,
 ):
-    """Cluster an edge stream with the in-VMEM Pallas kernel.
+    """One-shot clustering with the in-VMEM Pallas kernel.
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="pallas")``.
 
     Args:
       edges: (m, 2) int32 stream (PAD rows are no-ops).
@@ -33,10 +64,8 @@ def edge_stream_cluster(
     Returns:
       (c, d, v) int32 arrays of size n — bit-exact with Algorithm 1.
     """
-    m = edges.shape[0]
-    n_chunks = max(1, -(-m // chunk))
-    padded = jnp.full((n_chunks * chunk, 2), PAD, dtype=jnp.int32)
-    padded = jax.lax.dynamic_update_slice(padded, edges.astype(jnp.int32), (0, 0))
-    call = build_call(n, chunk, n_chunks, v_max, interpret)
-    d, c, v = call(padded)
-    return c, d, v
+    s = pallas_update(
+        ClusterState.init(n), edges, int(v_max), chunk=chunk,
+        interpret=interpret,
+    )
+    return s.c, s.d, s.v

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.chunked import cluster_stream_chunked
 from repro.core.metrics import avg_f1, modularity, nmi
@@ -153,6 +153,40 @@ def test_monotone_vmax_reduces_fragmentation(seed):
         c, d, _ = cluster_stream_dense(edges, vm, n)
         counts.append(len(np.unique(c[d > 0])))
     assert counts[0] >= counts[1] >= counts[2] - 2
+
+
+def _canonical_labels_loop(c):
+    """Reference implementation of canonical_labels (per-element loop)."""
+    c = np.asarray(c)
+    _, inv = np.unique(c, return_inverse=True)
+    first = {}
+    out = np.empty_like(inv)
+    nxt = 0
+    for idx, lab in enumerate(inv):
+        if lab not in first:
+            first[lab] = nxt
+            nxt += 1
+        out[idx] = first[lab]
+    return out
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=stream_strategy, lo=st.integers(-10, 0), hi=st.integers(1, 500))
+def test_canonical_labels_matches_loop_reference(seed, lo, hi):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(lo, hi, size=rng.integers(1, 400))
+    got = canonical_labels(x)
+    want = _canonical_labels_loop(x)
+    assert np.array_equal(got, want)
+    # canonical form: labels are 0..K-1, first appearances are increasing
+    assert got.min() == 0 and got.max() == len(np.unique(x)) - 1
+    first_pos = [np.argmax(got == k) for k in range(got.max() + 1)]
+    assert first_pos == sorted(first_pos)
+
+
+def test_canonical_labels_examples():
+    assert np.array_equal(canonical_labels([7, 7, 3, 7, 3, 9]), [0, 0, 1, 0, 1, 2])
+    assert np.array_equal(canonical_labels([2]), [0])
 
 
 def test_shard_stream_partitions_preserve_edges():

@@ -6,7 +6,7 @@ asserted to ~machine precision against brute-force recomputation of Q_t.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import theory
 
