@@ -1,0 +1,58 @@
+"""CI benchmark smoke: tiny-size runs of the paper tables, written as a
+``BENCH_*.json`` artifact so the perf trajectory is recorded per commit.
+
+Sizes are deliberately small (seconds, not minutes, on a CI CPU runner) —
+the artifact's value is the *trend* of edges/s, peak edge-buffer bytes, and
+quality across commits, not absolute numbers.
+
+    PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_smoke.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+
+def run():
+    from benchmarks import memory_footprint, table1_speed, table2_quality
+
+    t0 = time.time()
+    speed = table1_speed.run(
+        sizes=(20_000, 80_000), baselines_at=20_000, batch_edges=1 << 14
+    )
+
+    # one tiny quality regime (module-level REGIMES is benchmark-scale)
+    quality = table2_quality.run(regimes={
+        "sbm-smoke": dict(n=2_000, k=100, avg_degree=10, p_intra=0.8),
+    })
+
+    return {
+        "suite": "smoke",
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "wall_s": round(time.time() - t0, 2),
+        "table1_speed": speed,
+        "table2_quality": quality,
+        "memory": memory_footprint.run(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_smoke.json")
+    args = ap.parse_args(argv)
+    report = run()
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, default=float)
+    print(f"wrote {args.out} ({report['wall_s']}s)", file=sys.stderr)
+    for r in report["table1_speed"]:
+        print(f"smoke/{r['algo']},{r['seconds']*1e6:.0f},"
+              f"{r['edges_per_s']:.0f} edges/s")
+
+
+if __name__ == "__main__":
+    main()

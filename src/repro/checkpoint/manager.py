@@ -103,8 +103,13 @@ class CheckpointManager:
                 arr = arr.view(getattr(ml_dtypes, want)).reshape(leaf.shape)
             if shard_leaves is not None:
                 out.append(jax.device_put(arr, shard_leaves[i]))
-            else:
+            elif isinstance(leaf, jax.Array):
                 out.append(jax.numpy.asarray(arr))
+            else:
+                # Host-side template leaf (numpy tiers, plain counters): keep
+                # the dtype saved on disk — jnp.asarray would silently demote
+                # int64 counters (edges_seen, stream_offset) to int32.
+                out.append(arr)
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # ------------------------------------------------------------------

@@ -13,6 +13,10 @@ Backends (``ClusterConfig(backend=...)``): oracle, dense, scan, chunked,
 pallas, multiparam, distributed — see ``available_backends()`` and
 DESIGN.md §3/§6.  Quality metrics are re-exported for convenience so
 examples and benchmarks need only this package.
+
+``edges`` may be an array, a file path, or an ``EdgeSource``
+(``repro.graph.sources``) — out-of-core streams are ingested in O(batch)
+host memory (DESIGN.md §"Ingestion"); the source types are re-exported here.
 """
 
 from repro.core.metrics import (  # noqa: F401
@@ -32,15 +36,33 @@ from repro.cluster.registry import (  # noqa: F401
     get_backend,
     register_backend,
 )
+from repro.graph.pipeline import BatchPipeline  # noqa: F401
+from repro.graph.sources import (  # noqa: F401
+    ArraySource,
+    BinaryFileSource,
+    EdgeListFileSource,
+    EdgeSource,
+    GeneratorSource,
+    ShardedSource,
+    as_source,
+)
 
 __all__ = [
     "PAD",
+    "ArraySource",
     "Backend",
     "BackendResult",
+    "BatchPipeline",
+    "BinaryFileSource",
     "ClusterConfig",
     "ClusterState",
     "Clustering",
+    "EdgeListFileSource",
+    "EdgeSource",
+    "GeneratorSource",
+    "ShardedSource",
     "StreamClusterer",
+    "as_source",
     "available_backends",
     "avg_f1",
     "canonical_labels",

@@ -2,9 +2,18 @@
 
 One call — ``cluster(edges, ClusterConfig(...))`` — dispatches through the
 backend registry; ``StreamClusterer`` exposes the same engine incrementally
-(``partial_fit`` per arriving batch, ``finalize`` for the result), with the
-:class:`ClusterState` suspendable to disk via ``repro.checkpoint.manager``
-and resumable in a later session.
+(``partial_fit`` per arriving batch, ``fit`` to drain an
+:class:`~repro.graph.sources.EdgeSource`, ``finalize`` for the result), with
+the :class:`ClusterState` suspendable to disk via ``repro.checkpoint.manager``
+and resumable in a later session — including mid-stream: checkpoints record
+the raw stream offset, so ``restore`` + ``fit(source)`` picks up an
+out-of-core file exactly where the previous session stopped.
+
+``edges`` everywhere means *array, path, or EdgeSource*: in-memory arrays
+auto-wrap (and keep the historical one-shot path), file/generator sources
+stream through the :class:`~repro.graph.pipeline.BatchPipeline` with host
+edge residency bounded by O(``batch_edges``) while the state stays the
+paper's ``3n`` ints.
 """
 
 from __future__ import annotations
@@ -21,8 +30,30 @@ from repro.core.state import ClusterState
 from repro.core.streaming import canonical_labels
 from repro.cluster.config import ClusterConfig
 from repro.cluster.registry import Backend, get_backend
+from repro.graph.pipeline import BatchPipeline
+from repro.graph.sources import ArraySource, EdgeSource, as_source
 
 _CONFIG_FILE = "cluster_config.json"
+
+# Default edges per ingest batch when streaming from a source (8 MB of int32
+# pairs — small against any graph worth streaming, large enough to keep the
+# device tiers fed).
+DEFAULT_BATCH_EDGES = 1 << 20
+
+_EMPTY_BATCH = np.zeros((0, 2), np.int32)
+
+
+def _make_pipeline(
+    source: EdgeSource, config: ClusterConfig, backend: Backend
+) -> BatchPipeline:
+    """The ingest pipeline for one run: fixed batch shape (one jit compile),
+    chunk-aligned for the Jacobi/DMA tiers so batching never moves a chunk
+    boundary (labels match the one-shot run even for ``chunked``)."""
+    return BatchPipeline(
+        source,
+        config.batch_edges or DEFAULT_BATCH_EDGES,
+        pad_multiple=config.chunk if backend.chunk_aligned else 1,
+    )
 
 
 def _check_state_n(state: ClusterState, config: ClusterConfig) -> None:
@@ -125,7 +156,13 @@ def cluster(
     """Cluster an edge stream in one call, via ``config.backend``.
 
     Args:
-      edges: (m, 2) int array in stream order (PAD rows are no-ops).
+      edges: the stream, in stream order (PAD rows are no-ops) — a (m, 2)
+        int array, a file path, or any :class:`repro.graph.sources
+        .EdgeSource`.  Out-of-core sources are ingested in
+        ``config.batch_edges``-sized batches through the resumable
+        ``partial_fit`` machinery (host edge residency O(batch), labels
+        identical to the in-memory run); arrays take the historical one-shot
+        path unless ``batch_edges`` is set.
       config: validated :class:`ClusterConfig`.
       state: optional carried :class:`ClusterState` (resumable backends only);
         fresh state is created when omitted.  Must come from a run with the
@@ -135,12 +172,29 @@ def cluster(
 
     Returns:
       a :class:`Clustering` bundling labels, state, and edge-free metrics.
+      Streamed runs add ``info["peak_buffer_bytes"]`` /
+      ``info["stream_batches"]`` (the paper's memory story, measured).
     """
+    source = as_source(edges)
     backend = get_backend(config.backend)
     if state is None:
         state = backend.init_fn(config.n)
     _check_state_n(state, config)
-    result = backend.fn(edges, config, state, mesh=mesh)
+
+    in_memory = isinstance(source, ArraySource)
+    if backend.resumable and (not in_memory or config.batch_edges is not None):
+        # One drain implementation for both entry points: the incremental
+        # clusterer owns the pipeline lifecycle (close-on-error, residency
+        # bookkeeping, info surfacing).
+        return StreamClusterer(config, state=state).fit(source).finalize()
+
+    if in_memory:
+        arg = source.edges
+    elif backend.accepts_source:
+        arg = source  # e.g. distributed: sharded via ShardedSource
+    else:
+        arg = source.materialize()  # one-shot tiers need the whole stream
+    result = backend.fn(arg, config, state, mesh=mesh)
     return Clustering(
         state=result.state,
         config=config,
@@ -150,11 +204,15 @@ def cluster(
 
 
 class StreamClusterer:
-    """Incremental ingestion: ``partial_fit`` per arriving edge batch.
+    """Incremental ingestion: ``partial_fit`` per arriving edge batch, or
+    :meth:`fit` to drain an :class:`~repro.graph.sources.EdgeSource`.
 
     The production streaming scenario — edges arrive over time, state is the
     paper's ``3n`` ints, and the run can be suspended (:meth:`save`) and
-    resumed (:meth:`restore`) across processes.  Only resumable backends
+    resumed (:meth:`restore`) across processes — including mid-stream: the
+    checkpoint records :attr:`stream_offset` (raw source rows consumed), so a
+    restored clusterer's :meth:`fit` continues an out-of-core file from the
+    exact row the previous session stopped at.  Only resumable backends
     (oracle / dense / scan / chunked / pallas) support ``partial_fit``; for
     the strictly-sequential tiers the result is identical to one
     :func:`cluster` call over the concatenated stream, regardless of batching.
@@ -173,6 +231,9 @@ class StreamClusterer:
         _check_state_n(state, config)
         self._state = state
         self._last_result = None
+        self._stream_offset = 0
+        self.peak_buffer_bytes = 0
+        self.stream_batches = 0
 
     # ------------------------------------------------------------------
     @property
@@ -183,11 +244,61 @@ class StreamClusterer:
     def edges_seen(self) -> int:
         return int(self._state.edges_seen)
 
-    def partial_fit(self, edge_batch) -> "StreamClusterer":
-        """Ingest one batch of edges; returns ``self`` for chaining."""
+    @property
+    def stream_offset(self) -> int:
+        """Raw source rows ingested so far (counts PAD/self-loop rows too —
+        this is a *stream position*, unlike ``edges_seen`` which counts live
+        edges only).  Recorded in checkpoints for mid-stream resume."""
+        return self._stream_offset
+
+    def partial_fit(self, edge_batch, *, raw_rows: Optional[int] = None) -> "StreamClusterer":
+        """Ingest one batch of edges; returns ``self`` for chaining.
+
+        ``raw_rows``: how many raw stream rows this batch represents (defaults
+        to the batch length) — :meth:`fit` passes the pre-padding row count so
+        ``stream_offset`` tracks the source, not the padded device shape.
+        """
         result = self._backend.fn(edge_batch, self.config, self._state)
         self._state = result.state
         self._last_result = result
+        self._stream_offset += int(
+            raw_rows if raw_rows is not None else np.shape(edge_batch)[0]
+        )
+        return self
+
+    def fit(
+        self,
+        edges,
+        *,
+        max_batches: Optional[int] = None,
+    ) -> "StreamClusterer":
+        """Stream a source through ``partial_fit`` from :attr:`stream_offset`.
+
+        ``edges``: array, path, or :class:`~repro.graph.sources.EdgeSource`.
+        Ingestion starts at the current :attr:`stream_offset` (0 for a fresh
+        clusterer), so calling ``fit`` with the same source after a
+        :meth:`restore` resumes mid-stream rather than replaying.
+        ``max_batches`` bounds this call (suspend points for cooperative
+        preemption); returns ``self``.
+        """
+        source = as_source(edges)
+        pipe = _make_pipeline(source, self.config, self._backend)
+        batches = pipe.batches(start=self._stream_offset)
+        n = 0
+        try:
+            for batch in batches:
+                self.partial_fit(batch.edges, raw_rows=batch.n_rows)
+                n += 1
+                if max_batches is not None and n >= max_batches:
+                    break
+        finally:
+            # deterministic suspension: shut the prefetch thread down before
+            # reading the residency figure or returning control
+            batches.close()
+        self.peak_buffer_bytes = max(
+            self.peak_buffer_bytes, pipe.peak_buffer_bytes
+        )
+        self.stream_batches += n
         return self
 
     def finalize(self) -> Clustering:
@@ -197,10 +308,13 @@ class StreamClusterer:
             raw = self._last_result.labels
             info = self._last_result.info
         else:  # no batch ingested yet: every node is its own singleton
-            empty = np.zeros((0, 2), np.int32)
-            result = self._backend.fn(empty, self.config, self._state)
+            result = self._backend.fn(_EMPTY_BATCH, self.config, self._state)
             self._state = result.state
             raw, info = result.labels, result.info
+        if self.stream_batches:  # surfaced like streamed cluster() calls
+            info = dict(info)
+            info["peak_buffer_bytes"] = self.peak_buffer_bytes
+            info["stream_batches"] = self.stream_batches
         return Clustering(
             state=self._state, config=self.config, raw_labels=raw, info=info
         )
@@ -214,14 +328,22 @@ class StreamClusterer:
 
         The config is written first via atomic replace, so a preemption at
         any point leaves either a restorable checkpoint or a clean
-        "no checkpoints" failure — never a state/config torn pair.
+        "no checkpoints" failure — never a state/config torn pair.  The raw
+        stream offset is a leaf of the checkpoint pytree itself, so state
+        and stream position can never tear apart.
         """
         mgr = CheckpointManager(directory)  # creates the directory
         tmp = os.path.join(directory, _CONFIG_FILE + ".tmp")
         with open(tmp, "w") as f:
             f.write(self.config.to_json())
         os.replace(tmp, os.path.join(directory, _CONFIG_FILE))
-        return mgr.save(self.edges_seen, {"cluster_state": self._state})
+        return mgr.save(
+            self.edges_seen,
+            {
+                "cluster_state": self._state,
+                "stream_offset": np.int64(self._stream_offset),
+            },
+        )
 
     @classmethod
     def restore(
@@ -247,6 +369,24 @@ class StreamClusterer:
                     f"{config.backend!r} ({new_space} label space)"
                 )
         backend = get_backend(config.backend)
-        template = {"cluster_state": backend.init_fn(config.n)}
-        restored = CheckpointManager(directory).restore(template)
-        return cls(config, state=restored["cluster_state"])
+        mgr = CheckpointManager(directory)
+        # Restore against a host-side template: numpy leaves come back with
+        # the exact on-disk dtypes, so the int64 counters (edges_seen,
+        # stream_offset) are not demoted to int32 the way device placement
+        # would.  Device tiers re-place the state themselves (to_device).
+        state_template = backend.init_fn(config.n).to_numpy()
+        template = {
+            "cluster_state": state_template,
+            "stream_offset": np.int64(0),
+        }
+        try:
+            restored = mgr.restore(template)
+            offset = int(restored["stream_offset"])
+        except FileNotFoundError:
+            # pre-offset checkpoint layout (no stream_offset leaf): restore
+            # state alone and start stream accounting from zero
+            restored = mgr.restore({"cluster_state": state_template})
+            offset = 0
+        sc = cls(config, state=restored["cluster_state"])
+        sc._stream_offset = offset
+        return sc

@@ -95,6 +95,7 @@ def _scan(edges, config, state, mesh=None) -> BackendResult:
     "pallas",
     resumable=True,
     bit_exact=True,
+    chunk_aligned=True,
     description="serial-in-VMEM Pallas kernel (bit-exact, TPU-native)",
 )
 def _pallas(edges, config, state, mesh=None) -> BackendResult:
@@ -116,6 +117,7 @@ def _pallas(edges, config, state, mesh=None) -> BackendResult:
     "chunked",
     resumable=True,
     bit_exact=False,
+    chunk_aligned=True,
     description="Jacobi chunked tier (vectorised decisions, scatter conflict "
     "resolution)",
 )
@@ -160,6 +162,7 @@ def _multiparam_backend(edges, config, state, mesh=None) -> BackendResult:
     "distributed",
     resumable=False,
     bit_exact=False,
+    accepts_source=True,
     description="multi-device local shards + contracted global merge pass",
 )
 def _distributed(edges, config, state, mesh=None) -> BackendResult:
@@ -168,7 +171,7 @@ def _distributed(edges, config, state, mesh=None) -> BackendResult:
     if mesh is None and n_shards is None:
         n_shards = jax.device_count()
     labels, info = distributed_cluster(
-        np.asarray(edges),
+        edges,  # array or EdgeSource; sharded out-of-core by ShardedSource
         int(config.v_max),
         config.n,
         mesh=mesh,

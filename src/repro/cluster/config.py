@@ -24,6 +24,16 @@ class ClusterConfig:
         ``multiparam`` / ``distributed``).
       chunk: edges per device step for the ``chunked`` / ``pallas`` /
         ``distributed`` tiers (Jacobi batch size resp. DMA granularity).
+      batch_edges: edges per ingest batch when streaming from an
+        :class:`repro.graph.sources.EdgeSource` (host edge-buffer residency
+        is O(batch_edges), the stream itself never materializes).  ``None``
+        streams out-of-core sources at a default batch size and keeps
+        in-memory arrays on the historical one-shot path; setting it forces
+        batched ingestion even for arrays.  Applies to the resumable
+        backends only — the one-shot tiers (``multiparam``,
+        ``distributed``) consume the whole stream regardless.  Rounded up
+        to a ``chunk`` multiple for the chunk-aligned tiers so batching
+        never moves a Jacobi/DMA boundary.
       v_maxes: multi-sweep thresholds for ``backend="multiparam"`` (paper
         §2.5: one pass, many parameters).
       criterion: edge-free sweep selector, ``"density"`` or ``"entropy"``.
@@ -39,6 +49,7 @@ class ClusterConfig:
     v_max: Optional[int] = None
     backend: str = "chunked"
     chunk: int = 1024
+    batch_edges: Optional[int] = None
     v_maxes: Optional[Tuple[int, ...]] = None
     criterion: str = "density"
     n_shards: Optional[int] = None
@@ -57,6 +68,10 @@ class ClusterConfig:
             raise ValueError(f"n must be a positive int, got {self.n!r}")
         if self.chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.batch_edges is not None and self.batch_edges < 1:
+            raise ValueError(
+                f"batch_edges must be >= 1, got {self.batch_edges}"
+            )
         if self.criterion not in ("density", "entropy"):
             raise ValueError(
                 f"criterion must be 'density' or 'entropy', got "

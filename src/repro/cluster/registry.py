@@ -42,6 +42,11 @@ class Backend:
     bit_exact: bool  # strict stream order (identical to Algorithm 1)
     label_space: str = "dense"  # "dense": c[i] is a node id, v[cid] its volume
     #                             "oracle": 1-based paper ids, v[cid-1]
+    chunk_aligned: bool = False  # ingest batches must be config.chunk
+    #   multiples for batching-invariant labels (Jacobi/DMA granularity); the
+    #   BatchPipeline rounds its batch size up accordingly
+    accepts_source: bool = False  # fn handles an EdgeSource itself (no
+    #   materialization needed even though not resumable)
     description: str = ""
 
 
@@ -55,6 +60,8 @@ def register_backend(
     resumable: bool = False,
     bit_exact: bool = False,
     label_space: str = "dense",
+    chunk_aligned: bool = False,
+    accepts_source: bool = False,
     description: str = "",
 ):
     """Decorator: register ``fn`` as backend ``name``.  Re-registration under
@@ -71,6 +78,8 @@ def register_backend(
             resumable=resumable,
             bit_exact=bit_exact,
             label_space=label_space,
+            chunk_aligned=chunk_aligned,
+            accepts_source=accepts_source,
             description=description,
         )
         return fn

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.state import ClusterState, count_live_edges
-from repro.core.streaming import PAD, pad_edges_to_chunks
+from repro.graph.pipeline import PAD, pad_edges_to_chunks
 
 Array = jax.Array
 

@@ -31,7 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.chunked import chunked_update
 from repro.core.state import ClusterState
 from repro.core.streaming import PAD
-from repro.graph.stream import shard_stream
+from repro.graph.sources import ShardedSource, as_source
 
 Array = jax.Array
 
@@ -107,7 +107,7 @@ def _merge_phase(
 
 
 def distributed_cluster(
-    edges: np.ndarray,
+    edges,
     v_max: int,
     n: int,
     mesh: Optional[Mesh] = None,
@@ -115,12 +115,21 @@ def distributed_cluster(
     chunk: int = 1024,
     v_max2: Optional[int] = None,
 ) -> Tuple[np.ndarray, dict]:
-    """Cluster an edge stream across devices.  Returns (labels, info)."""
+    """Cluster an edge stream across devices.  Returns (labels, info).
+
+    ``edges`` may be a host array or any :class:`repro.graph.sources
+    .EdgeSource`; out-of-core sources are split contiguously by
+    ``ShardedSource`` with a single streaming fill (the stacked shard array
+    itself is O(m) by necessity — all shards live on devices at once).
+    """
     if mesh is not None:
         n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     n_shards = n_shards or 1
     v_max2 = v_max2 if v_max2 is not None else v_max
-    shards = jnp.asarray(shard_stream(edges, n_shards))
+    # ShardedSource.stacked fills (n_shards, shard_len, 2) with one streaming
+    # pass; for an in-memory array that is the same single copy shard_stream
+    # would make, so every source type takes this one path.
+    shards = jnp.asarray(ShardedSource(as_source(edges), n_shards).stacked())
 
     local = jax.jit(
         functools.partial(_local_phase, v_max=v_max, n=n, chunk=chunk)

@@ -39,12 +39,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import ClusterState, count_live_edges
+from repro.graph.pipeline import PAD, pad_edges_to_chunks  # noqa: F401
+#   Canonical home of the sentinel and chunk padding is now
+#   repro.graph.pipeline; both names are re-exported here for the historical
+#   import path (core.chunked / kernels used to import them from this module).
 
 Array = jax.Array
-
-# Sentinel node id used to pad edge chunks to fixed shapes; padded edges are
-# no-ops in every tier.
-PAD = -1
 
 
 # ---------------------------------------------------------------------------
@@ -144,20 +144,6 @@ def cluster_stream_oracle(edges: np.ndarray, v_max: int) -> Dict[int, int]:
     c: Dict[int, int] = {}
     _oracle_loop(d, v, c, 1, edges, v_max)
     return c
-
-
-def pad_edges_to_chunks(edges: Array, chunk: int):
-    """Pad a (m, 2) device batch with PAD rows up to a ``chunk`` multiple.
-
-    Shared by the chunked and Pallas tiers (their DMA/Jacobi granularity).
-    Returns ``(padded, n_chunks)`` with ``padded`` of shape
-    ``(n_chunks * chunk, 2)``; empty batches yield one all-PAD chunk.
-    """
-    m = edges.shape[0]
-    n_chunks = max(1, -(-m // chunk))
-    padded = jnp.full((n_chunks * chunk, 2), PAD, dtype=jnp.int32)
-    padded = jax.lax.dynamic_update_slice(padded, edges.astype(jnp.int32), (0, 0))
-    return padded, n_chunks
 
 
 # ---------------------------------------------------------------------------

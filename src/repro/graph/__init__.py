@@ -1,1 +1,11 @@
-from repro.graph import generators, stream  # noqa: F401
+from repro.graph import generators, pipeline, sources, stream  # noqa: F401
+from repro.graph.pipeline import PAD, Batch, BatchPipeline  # noqa: F401
+from repro.graph.sources import (  # noqa: F401
+    ArraySource,
+    BinaryFileSource,
+    EdgeListFileSource,
+    EdgeSource,
+    GeneratorSource,
+    ShardedSource,
+    as_source,
+)

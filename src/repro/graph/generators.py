@@ -45,14 +45,19 @@ def sbm_stream(
     starts = np.searchsorted(sorted_labels, np.arange(n_communities))
     ends = np.searchsorted(sorted_labels, np.arange(n_communities), side="right")
     sizes = ends - starts
+    # Intra edges draw only from communities that actually got nodes — an
+    # empty block's `starts` would index past `order` (or into the next
+    # block).  When nothing is empty this is draw-for-draw identical to
+    # sampling community ids directly.
+    nonempty = np.flatnonzero(sizes > 0)
 
     intra = rng.random(m) < p_intra
     # Community of each intra edge ~ proportional to block size (uniform edge).
-    comm = rng.integers(0, n_communities, size=m)
+    comm = nonempty[rng.integers(0, len(nonempty), size=m)]
     u = np.empty(m, dtype=np.int64)
     w = np.empty(m, dtype=np.int64)
 
-    ss = np.maximum(sizes[comm], 1)
+    ss = sizes[comm]
     a = starts[comm] + rng.integers(0, 2**62, size=m) % ss
     b = starts[comm] + rng.integers(0, 2**62, size=m) % ss
     u_i, w_i = order[a], order[b]
@@ -81,11 +86,80 @@ def chung_lu_stream(
     w = (np.arange(1, n + 1, dtype=np.float64)) ** (-1.0 / (gamma - 1.0))
     p = w / w.sum()
     cdf = np.cumsum(p)
+    cdf[-1] = 1.0  # float cumsum undershoots 1.0; a draw past it would
+    #               searchsorted to index n, off the end of `perm`
     u = np.searchsorted(cdf, rng.random(m))
     v = np.searchsorted(cdf, rng.random(m))
     v = np.where(u == v, (v + 1) % n, v)
     perm = rng.permutation(n)  # decorrelate node id from degree
     return np.stack([perm[u], perm[v]], axis=1).astype(np.int32)
+
+
+def chung_lu_segments(n: int, gamma: float = 2.5, seed: int = 0):
+    """Segment generator for a power-law stream (``GeneratorSource`` form).
+
+    Returns ``segment(start, length) -> (length, 2) int32`` where the RNG is
+    seeded per absolute offset ``(seed, start)``, so any row range of the
+    stream can be regenerated independently — benchmark-scale graphs stream
+    with O(segment) edge memory, and a suspended run resumes mid-stream
+    without replaying.  (A different realization than :func:`chung_lu_stream`,
+    which draws the full stream from one RNG; same distribution.)
+
+    The O(n) weight CDF and id permutation are computed once per source —
+    node-space memory, like the clustering state itself.
+    """
+    rng = np.random.default_rng(seed)
+    w = (np.arange(1, n + 1, dtype=np.float64)) ** (-1.0 / (gamma - 1.0))
+    cdf = np.cumsum(w / w.sum())
+    cdf[-1] = 1.0  # float cumsum undershoots 1.0; a draw past it would
+    #               searchsorted to index n, off the end of `perm`
+    perm = rng.permutation(n)
+
+    def segment(start: int, length: int) -> np.ndarray:
+        r = np.random.default_rng([seed, start])
+        u = np.searchsorted(cdf, r.random(length))
+        v = np.searchsorted(cdf, r.random(length))
+        v = np.where(u == v, (v + 1) % n, v)
+        return np.stack([perm[u], perm[v]], axis=1).astype(np.int32)
+
+    return segment
+
+
+def sbm_segments(
+    n: int,
+    n_communities: int,
+    p_intra: float = 0.8,
+    seed: int = 0,
+):
+    """Segment generator for a planted-partition stream + its ground truth.
+
+    Returns ``(segment_fn, labels)``; like :func:`chung_lu_segments`, each
+    segment is regenerable from its absolute offset alone.  The community
+    assignment (O(n), node-space memory) is fixed by ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_communities, size=n).astype(np.int32)
+    order = np.argsort(labels, kind="stable")
+    sorted_labels = labels[order]
+    starts = np.searchsorted(sorted_labels, np.arange(n_communities))
+    ends = np.searchsorted(sorted_labels, np.arange(n_communities), side="right")
+    sizes = ends - starts
+    # See sbm_stream: empty communities must not be drawn for intra edges.
+    nonempty = np.flatnonzero(sizes > 0)
+
+    def segment(start: int, length: int) -> np.ndarray:
+        r = np.random.default_rng([seed, 1, start])
+        intra = r.random(length) < p_intra
+        comm = nonempty[r.integers(0, len(nonempty), size=length)]
+        ss = sizes[comm]
+        a = starts[comm] + r.integers(0, 2**62, size=length) % ss
+        b = starts[comm] + r.integers(0, 2**62, size=length) % ss
+        u = np.where(intra, order[a], r.integers(0, n, size=length))
+        w_ = np.where(intra, order[b], r.integers(0, n, size=length))
+        w_ = np.where(u == w_, (w_ + 1) % n, w_)
+        return np.stack([u, w_], axis=1).astype(np.int32)
+
+    return segment, labels
 
 
 def ring_of_cliques(

@@ -1,0 +1,308 @@
+"""Batching/padding pipeline between an edge source and the device tiers.
+
+This module is the single home of the stream-shape plumbing (DESIGN.md
+§"Ingestion"):
+
+* :data:`PAD` — the sentinel node id padding fixed device shapes (a PAD edge
+  is a no-op in every clustering tier).
+* :func:`pad_batch` / :func:`pad_to_chunks` (host, numpy) and
+  :func:`pad_edges_to_chunks` (device, jit-traceable) — previously duplicated
+  between ``graph/stream.py`` and ``core/streaming.py``; both old names
+  remain as shims over these.
+* :class:`BatchPipeline` — pulls raw slices from an
+  :class:`repro.graph.sources.EdgeSource`, re-chunks them into *fixed-size*
+  batches (so every jitted tier compiles exactly once per run), pads with
+  PAD, and double-buffers production on a background thread so host parsing
+  /generation overlaps device compute.  Peak host edge-buffer residency is
+  tracked (``peak_buffer_bytes``) — the paper's memory claim is state =
+  ``3n`` ints; the pipeline keeps edges at O(batch), not O(m).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Iterable, Iterator, NamedTuple, Optional
+
+import numpy as np
+
+# Sentinel node id used to pad edge batches/chunks to fixed shapes; padded
+# edges are no-ops in every clustering tier.  (Canonical definition — re-
+# exported by ``repro.core.streaming`` and ``repro.graph.stream`` for
+# backwards compatibility.)
+PAD = -1
+
+
+# ---------------------------------------------------------------------------
+# Padding primitives (host + device)
+# ---------------------------------------------------------------------------
+
+def pad_batch(edges: np.ndarray, length: int) -> np.ndarray:
+    """Pad a host ``(m, 2)`` batch with PAD rows up to exactly ``length``.
+
+    Zero-copy when the batch is already full-length int32 (the steady-state
+    case: every non-final pipeline batch).
+    """
+    edges = np.asarray(edges)
+    m = edges.shape[0]
+    if m > length:
+        raise ValueError(f"batch of {m} rows exceeds pad length {length}")
+    if m == length and edges.dtype == np.int32:
+        return edges
+    out = np.full((length, 2), PAD, dtype=np.int32)
+    out[:m] = edges
+    return out
+
+
+def pad_to_chunks(edges: np.ndarray, chunk: int) -> np.ndarray:
+    """(m, 2) -> (ceil(m/chunk), chunk, 2), padded with PAD edges (host).
+
+    Always a fresh array (historical contract) — callers may mutate the
+    result without aliasing their input; the pipeline's zero-copy fast path
+    lives in :func:`pad_batch` instead.
+    """
+    edges = np.asarray(edges)
+    m = edges.shape[0]
+    n_chunks = max(1, -(-m // chunk))
+    out = np.full((n_chunks * chunk, 2), PAD, dtype=np.int32)
+    out[:m] = edges
+    return out.reshape(n_chunks, chunk, 2)
+
+
+def pad_edges_to_chunks(edges, chunk: int):
+    """Pad a (m, 2) *device* batch with PAD rows up to a ``chunk`` multiple.
+
+    Jit-traceable (shapes depend only on ``edges.shape`` and ``chunk``) —
+    the DMA/Jacobi granularity of the chunked and Pallas tiers.  Returns
+    ``(padded, n_chunks)`` with ``padded`` of shape ``(n_chunks * chunk, 2)``;
+    empty batches yield one all-PAD chunk.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    m = edges.shape[0]
+    n_chunks = max(1, -(-m // chunk))
+    padded = jnp.full((n_chunks * chunk, 2), PAD, dtype=jnp.int32)
+    padded = jax.lax.dynamic_update_slice(padded, edges.astype(jnp.int32), (0, 0))
+    return padded, n_chunks
+
+
+def round_up(value: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``value``."""
+    return -(-value // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Re-chunking: arbitrary-size raw slices -> exact-size batches
+# ---------------------------------------------------------------------------
+
+def rechunk(slices: Iterable[np.ndarray], size: int) -> Iterator[np.ndarray]:
+    """Regroup arbitrary-length ``(k, 2)`` slices into exact ``size``-row
+    batches (final batch may be short).
+
+    The batch boundaries depend only on ``size`` — never on how the source
+    happened to slice the stream — which is what makes labels invariant
+    across sources for a fixed batch size.  Full batches carved out of a
+    single large slice are views (zero-copy; mmap'd sources never touch the
+    heap for them).
+    """
+    pending: list = []
+    have = 0
+    for sl in slices:
+        sl = np.asarray(sl)
+        if sl.size == 0:
+            continue
+        pos = 0
+        if have:
+            take = min(size - have, sl.shape[0])
+            pending.append(sl[:take])
+            have += take
+            pos = take
+            if have == size:
+                yield np.concatenate(pending).astype(np.int32, copy=False)
+                pending, have = [], 0
+        while sl.shape[0] - pos >= size:
+            yield sl[pos : pos + size]
+            pos += size
+        if pos < sl.shape[0]:
+            pending.append(sl[pos:])
+            have = sl.shape[0] - pos
+    if have:
+        yield np.concatenate(pending).astype(np.int32, copy=False)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline
+# ---------------------------------------------------------------------------
+
+class Batch(NamedTuple):
+    """One pipeline batch: fixed-shape padded edges + raw-stream bookkeeping."""
+
+    edges: np.ndarray  # (batch_edges, 2) int32, PAD tail
+    n_rows: int  # raw source rows in this batch (before PAD padding)
+    offset: int  # raw rows consumed from the source before this batch
+
+
+class BatchPipeline:
+    """Fixed-shape batching + host/device overlap for an edge source.
+
+    Every yielded :class:`Batch` has shape ``(batch_edges, 2)`` (PAD-padded),
+    so jitted backends compile once.  ``batch_edges`` is rounded up to
+    ``pad_multiple`` (the Jacobi/DMA chunk of the chunked/pallas tiers) —
+    with full batches aligned to chunk boundaries, the chunked tier's
+    grouping is identical to a one-shot run over the whole stream.
+
+    ``prefetch`` batches are produced ahead on a background thread (double
+    buffering by default), so file parsing / synthetic generation overlaps
+    device compute.  Host edge residency is bounded by
+    ``(prefetch + 1) * batch_edges`` rows of pipeline buffering plus the raw
+    source slices still pinnable by re-chunking views (a slice is counted
+    until a full batch of rows has arrived after it).
+    :attr:`peak_buffer_bytes` tracks both levels — zero-copy views are
+    counted twice, so the steady-state figure is an over- rather than
+    under-estimate (transient concatenation copies are the one exclusion).
+    An ``ArraySource``'s single slice is the whole array: for in-memory
+    streams the metric honestly reports the resident edge list.
+    """
+
+    def __init__(
+        self,
+        source,
+        batch_edges: int,
+        *,
+        pad_multiple: int = 1,
+        prefetch: int = 2,
+    ):
+        if batch_edges < 1:
+            raise ValueError(f"batch_edges must be >= 1, got {batch_edges}")
+        if pad_multiple < 1:
+            raise ValueError(f"pad_multiple must be >= 1, got {pad_multiple}")
+        self.source = source
+        self.batch_edges = round_up(batch_edges, pad_multiple)
+        self.prefetch = max(0, int(prefetch))
+        self.peak_buffer_bytes = 0
+        self.batches_produced = 0
+        self._inflight_bytes = 0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _acquire(self, nbytes: int) -> None:
+        with self._lock:
+            self._inflight_bytes += nbytes
+            if self._inflight_bytes > self.peak_buffer_bytes:
+                self.peak_buffer_bytes = self._inflight_bytes
+
+    def _release(self, nbytes: int) -> None:
+        with self._lock:
+            self._inflight_bytes -= nbytes
+
+    def _counted_slices(self, start: int) -> Iterator[np.ndarray]:
+        """Pass raw source slices through while counting them toward
+        residency — parse blocks / generator segments are real host memory
+        even when the batches carved from them are views.
+
+        A slice stays counted until ``batch_edges`` rows have arrived after
+        it: only then can no ``rechunk`` pending-view still pin it alive.
+        """
+        held: deque = deque()  # (nbytes, rows) per still-pinnable slice
+        held_rows = 0  # running total, so pruning is O(1) per slice
+        try:
+            for sl in self.source.iter_slices(start):
+                sl = np.asarray(sl)
+                held.append((int(sl.nbytes), int(sl.shape[0])))
+                held_rows += int(sl.shape[0])
+                while len(held) > 1 and held_rows - held[0][1] >= self.batch_edges:
+                    nbytes, rows = held.popleft()
+                    held_rows -= rows
+                    self._release(nbytes)
+                self._acquire(int(sl.nbytes))
+                yield sl
+        finally:
+            for nbytes, _ in held:
+                self._release(nbytes)
+
+    def _produce(self, start: int) -> Iterator[Batch]:
+        """Raw producer: rechunk + pad + residency accounting.  Runs on the
+        prefetch thread."""
+        offset = start
+        slices = self._counted_slices(start)
+        stream = rechunk(slices, self.batch_edges)
+        try:
+            for raw in stream:
+                padded = pad_batch(raw, self.batch_edges)
+                self._acquire(padded.nbytes)
+                yield Batch(edges=padded, n_rows=raw.shape[0], offset=offset)
+                offset += raw.shape[0]
+        finally:
+            stream.close()
+            slices.close()
+
+    def batches(self, start: int = 0) -> Iterator[Batch]:
+        """Yield fixed-shape batches beginning at raw stream row ``start``."""
+        inner = _prefetch_iter(
+            self._produce(start),
+            self.prefetch,
+            on_drop=lambda b: self._release(b.edges.nbytes),
+        )
+        prev: Optional[Batch] = None
+        try:
+            for batch in inner:
+                if prev is not None:
+                    self._release(prev.edges.nbytes)
+                prev = batch
+                self.batches_produced += 1
+                yield batch
+        finally:
+            if prev is not None:
+                self._release(prev.edges.nbytes)
+            inner.close()
+
+    def __iter__(self) -> Iterator[Batch]:
+        return self.batches()
+
+
+_SENTINEL = object()
+
+
+def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
+    """Run ``gen`` up to ``depth`` items ahead on one background thread.
+
+    The single worker pulls items sequentially (generators are not
+    thread-safe — one puller only); at most ``depth`` results are buffered,
+    so producer memory stays bounded even if the consumer stalls.  On early
+    close, items already produced but never consumed are handed to
+    ``on_drop`` so the caller can undo any per-item accounting.
+    """
+    if depth <= 0:
+        yield from gen
+        return
+    ex = ThreadPoolExecutor(max_workers=1)
+
+    def pull():
+        try:
+            return next(gen)
+        except StopIteration:
+            return _SENTINEL
+
+    futures: deque = deque()
+    try:
+        for _ in range(depth):
+            futures.append(ex.submit(pull))
+        while futures:
+            item = futures.popleft().result()
+            if item is _SENTINEL:
+                break
+            futures.append(ex.submit(pull))
+            yield item
+    finally:
+        for f in futures:
+            if not f.cancel():
+                try:
+                    item = f.result()
+                except Exception:
+                    item = _SENTINEL
+                if item is not _SENTINEL and on_drop is not None:
+                    on_drop(item)
+        ex.shutdown(wait=True)
+        gen.close()

@@ -1,0 +1,369 @@
+"""Out-of-core edge sources: the ingestion stage of the streaming clusterer.
+
+The paper's setting is a stream far larger than host memory (up to 1.8e9
+edges) against ``3n`` ints of state — so no entry point may require the full
+``(m, 2)`` edge array materialized.  An :class:`EdgeSource` abstracts *where
+the stream comes from*; the :class:`repro.graph.pipeline.BatchPipeline`
+handles *how it reaches the device* (fixed shapes, PAD padding, double
+buffering).  Sources yield raw variable-length slices; batch boundaries are
+set solely by the pipeline, so a given stream produces identical batches —
+and identical labels — no matter which source backs it.
+
+Concrete sources:
+
+* :class:`ArraySource` — in-memory ``(m, 2)`` array (the auto-wrap for the
+  existing array-based API).
+* :class:`EdgeListFileSource` — whitespace-separated text edge lists (SNAP
+  format), constant-memory line parsing.
+* :class:`BinaryFileSource` — mmap'd int32 pairs; slices are zero-copy views.
+* :class:`GeneratorSource` — deterministic per-offset synthetic segments
+  (SBM / Chung–Lu) so benchmark-scale graphs stream without materialization.
+* :class:`ShardedSource` — contiguous equal split for the distributed tier.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Iterator, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.graph.pipeline import PAD, rechunk
+
+PathLike = Union[str, os.PathLike]
+
+
+class EdgeSource:
+    """An ordered edge stream readable from any raw-row offset.
+
+    Contract: :meth:`iter_slices` yields ``(k, 2)`` integer arrays (any
+    ``k >= 0``, any internal slicing) whose concatenation from ``start`` is
+    the tail of *the* stream — the slicing must not depend on anything but
+    the source's own constants, and restarting from the same ``start`` must
+    reproduce the same rows (required for suspend/resume mid-stream).
+    ``n_edges`` is ``None`` when the length is unknown without a full scan
+    (text files).
+    """
+
+    @property
+    def n_edges(self) -> Optional[int]:
+        return None
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    def batches(self, batch_edges: int, start: int = 0) -> Iterator[np.ndarray]:
+        """Exact ``batch_edges``-row batches (final may be short), unpadded.
+        Boundary placement depends only on ``batch_edges`` and ``start``."""
+        return rechunk(self.iter_slices(start), batch_edges)
+
+    def count_edges(self) -> int:
+        """Total raw rows; scans the stream when ``n_edges`` is unknown."""
+        if self.n_edges is not None:
+            return self.n_edges
+        return sum(int(sl.shape[0]) for sl in self.iter_slices(0))
+
+    def materialize(self) -> np.ndarray:
+        """The full stream as one host array — O(m) memory, for the
+        non-resumable tiers (multiparam) and tests only."""
+        parts = [np.asarray(sl, np.int32) for sl in self.iter_slices(0)]
+        if not parts:
+            return np.zeros((0, 2), np.int32)
+        return np.concatenate(parts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# In-memory
+# ---------------------------------------------------------------------------
+
+class ArraySource(EdgeSource):
+    """Wraps an in-memory ``(m, 2)`` array; slices are views."""
+
+    def __init__(self, edges):
+        edges = np.asarray(edges)
+        if edges.ndim != 2 or edges.shape[1] != 2:
+            raise ValueError(f"expected (m, 2) edge array, got {edges.shape}")
+        self.edges = edges
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edges.shape[0])
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        if start < self.edges.shape[0]:
+            yield self.edges[start:]
+
+    def materialize(self) -> np.ndarray:
+        return self.edges
+
+
+# ---------------------------------------------------------------------------
+# Files
+# ---------------------------------------------------------------------------
+
+class EdgeListFileSource(EdgeSource):
+    """Text edge list (SNAP format): one ``i j`` pair per line.  Skipped:
+    blank lines, ``#``/``%`` comment lines, and textual header lines (first
+    character not a digit/sign — e.g. ``FromNodeId  ToNodeId``).  Extra
+    columns (weights/timestamps) are ignored; a numeric line with fewer than
+    two fields is a hard error naming the file and line.  Parsing is
+    line-buffered — O(block_lines) memory regardless of file size.
+
+    Byte-offset resume points are recorded at every slice boundary as the
+    file is read, so a later ``iter_slices(start)`` (the suspend/resume
+    preemption loop) seeks near ``start`` instead of re-parsing the whole
+    prefix — resume cost is O(remaining), not O(file).
+    """
+
+    def __init__(
+        self,
+        path: PathLike,
+        comments: Sequence[str] = ("#", "%"),
+        block_lines: int = 1 << 16,
+    ):
+        if block_lines < 1:
+            raise ValueError(f"block_lines must be >= 1, got {block_lines}")
+        self.path = os.fspath(path)
+        self.comments = tuple(comments)
+        self._comments = tuple(c.encode() for c in comments)
+        self.block_lines = block_lines
+        self._n: Optional[int] = None  # cached after any full pass
+        # row -> (byte offset, line number): seekable resume points
+        self._resume = {0: (0, 0)}
+
+    @property
+    def n_edges(self) -> Optional[int]:
+        return self._n
+
+    def _best_resume(self, start: int) -> tuple:
+        row = max(r for r in self._resume if r <= start)
+        pos, lineno = self._resume[row]
+        return row, pos, lineno
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        buf: List[int] = []
+        row, pos, lineno = self._best_resume(start)
+        with open(self.path, "rb") as f:
+            f.seek(pos)
+            while True:
+                line = f.readline()
+                if not line:
+                    break
+                lineno += 1
+                s = line.strip()
+                if not s or s.startswith(self._comments):
+                    continue
+                head = s[:1]
+                if not (head.isdigit() or head in (b"+", b"-")):
+                    continue  # textual header line
+                row += 1
+                if row <= start:
+                    continue
+                parts = s.split(maxsplit=2)
+                try:
+                    i, j = int(parts[0]), int(parts[1])
+                except (IndexError, ValueError):
+                    raise ValueError(
+                        f"{self.path}:{lineno}: expected an 'i j' edge "
+                        f"line, got {s.decode(errors='replace')!r}"
+                    ) from None
+                buf.append(i)
+                buf.append(j)
+                if len(buf) >= 2 * self.block_lines:
+                    self._resume[row] = (f.tell(), lineno)
+                    yield np.array(buf, np.int32).reshape(-1, 2)
+                    buf = []
+        if buf:
+            yield np.array(buf, np.int32).reshape(-1, 2)
+        # reaching EOF pins the exact stream length wherever we started
+        self._n = row
+
+    def count_edges(self) -> int:
+        if self._n is None:
+            for _ in self.iter_slices(0):
+                pass
+        return self._n if self._n is not None else 0
+
+
+class BinaryFileSource(EdgeSource):
+    """mmap'd little-endian int32 ``(i, j)`` pairs; slices are zero-copy
+    memmap views, so even full-batch reads never copy into the heap."""
+
+    def __init__(self, path: PathLike, rows_per_slice: int = 1 << 20):
+        self.path = os.fspath(path)
+        self.rows_per_slice = rows_per_slice
+        nbytes = os.path.getsize(self.path)
+        if nbytes % 8:
+            raise ValueError(
+                f"{self.path}: size {nbytes} is not a whole number of int32 "
+                "edge pairs"
+            )
+        self._m = nbytes // 8
+
+    @property
+    def n_edges(self) -> int:
+        return self._m
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        if start >= self._m:
+            return
+        mm = np.memmap(self.path, dtype=np.int32, mode="r").reshape(-1, 2)
+        for pos in range(start, self._m, self.rows_per_slice):
+            yield mm[pos : pos + self.rows_per_slice]
+
+    @staticmethod
+    def write(path: PathLike, source: "EdgeSource | np.ndarray") -> "BinaryFileSource":
+        """Stream any source (or array) to disk in this format — O(slice)
+        memory."""
+        src = as_source(source)
+        with open(path, "wb") as f:
+            for sl in src.iter_slices(0):
+                np.ascontiguousarray(sl, dtype=np.int32).tofile(f)
+        return BinaryFileSource(path)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic generators
+# ---------------------------------------------------------------------------
+
+class GeneratorSource(EdgeSource):
+    """Deterministic synthetic stream generated segment-by-segment.
+
+    ``segment_fn(start, length)`` must return rows ``start .. start+length``
+    of the stream as a ``(length, 2)`` array, depending only on ``start`` /
+    ``length`` (e.g. seed the RNG with ``(seed, start)`` — see
+    ``repro.graph.generators.chung_lu_segments``).  Determinism per absolute
+    offset is what makes the stream resumable at any row and independent of
+    batch size; segments are fixed at ``segment_edges`` rows so the realized
+    stream never depends on how it is read.  Memory is O(segment_edges).
+    """
+
+    def __init__(
+        self,
+        segment_fn: Callable[[int, int], np.ndarray],
+        n_edges: int,
+        segment_edges: int = 1 << 16,
+    ):
+        if n_edges < 0:
+            raise ValueError(f"n_edges must be >= 0, got {n_edges}")
+        if segment_edges < 1:
+            raise ValueError(f"segment_edges must be >= 1, got {segment_edges}")
+        self.segment_fn = segment_fn
+        self._m = int(n_edges)
+        self.segment_edges = segment_edges
+
+    @property
+    def n_edges(self) -> int:
+        return self._m
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        seg = self.segment_edges
+        for seg_start in range((start // seg) * seg, self._m, seg):
+            length = min(seg, self._m - seg_start)
+            arr = np.asarray(self.segment_fn(seg_start, length), np.int32)
+            if arr.shape != (length, 2):
+                raise ValueError(
+                    f"segment_fn({seg_start}, {length}) returned shape "
+                    f"{arr.shape}, expected ({length}, 2)"
+                )
+            if seg_start < start:
+                arr = arr[start - seg_start :]
+            if arr.shape[0]:
+                yield arr
+
+
+# ---------------------------------------------------------------------------
+# Sharding (distributed tier)
+# ---------------------------------------------------------------------------
+
+class _WindowSource(EdgeSource):
+    """A contiguous ``[start, start + length)`` raw-row window of a base
+    source (one shard of a :class:`ShardedSource`)."""
+
+    def __init__(self, base: EdgeSource, start: int, length: int):
+        self.base = base
+        self.start = start
+        self.length = length
+
+    @property
+    def n_edges(self) -> int:
+        return self.length
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        remaining = self.length - start
+        if remaining <= 0:
+            return
+        for sl in self.base.iter_slices(self.start + start):
+            if sl.shape[0] >= remaining:
+                yield sl[:remaining]
+                return
+            remaining -= sl.shape[0]
+            yield sl
+
+
+class ShardedSource(EdgeSource):
+    """Contiguous split of a stream into ``n_shards`` equal windows.
+
+    Contiguous (not strided) so each shard preserves the stream order of its
+    slice — the paper's streaming argument ("early edges are
+    intra-community") applies within every shard.  Requires a known or
+    countable stream length (text sources pay one counting pass).
+    """
+
+    def __init__(self, base: EdgeSource, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.base = base
+        self.n_shards = n_shards
+        self._m = base.count_edges()
+        self.shard_len = -(-self._m // n_shards) if self._m else 1
+
+    @property
+    def n_edges(self) -> int:
+        return self._m
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        return self.base.iter_slices(start)
+
+    def shards(self) -> List[EdgeSource]:
+        L = self.shard_len
+        return [
+            _WindowSource(self.base, s * L, max(0, min(L, self._m - s * L)))
+            for s in range(self.n_shards)
+        ]
+
+    def stacked(self) -> np.ndarray:
+        """The device-ready ``(n_shards, shard_len, 2)`` PAD-padded stack.
+
+        O(m) output by necessity (all shards live on devices at once); built
+        with a single streaming fill — no second full host copy.
+        """
+        L = self.shard_len
+        out = np.full((self.n_shards * L, 2), PAD, dtype=np.int32)
+        pos = 0
+        for sl in self.base.iter_slices(0):
+            out[pos : pos + sl.shape[0]] = sl
+            pos += sl.shape[0]
+        return out.reshape(self.n_shards, L, 2)
+
+
+# ---------------------------------------------------------------------------
+# Coercion
+# ---------------------------------------------------------------------------
+
+def as_source(edges) -> EdgeSource:
+    """Coerce the public API's ``edges`` argument to an :class:`EdgeSource`.
+
+    Sources pass through; paths dispatch on extension (``.bin`` → mmap'd
+    int32 pairs, anything else → text edge list); everything else is treated
+    as an in-memory array.
+    """
+    if isinstance(edges, EdgeSource):
+        return edges
+    if isinstance(edges, (str, os.PathLike)):
+        path = os.fspath(edges)
+        if path.endswith(".bin"):
+            return BinaryFileSource(path)
+        return EdgeListFileSource(path)
+    return ArraySource(edges)

@@ -4,22 +4,17 @@ The streaming setting (paper §2.1): the graph arrives as an ordered sequence
 of edges processed strictly once.  TPUs want fixed shapes, so streams are cut
 into fixed-size chunks padded with ``PAD`` sentinel edges (no-ops in every
 clustering tier).
+
+The padding primitives now live in :mod:`repro.graph.pipeline` (one
+implementation for host and device); ``pad_to_chunks`` is re-exported here
+for the historical import path.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.streaming import PAD
-
-
-def pad_to_chunks(edges: np.ndarray, chunk: int) -> np.ndarray:
-    """(m, 2) -> (ceil(m/chunk), chunk, 2), padded with PAD edges."""
-    m = edges.shape[0]
-    n_chunks = max(1, -(-m // chunk))
-    out = np.full((n_chunks * chunk, 2), PAD, dtype=np.int32)
-    out[:m] = edges
-    return out.reshape(n_chunks, chunk, 2)
+from repro.graph.pipeline import PAD, pad_to_chunks  # noqa: F401
 
 
 def shard_stream(edges: np.ndarray, n_shards: int) -> np.ndarray:
@@ -27,15 +22,16 @@ def shard_stream(edges: np.ndarray, n_shards: int) -> np.ndarray:
 
     Contiguous (not strided) so each shard preserves the stream order of its
     slice — the streaming argument ("early edges are intra-community") applies
-    within every shard.  Returns (n_shards, shard_len, 2).
+    within every shard.  A single pad + reshape: shard ``s`` is rows
+    ``[s * shard_len, (s + 1) * shard_len)``, with PAD only in the tail of
+    the last non-empty shard.  Returns (n_shards, shard_len, 2).
     """
+    edges = np.asarray(edges)
     m = edges.shape[0]
-    shard_len = -(-m // n_shards)
-    out = np.full((n_shards, shard_len, 2), PAD, dtype=np.int32)
-    for s in range(n_shards):
-        part = edges[s * shard_len : (s + 1) * shard_len]
-        out[s, : part.shape[0]] = part
-    return out
+    shard_len = -(-m // n_shards) if m else 1
+    out = np.full((n_shards * shard_len, 2), PAD, dtype=np.int32)
+    out[:m] = edges
+    return out.reshape(n_shards, shard_len, 2)
 
 
 def edge_list_bytes(m: int, int_bytes: int = 8) -> int:

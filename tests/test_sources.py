@@ -1,0 +1,388 @@
+"""Out-of-core ingestion tests: ``repro.graph.sources`` + ``BatchPipeline``
+threaded through the cluster API.
+
+The invariants under test are the PR's contract:
+
+* **source invariance** — file-backed, generator-backed, and in-memory runs
+  of the same stream produce identical labels for every resumable backend,
+  at several batch sizes;
+* **mid-stream resumability** — suspend/restore at a mid-file offset
+  continues the stream exactly (checkpoint records the raw offset);
+* **bounded residency** — a 10M-edge generator-backed stream clusters with
+  host edge-buffer residency O(batch_edges), not O(m).
+"""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.cluster import ClusterConfig, StreamClusterer, cluster
+from repro.graph.generators import chung_lu_segments, sbm_segments
+from repro.graph.pipeline import PAD, Batch, BatchPipeline, rechunk
+from repro.graph.sources import (
+    ArraySource,
+    BinaryFileSource,
+    EdgeListFileSource,
+    GeneratorSource,
+    ShardedSource,
+    as_source,
+)
+from repro.graph.stream import edge_list_bytes, shard_stream
+
+RESUMABLE = ("oracle", "dense", "scan", "pallas", "chunked")
+
+
+def _random_stream(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2)).astype(np.int32)
+    e[:, 1] = np.where(e[:, 0] == e[:, 1], (e[:, 1] + 1) % n, e[:, 1])
+    return e
+
+
+def _write_txt(path, edges, header=True):
+    with open(path, "w") as f:
+        if header:
+            f.write("# SNAP-style header\n% another comment style\n\n")
+        for i, j in edges:
+            f.write(f"{i}\t{j}\n")
+    return str(path)
+
+
+def _all_sources(edges, tmp_path):
+    """The same stream behind every concrete source type."""
+    txt = _write_txt(tmp_path / "g.txt", edges)
+    binp = BinaryFileSource.write(tmp_path / "g.bin", edges)
+    gen = GeneratorSource(
+        lambda s, length: edges[s : s + length], len(edges), segment_edges=97
+    )
+    return {
+        "array": ArraySource(edges),
+        "text": EdgeListFileSource(txt),
+        "binary": binp,
+        "generator": gen,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Pipeline mechanics
+# ---------------------------------------------------------------------------
+
+def test_rechunk_exact_batches_any_slicing():
+    edges = _random_stream(40, 230, 0)
+    ragged = [edges[0:3], edges[3:3], edges[3:150], edges[150:230]]
+    got = list(rechunk(ragged, 64))
+    assert [len(b) for b in got] == [64, 64, 64, 38]
+    assert np.array_equal(np.concatenate(got), edges)
+
+
+def test_pipeline_fixed_shapes_offsets_and_padding():
+    edges = _random_stream(50, 137, 1)
+    pipe = BatchPipeline(ArraySource(edges), 30, pad_multiple=8)
+    batches = list(pipe)
+    assert pipe.batch_edges == 32  # rounded up to the pad multiple
+    assert all(isinstance(b, Batch) for b in batches)
+    assert all(b.edges.shape == (32, 2) for b in batches)  # one jit compile
+    assert [b.offset for b in batches] == [0, 32, 64, 96, 128]
+    assert sum(b.n_rows for b in batches) == 137
+    last = batches[-1]
+    assert (last.edges[last.n_rows :] == PAD).all()
+    recon = np.concatenate([b.edges[: b.n_rows] for b in batches])
+    assert np.array_equal(recon, edges)
+
+
+def test_pipeline_residency_is_O_batch():
+    """Peak host edge buffer is (prefetch + 1) batches + one source slice,
+    not the stream (slices bounded by the source's segment granularity)."""
+    m, batch = 50_000, 256
+    src = GeneratorSource(
+        lambda s, length: np.zeros((length, 2), np.int32), m,
+        segment_edges=batch,
+    )
+    pipe = BatchPipeline(src, batch, prefetch=2)
+    for _ in pipe:
+        pass
+    batch_bytes = batch * 2 * 4
+    assert 0 < pipe.peak_buffer_bytes <= 5 * batch_bytes
+    assert pipe.peak_buffer_bytes < m * 2 * 4  # never the whole stream
+
+
+def test_pipeline_residency_honest_for_in_memory_arrays():
+    """An ArraySource's one slice is the resident array itself — the metric
+    must report it, not pretend an in-memory stream was out-of-core."""
+    edges = _random_stream(100, 5000, 2)
+    pipe = BatchPipeline(ArraySource(edges), 256, prefetch=2)
+    for _ in pipe:
+        pass
+    assert pipe.peak_buffer_bytes >= edges.nbytes
+
+
+def test_pipeline_early_close_shuts_down_prefetch():
+    edges = _random_stream(30, 2000, 3)
+    pipe = BatchPipeline(ArraySource(edges), 64, prefetch=2)
+    for i, _ in enumerate(pipe):
+        if i == 1:
+            break
+    # residency accounting drains despite the abandoned iterator
+    assert pipe._inflight_bytes == 0
+
+
+def test_historical_pad_names_still_importable():
+    """Satellite: the duplicated pad logic is folded into graph/pipeline;
+    the old import paths keep working as shims."""
+    import jax.numpy as jnp
+
+    from repro.core.streaming import PAD as pad1
+    from repro.core.streaming import pad_edges_to_chunks
+    from repro.graph.stream import PAD as pad2
+    from repro.graph.stream import pad_to_chunks
+
+    assert pad1 == pad2 == PAD
+    chunks = pad_to_chunks(_random_stream(20, 130, 4), 64)
+    assert chunks.shape == (3, 64, 2)
+    padded, n_chunks = pad_edges_to_chunks(jnp.zeros((5, 2), jnp.int32), 8)
+    assert padded.shape == (8, 2) and n_chunks == 1
+
+
+# ---------------------------------------------------------------------------
+# Source equivalence
+# ---------------------------------------------------------------------------
+
+def test_all_sources_yield_the_same_stream(tmp_path):
+    edges = _random_stream(60, 411, 5)
+    for name, src in _all_sources(edges, tmp_path).items():
+        assert np.array_equal(src.materialize(), edges), name
+        assert src.count_edges() == 411, name
+        for bs in (64, 411, 1000):
+            got = np.concatenate(list(src.batches(bs)))
+            assert np.array_equal(got, edges), (name, bs)
+        # resume from an arbitrary raw offset
+        got = np.concatenate(list(src.batches(100, start=123)))
+        assert np.array_equal(got, edges[123:]), name
+
+
+def test_text_source_skips_comments_headers_blank_lines_extra_columns(tmp_path):
+    p = tmp_path / "weird.txt"
+    with open(p, "w") as f:
+        f.write("# comment\nFromNodeId\tToNodeId\n\n1 2 0.5\n% other\n"
+                "3\t4\t17 99\n5 6\n")
+    src = EdgeListFileSource(p)
+    assert np.array_equal(src.materialize(), [[1, 2], [3, 4], [5, 6]])
+    assert src.count_edges() == 3
+
+
+def test_text_source_resume_uses_seekable_offsets(tmp_path):
+    """Re-reading from a mid-file offset seeks to a recorded byte position
+    instead of re-parsing the prefix (O(remaining) preemption loops)."""
+    edges = _random_stream(50, 1000, 20)
+    src = EdgeListFileSource(
+        _write_txt(tmp_path / "big.txt", edges), block_lines=128
+    )
+    list(src.batches(128))  # first drain records slice-boundary offsets
+    assert len(src._resume) > 3
+    row, pos, _ = src._best_resume(640)
+    assert 0 < row <= 640 and pos > 0
+    got = np.concatenate(list(src.batches(100, start=640)))
+    assert np.array_equal(got, edges[640:])
+    assert src.count_edges() == 1000
+
+
+def test_text_source_names_file_and_line_on_malformed_edge(tmp_path):
+    p = tmp_path / "torn.txt"
+    p.write_text("1 2\n7\n3 4\n")
+    with pytest.raises(ValueError, match=r"torn\.txt:2"):
+        EdgeListFileSource(p).materialize()
+
+
+def test_binary_source_rejects_torn_file(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"\x00" * 12)  # not a whole number of int32 pairs
+    with pytest.raises(ValueError, match="int32"):
+        BinaryFileSource(p)
+
+
+@pytest.mark.parametrize("backend", RESUMABLE)
+@pytest.mark.parametrize("batch_edges", [64, 193])
+def test_labels_invariant_across_sources_and_batch_sizes(
+    tmp_path, backend, batch_edges
+):
+    """The acceptance invariant: every source backing the same stream gives
+    the *same* labels as the in-memory one-shot run, for every resumable
+    backend, at several batch sizes.  (chunked included: the pipeline aligns
+    batches to Jacobi chunk boundaries, so batching never moves one.)"""
+    n, m = 80, 500
+    edges = _random_stream(n, m, 6)
+    cfg = ClusterConfig(n=n, v_max=8, backend=backend, chunk=32)
+    ref = cluster(edges, cfg).labels
+    for name, src in _all_sources(edges, tmp_path).items():
+        got = cluster(src, cfg.replace(batch_edges=batch_edges))
+        assert np.array_equal(got.labels, ref), (backend, name, batch_edges)
+        assert got.info["peak_buffer_bytes"] > 0
+        assert int(got.state.edges_seen) == m
+
+
+def test_cluster_accepts_paths_directly(tmp_path):
+    edges = _random_stream(40, 200, 7)
+    txt = _write_txt(tmp_path / "p.txt", edges)
+    binp = str(tmp_path / "p.bin")
+    BinaryFileSource.write(binp, edges)
+    cfg = ClusterConfig(n=40, v_max=6, backend="dense")
+    ref = cluster(edges, cfg).labels
+    assert np.array_equal(cluster(txt, cfg).labels, ref)
+    assert np.array_equal(cluster(binp, cfg).labels, ref)
+    assert isinstance(as_source(txt), EdgeListFileSource)
+    assert isinstance(as_source(binp), BinaryFileSource)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    batch_edges=st.integers(1, 300),
+    v_max=st.integers(1, 100),
+)
+def test_property_file_backed_equals_in_memory(tmp_path_factory, seed, batch_edges, v_max):
+    """Property: for any stream, batch size, and v_max, a file-backed dense
+    run is bit-identical to the in-memory one-shot run."""
+    n, m = 40, 250
+    edges = _random_stream(n, m, seed)
+    d = tmp_path_factory.mktemp("prop")
+    txt = _write_txt(d / "s.txt", edges)
+    cfg = ClusterConfig(n=n, v_max=v_max, backend="dense")
+    ref = cluster(edges, cfg).labels
+    got = cluster(txt, cfg.replace(batch_edges=batch_edges)).labels
+    assert np.array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream suspend / resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "scan", "chunked"])
+def test_suspend_restore_at_mid_file_offset(tmp_path, backend):
+    """fit two batches, checkpoint, restore in a fresh clusterer, fit the
+    rest — labels identical to the uninterrupted in-memory run."""
+    n, m = 70, 600
+    edges = _random_stream(n, m, 8)
+    txt = _write_txt(tmp_path / "stream.txt", edges)
+    cfg = ClusterConfig(n=n, v_max=8, backend=backend, chunk=32, batch_edges=128)
+
+    sc = StreamClusterer(cfg)
+    sc.fit(txt, max_batches=2)
+    assert sc.stream_offset == 2 * 128
+    ck = str(tmp_path / "ckpt")
+    sc.save(ck)
+
+    sc2 = StreamClusterer.restore(ck)  # fresh "session"
+    assert sc2.stream_offset == 2 * 128
+    assert sc2.edges_seen == sc.edges_seen
+    sc2.fit(txt)
+    assert sc2.stream_offset == m
+
+    ref = cluster(edges, cfg)
+    res = sc2.finalize()
+    assert np.array_equal(res.labels, ref.labels)
+    assert int(sc2.state.edges_seen) == m
+    # fit()-driven runs surface the stream metrics like cluster() does
+    assert res.info["peak_buffer_bytes"] > 0
+    assert res.info["stream_batches"] > 0
+
+
+def test_int64_counters_survive_restore_past_2_31(tmp_path):
+    """edges_seen / stream_offset are int64 on disk and must not be demoted
+    to int32 at restore — past 2^31 a demoted counter goes negative and the
+    next save() writes a step dir that latest_step() never finds."""
+    sc = StreamClusterer(ClusterConfig(n=10, v_max=4, backend="dense"))
+    sc.partial_fit(np.array([[0, 1]], np.int32))
+    sc._state.edges_seen = np.int64(2**31 + 5)
+    sc._stream_offset = 2**31 + 9
+    sc.save(str(tmp_path))
+    sc2 = StreamClusterer.restore(str(tmp_path))
+    assert sc2.edges_seen == 2**31 + 5
+    assert sc2.stream_offset == 2**31 + 9
+    assert "step_2147483653" in sc2.save(str(tmp_path))
+
+
+def test_generator_source_resumes_from_exact_offset():
+    """GeneratorSource regenerates any row range from its absolute offset —
+    a resumed read never replays and never skips."""
+    seg = chung_lu_segments(200, seed=11)
+    src = GeneratorSource(seg, 5000, segment_edges=256)
+    full = src.materialize()
+    for start in (0, 1, 255, 256, 257, 4999):
+        got = np.concatenate(list(src.batches(190, start=start)))
+        assert np.array_equal(got, full[start:]), start
+
+
+def test_sbm_segments_ground_truth_and_determinism():
+    seg, labels = sbm_segments(300, 10, p_intra=0.9, seed=12)
+    assert labels.shape == (300,) and labels.max() < 10
+    a, b = seg(512, 128), seg(512, 128)
+    assert np.array_equal(a, b) and a.shape == (128, 2)
+    assert (a[:, 0] != a[:, 1]).all()  # no self-loops
+
+
+# ---------------------------------------------------------------------------
+# Sharded source (distributed tier)
+# ---------------------------------------------------------------------------
+
+def test_sharded_source_matches_vectorized_shard_stream(tmp_path):
+    edges = _random_stream(100, 777, 9)
+    txt = _write_txt(tmp_path / "s.txt", edges)
+    stacked = ShardedSource(EdgeListFileSource(txt), 8).stacked()
+    assert np.array_equal(stacked, shard_stream(edges, 8))
+    # windows partition the stream contiguously
+    shards = ShardedSource(ArraySource(edges), 8).shards()
+    flat = np.concatenate([w.materialize() for w in shards])
+    assert np.array_equal(flat, edges)
+
+
+def test_distributed_backend_from_file_source(tmp_path):
+    n = 200
+    edges = _random_stream(n, 1200, 10)
+    txt = _write_txt(tmp_path / "d.txt", edges)
+    cfg = ClusterConfig(
+        n=n, v_max=8, backend="distributed", n_shards=4, chunk=128
+    )
+    assert np.array_equal(cluster(txt, cfg).labels, cluster(edges, cfg).labels)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core at scale (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_10m_edge_generator_stream_is_out_of_core():
+    """A 10M-edge generator-backed stream clusters with edge-buffer residency
+    bounded by O(batch_edges) — the paper's memory model, measured: edges
+    never materialize, state stays 3n ints."""
+    n, m = 1 << 17, 10_000_000
+    batch_edges = 1 << 18
+    src = GeneratorSource(
+        chung_lu_segments(n, seed=7), m, segment_edges=1 << 17
+    )
+    cfg = ClusterConfig(
+        n=n, v_max=64, backend="chunked", chunk=16384, batch_edges=batch_edges
+    )
+    res = cluster(src, cfg).block_until_ready()
+
+    assert int(res.state.edges_seen) == m
+    batch_bytes = batch_edges * 2 * 4
+    # double-buffered pipeline: at most (prefetch + 1) = 3 batches plus the
+    # generator segments still pinnable by rechunk views
+    assert 0 < res.info["peak_buffer_bytes"] <= 5 * batch_bytes
+    # far under materializing the stream (80 MB at int32)
+    assert res.info["peak_buffer_bytes"] * 8 <= edge_list_bytes(m, 4)
+    assert res.info["stream_batches"] == -(-m // batch_edges)
+    # the clustering did real work: some merges happened
+    assert res.n_communities < n
+
+
+def test_10m_stream_small_prefix_matches_in_memory():
+    """Bit-identity spot check for the scale test's stream: a prefix of the
+    same generator source, streamed vs materialized, on a sequential tier."""
+    n, m = 1 << 17, 20_000
+    src = GeneratorSource(chung_lu_segments(n, seed=7), m, segment_edges=4096)
+    cfg = ClusterConfig(n=n, v_max=64, backend="scan")
+    ref = cluster(src.materialize(), cfg)
+    got = cluster(src, cfg.replace(batch_edges=4096))
+    assert np.array_equal(got.labels, ref.labels)
