@@ -3,9 +3,17 @@
 
 Sizes are deliberately small (seconds, not minutes, on a CI CPU runner) —
 the artifact's value is the *trend* of edges/s, peak edge-buffer bytes, and
-quality across commits, not absolute numbers.
+quality across commits, not absolute numbers.  ``streaming_tiers`` rows
+record the memory frontier of the two wide-state tiers (multiparam sweep,
+sharded distributed): measured peak edge-buffer bytes vs the bytes the
+stream would occupy materialized, next to each tier's state bytes.
 
     PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_smoke.json]
+                                              [--baseline BENCH_smoke.json]
+
+``--baseline`` diffs the fresh report against a committed baseline
+*structurally* (suites, row identities, memory-claim fields) and exits
+non-zero on drift — numbers vary per runner, shape must not.
 """
 
 from __future__ import annotations
@@ -15,6 +23,51 @@ import json
 import platform
 import sys
 import time
+
+
+def streaming_tiers():
+    """Out-of-core rows for the wide-state tiers: peak buffer vs state."""
+    from repro.cluster import ClusterConfig, GeneratorSource, cluster
+    from repro.graph.generators import chung_lu_segments
+    from repro.graph.stream import edge_list_bytes, state_bytes
+
+    rows = []
+    n, batch = 20_000, 1 << 13
+    # m must dominate the pipeline's (prefetch + 1) batch buffers for the
+    # out-of-core claim to be visible at smoke scale
+    src = GeneratorSource(chung_lu_segments(n, seed=13), 120_000,
+                          segment_edges=batch)
+    A = 4
+    cfg = ClusterConfig(n=n, backend="multiparam",
+                        v_maxes=(16, 64, 256, 1024), batch_edges=batch)
+    cluster(src, cfg).block_until_ready()  # warmup/compile
+    t0 = time.time()
+    res = cluster(src, cfg).block_until_ready()
+    dt = time.time() - t0
+    rows.append({
+        "tier": "multiparam", "m": src.n_edges, "A": A, "seconds": dt,
+        "edges_per_s": src.n_edges / dt,
+        "peak_buffer_bytes": res.info["peak_buffer_bytes"],
+        "state_bytes": (2 * A + 1) * n * 4,
+        "edge_list_bytes": edge_list_bytes(src.n_edges, 4),
+    })
+
+    src = GeneratorSource(chung_lu_segments(n, seed=17), 400_000,
+                          segment_edges=batch)
+    dcfg = ClusterConfig(n=n, v_max=64, backend="distributed", n_shards=4,
+                         chunk=4096, batch_edges=batch)
+    cluster(src, dcfg).block_until_ready()
+    t0 = time.time()
+    res = cluster(src, dcfg).block_until_ready()
+    dt = time.time() - t0
+    rows.append({
+        "tier": "distributed", "m": src.n_edges, "n_shards": 4, "seconds": dt,
+        "edges_per_s": src.n_edges / dt,
+        "peak_buffer_bytes": res.info["peak_buffer_bytes"],
+        "state_bytes": 3 * 4 * n * 4,  # 3Pn ints, P = 4
+        "edge_list_bytes": edge_list_bytes(src.n_edges, 4),
+    })
+    return rows
 
 
 def run():
@@ -37,13 +90,56 @@ def run():
         "wall_s": round(time.time() - t0, 2),
         "table1_speed": speed,
         "table2_quality": quality,
+        "streaming_tiers": streaming_tiers(),
         "memory": memory_footprint.run(),
     }
+
+
+def check_against_baseline(report: dict, baseline: dict) -> list:
+    """Structural diff: same suites, same row identities, memory-claim
+    fields present.  Values are runner-dependent and not compared."""
+    problems = []
+    for key in ("table1_speed", "table2_quality", "streaming_tiers", "memory"):
+        if (key in baseline) != (key in report):
+            problems.append(f"suite {key!r} appeared/disappeared")
+
+    def ids(rows, field):
+        return sorted({r[field] for r in rows if field in r})
+
+    if "table1_speed" in baseline and "table1_speed" in report:
+        got, want = ids(report["table1_speed"], "algo"), ids(
+            baseline["table1_speed"], "algo")
+        if got != want:
+            problems.append(f"table1 algos changed: {want} -> {got}")
+    if "table2_quality" in baseline and "table2_quality" in report:
+        got, want = ids(report["table2_quality"], "algo"), ids(
+            baseline["table2_quality"], "algo")
+        if got != want:
+            problems.append(f"table2 algos changed: {want} -> {got}")
+    if "streaming_tiers" in baseline and "streaming_tiers" in report:
+        got, want = ids(report["streaming_tiers"], "tier"), ids(
+            baseline["streaming_tiers"], "tier")
+        if got != want:
+            problems.append(f"streaming tiers changed: {want} -> {got}")
+        for row in report.get("streaming_tiers", []):
+            for field in ("peak_buffer_bytes", "state_bytes",
+                          "edge_list_bytes"):
+                if field not in row:
+                    problems.append(
+                        f"streaming tier {row.get('tier')!r} lost {field!r}")
+            if row.get("peak_buffer_bytes", 0) >= row.get(
+                    "edge_list_bytes", float("inf")):
+                problems.append(
+                    f"tier {row.get('tier')!r} buffered the whole stream "
+                    f"({row.get('peak_buffer_bytes')} B)")
+    return problems
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_smoke.json")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_smoke.json to diff against")
     args = ap.parse_args(argv)
     report = run()
     with open(args.out, "w") as f:
@@ -52,7 +148,25 @@ def main(argv=None):
     for r in report["table1_speed"]:
         print(f"smoke/{r['algo']},{r['seconds']*1e6:.0f},"
               f"{r['edges_per_s']:.0f} edges/s")
+    for r in report["streaming_tiers"]:
+        print(f"smoke/{r['tier']},buf={r['peak_buffer_bytes']},"
+              f"state={r['state_bytes']},edges={r['edge_list_bytes']}")
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        except FileNotFoundError:
+            print(f"baseline {args.baseline!r} not found — commit a "
+                  "BENCH_smoke.json baseline (see --out)", file=sys.stderr)
+            return 1
+        problems = check_against_baseline(report, baseline)
+        for p in problems:
+            print(f"baseline drift: {p}", file=sys.stderr)
+        if problems:
+            return 1
+        print("baseline diff: structure unchanged", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,25 +1,50 @@
-"""Paper-technique ↔ LM-runtime touch-point (DESIGN.md §9): stream the
+"""Paper-technique ↔ LM-runtime touch-point (DESIGN.md §9 → §10): stream the
 token–expert co-routing graph of a MoE forward pass through the clusterer to
 surface expert-affinity communities — an analysis tool for router health.
 
 Edges: for every token, each pair of its top-k experts is one edge in a
 stream over expert ids.  Dense expert communities = experts that co-fire;
-a router collapse shows up as one giant community.  The stream arrives
-batch-by-batch through ``StreamClusterer.partial_fit`` — exactly how a
-router monitor would consume routing decisions during serving.
+a router collapse shows up as one giant community.  The stream reaches the
+clusterer through a ``GeneratorSource``-style adapter: routing decisions are
+turned into edge segments *lazily, per serving step* — the monitor drains
+one source batch per step instead of materializing per-step edge arrays, so
+its residency is O(step) edges and ``3 n_experts`` ints of state no matter
+how long the serving run is.
 
     PYTHONPATH=src python examples/moe_routing_graph.py
 """
-
-import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cluster import ClusterConfig, StreamClusterer
+from repro.cluster import (
+    BatchPipeline,
+    ClusterConfig,
+    GeneratorSource,
+    StreamClusterer,
+)
 from repro.configs.registry import get_smoke_config
 from repro.models.transformer import init_params
+
+
+def routing_edge_source(idx: np.ndarray, tokens_per_step: int) -> GeneratorSource:
+    """Adapt top-2 routing decisions to an :class:`EdgeSource`.
+
+    ``idx``: (T, 2) expert ids per token, in serving order.  Row ``t`` of the
+    stream is token ``t``'s co-routing pair — computed on demand from the
+    routing decisions (deterministic per absolute offset, so the monitor can
+    suspend/resume mid-serving like any other source), never stored as a
+    materialized edge array.  ``tokens_per_step`` sets the segment size: one
+    segment = one serving step's worth of decisions.
+    """
+    if idx.shape[1] != 2:
+        raise ValueError(f"expected top-2 routing, got top-{idx.shape[1]}")
+
+    def segment(start: int, length: int) -> np.ndarray:
+        return np.sort(idx[start : start + length], axis=1).astype(np.int32)
+
+    return GeneratorSource(segment, len(idx), segment_edges=tokens_per_step)
 
 
 def main():
@@ -39,21 +64,23 @@ def main():
     _, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
     idx = np.asarray(idx)
 
-    edges = np.array(
-        [pair for row in idx for pair in itertools.combinations(sorted(row), 2)
-         if pair[0] != pair[1]],
-        dtype=np.int32,
-    )
-    rng = np.random.default_rng(0)
-    rng.shuffle(edges, axis=0)
-    print(f"co-routing stream: {len(edges)} edges over {cfg.n_experts} experts")
+    # One source, drained one batch per "serving step" — the router monitor
+    # consumes decisions as they arrive, in serving order.
+    tokens_per_step = 64
+    source = routing_edge_source(idx, tokens_per_step)
+    print(f"co-routing stream: {source.n_edges} edges over "
+          f"{cfg.n_experts} experts, {tokens_per_step} tokens/step")
 
-    # Incremental ingestion, one partial_fit per "serving step".
     sc = StreamClusterer(ClusterConfig(
-        n=cfg.n_experts, v_max=max(len(edges) // 4, 1), backend="dense"))
-    for batch in np.array_split(edges, 8):
-        sc.partial_fit(batch)
+        n=cfg.n_experts, v_max=max(source.n_edges // 4, 1), backend="dense"))
+    pipe = BatchPipeline(source, tokens_per_step, prefetch=1)
+    steps = 0
+    for batch in pipe:  # one partial_fit per serving step, one pipeline
+        sc.partial_fit(batch.edges, raw_rows=batch.n_rows)
+        steps += 1
     res = sc.finalize()
+    print(f"drained {steps} serving steps; peak edge buffer "
+          f"{pipe.peak_buffer_bytes} B (per-step, not per-run)")
     print("expert -> community:", dict(enumerate(res.labels.tolist())))
     print("stats:", res.community_stats)
 

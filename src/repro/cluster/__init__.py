@@ -25,7 +25,7 @@ from repro.core.metrics import (  # noqa: F401
     modularity,
     nmi,
 )
-from repro.core.state import ClusterState  # noqa: F401
+from repro.core.state import ClusterState, ShardedState, SweepState  # noqa: F401
 from repro.core.streaming import PAD, canonical_labels  # noqa: F401
 from repro.cluster.api import Clustering, StreamClusterer, cluster  # noqa: F401
 from repro.cluster.config import ClusterConfig  # noqa: F401
@@ -61,7 +61,9 @@ __all__ = [
     "EdgeSource",
     "GeneratorSource",
     "ShardedSource",
+    "ShardedState",
     "StreamClusterer",
+    "SweepState",
     "as_source",
     "available_backends",
     "avg_f1",

@@ -4,21 +4,30 @@ One call — ``cluster(edges, ClusterConfig(...))`` — dispatches through the
 backend registry; ``StreamClusterer`` exposes the same engine incrementally
 (``partial_fit`` per arriving batch, ``fit`` to drain an
 :class:`~repro.graph.sources.EdgeSource`, ``finalize`` for the result), with
-the :class:`ClusterState` suspendable to disk via ``repro.checkpoint.manager``
-and resumable in a later session — including mid-stream: checkpoints record
-the raw stream offset, so ``restore`` + ``fit(source)`` picks up an
-out-of-core file exactly where the previous session stopped.
+the backend's state pytree suspendable to disk via
+``repro.checkpoint.manager`` and resumable in a later session — including
+mid-stream: checkpoints record the raw stream offset, so ``restore`` +
+``fit(source)`` picks up an out-of-core file exactly where the previous
+session stopped.
+
+*Resumable + out-of-core is the invariant, not the special case*: every
+backend threads a state pytree (``ClusterState`` / ``SweepState`` /
+``ShardedState`` — see ``Backend.state_kind``) through ``partial_fit``, so
+the §2.5 multi-parameter sweep and the sharded distributed tier stream,
+checkpoint, and resume exactly like the single-parameter tiers.  Backends
+with a ``finalize_fn`` (sweep selection, shard merge) derive labels from
+state at finalize time; the :class:`Clustering` they return always carries a
+plain :class:`ClusterState` view, so the edge-free metrics are uniform.
 
 ``edges`` everywhere means *array, path, or EdgeSource*: in-memory arrays
 auto-wrap (and keep the historical one-shot path), file/generator sources
 stream through the :class:`~repro.graph.pipeline.BatchPipeline` with host
 edge residency bounded by O(``batch_edges``) while the state stays the
-paper's ``3n`` ints.
+paper's ``3n`` ints (``(2A+1) n`` for the sweep, ``3Pn`` for ``P`` shards).
 """
 
 from __future__ import annotations
 
-import json
 import os
 from typing import Any, Dict, Optional
 
@@ -26,7 +35,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.metrics import community_stats, entropy_from_state
-from repro.core.state import ClusterState
+from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import canonical_labels
 from repro.cluster.config import ClusterConfig
 from repro.cluster.registry import Backend, get_backend
@@ -56,21 +65,83 @@ def _make_pipeline(
     )
 
 
-def _check_state_n(state: ClusterState, config: ClusterConfig) -> None:
-    """A carried state must match config.n — out-of-range node ids would be
-    silently dropped by device scatters otherwise."""
+def _resolve_config(
+    config: ClusterConfig, backend: Backend, mesh=None, state=None
+) -> ClusterConfig:
+    """Pin config fields the state shape depends on.  The sharded tier's
+    ``n_shards`` must be concrete before ``init_fn`` runs (it is the leading
+    state axis): a carried state fixes it, a ``mesh`` contributes its device
+    count, otherwise the visible device count is used."""
+    if backend.state_kind == "sharded" and config.n_shards is None:
+        # getattr: a wrong-kind state has no n_shards — fall through so
+        # _check_state can report the kind mismatch instead of crashing here
+        if state is not None and getattr(state, "n_shards", None) is not None:
+            n_shards = state.n_shards
+        elif mesh is not None:
+            from repro.core.distributed import mesh_shards
+
+            n_shards = mesh_shards(mesh)
+        else:
+            import jax
+
+            n_shards = jax.device_count()
+        config = config.replace(n_shards=n_shards)
+    return config
+
+
+def _state_kind_of(state) -> str:
+    """Kind of a state pytree.  The wide kinds are *defined* by their
+    classes (a backend declaring ``state_kind="sweep"``/``"sharded"`` must
+    thread ``SweepState``/``ShardedState``); everything else — including
+    third-party custom states — is the open ``"cluster"`` kind."""
+    if isinstance(state, SweepState):
+        return "sweep"
+    if isinstance(state, ShardedState):
+        return "sharded"
+    return "cluster"
+
+
+def _check_state(state, config: ClusterConfig, backend: Backend) -> None:
+    """A carried state must match the config's shape parameters — dispatched
+    on the backend's state kind rather than assuming ``ClusterState``."""
+    got_kind = _state_kind_of(state)
+    if got_kind != backend.state_kind:
+        raise ValueError(
+            f"backend {backend.name!r} threads a {backend.state_kind} state "
+            f"but was given a {got_kind} state; states are not "
+            "interchangeable across kinds"
+        )
     if state.n != config.n:
         raise ValueError(
             f"state has n={state.n} but config.n={config.n}; a carried "
-            "ClusterState must come from a run with the same node-id space"
+            "state must come from a run with the same node-id space"
         )
+    if backend.state_kind == "sweep":
+        got = tuple(int(x) for x in np.asarray(state.v_maxes))
+        if got != tuple(config.v_maxes):
+            raise ValueError(
+                f"sweep state was built for v_maxes={got} but config has "
+                f"v_maxes={tuple(config.v_maxes)}; a resumed sweep cannot "
+                "silently continue under different parameters"
+            )
+    elif backend.state_kind == "sharded":
+        if state.n_shards != config.n_shards:
+            raise ValueError(
+                f"sharded state has n_shards={state.n_shards} but config "
+                f"has n_shards={config.n_shards}; shard count is a state "
+                "dimension and cannot change mid-run"
+            )
 
 
 class Clustering:
     """A clustering result: labels + edge-free metrics (paper §2.5).
 
-    Everything derivable is lazy/cached so benchmarks can time the backends
-    without paying for canonicalisation or metrics they don't read.
+    ``state`` is always a plain :class:`ClusterState` view of the result
+    (for the sweep: the selected column; for the sharded tier: the merged
+    state), whatever the backend's internal state kind — so the edge-free
+    metrics below work uniformly across all seven tiers.  Everything
+    derivable is lazy/cached so benchmarks can time the backends without
+    paying for canonicalisation or metrics they don't read.
     """
 
     def __init__(
@@ -98,7 +169,7 @@ class Clustering:
     @property
     def entropy(self) -> Optional[float]:
         """H over community volumes — edge-free, from ``(v, sum d)`` alone.
-        ``None`` when the backend returns no state (distributed)."""
+        ``None`` only if a third-party backend returns no state."""
         if self.state is None:
             return None
         v = np.asarray(self.state.v)
@@ -150,7 +221,7 @@ def cluster(
     edges,
     config: ClusterConfig,
     *,
-    state: Optional[ClusterState] = None,
+    state=None,
     mesh=None,
 ) -> Clustering:
     """Cluster an edge stream in one call, via ``config.backend``.
@@ -162,13 +233,18 @@ def cluster(
         ``config.batch_edges``-sized batches through the resumable
         ``partial_fit`` machinery (host edge residency O(batch), labels
         identical to the in-memory run); arrays take the historical one-shot
-        path unless ``batch_edges`` is set.
+        path unless ``batch_edges`` is set.  The sharded tier always streams
+        (batches are its unit of shard assignment): with ``batch_edges``
+        unset the stream is counted once and split into one window per
+        shard (capped at the default batch size, which stripes longer
+        streams across shards out-of-core).
       config: validated :class:`ClusterConfig`.
-      state: optional carried :class:`ClusterState` (resumable backends only);
+      state: optional carried state pytree (see ``Backend.state_kind``);
         fresh state is created when omitted.  Must come from a run with the
-        same ``n`` and the same backend label space (see ``Backend.label_space``
-        — an oracle-space state is not interchangeable with dense-space ones).
-      mesh: optional ``jax.sharding.Mesh`` for ``backend="distributed"``.
+        same shape parameters (``n``; sweep ``v_maxes``; shard count) and
+        the same backend label space.
+      mesh: optional ``jax.sharding.Mesh`` — contributes its device count as
+        the default ``n_shards`` for ``backend="distributed"``.
 
     Returns:
       a :class:`Clustering` bundling labels, state, and edge-free metrics.
@@ -177,24 +253,32 @@ def cluster(
     """
     source = as_source(edges)
     backend = get_backend(config.backend)
+    config = _resolve_config(config, backend, mesh, state)
     if state is None:
-        state = backend.init_fn(config.n)
-    _check_state_n(state, config)
+        state = backend.init_fn(config)
+    _check_state(state, config, backend)
 
     in_memory = isinstance(source, ArraySource)
-    if backend.resumable and (not in_memory or config.batch_edges is not None):
+    # The sharded tier always streams — batches are its unit of shard
+    # assignment (fit() sizes the default window per shard).
+    if backend.state_kind == "sharded" or (
+        backend.resumable
+        and (not in_memory or config.batch_edges is not None)
+    ):
         # One drain implementation for both entry points: the incremental
         # clusterer owns the pipeline lifecycle (close-on-error, residency
         # bookkeeping, info surfacing).
         return StreamClusterer(config, state=state).fit(source).finalize()
 
-    if in_memory:
-        arg = source.edges
-    elif backend.accepts_source:
-        arg = source  # e.g. distributed: sharded via ShardedSource
-    else:
-        arg = source.materialize()  # one-shot tiers need the whole stream
-    result = backend.fn(arg, config, state, mesh=mesh)
+    if not in_memory:
+        raise ValueError(
+            f"backend {config.backend!r} is not resumable and cannot ingest "
+            "an out-of-core source; materialize the stream yourself or use "
+            "a resumable backend"
+        )
+    result = backend.fn(source.edges, config, state, mesh=mesh)
+    if backend.finalize_fn is not None:
+        result = backend.finalize_fn(result.state, config)
     return Clustering(
         state=result.state,
         config=config,
@@ -208,27 +292,30 @@ class StreamClusterer:
     :meth:`fit` to drain an :class:`~repro.graph.sources.EdgeSource`.
 
     The production streaming scenario — edges arrive over time, state is the
-    paper's ``3n`` ints, and the run can be suspended (:meth:`save`) and
-    resumed (:meth:`restore`) across processes — including mid-stream: the
-    checkpoint records :attr:`stream_offset` (raw source rows consumed), so a
-    restored clusterer's :meth:`fit` continues an out-of-core file from the
-    exact row the previous session stopped at.  Only resumable backends
-    (oracle / dense / scan / chunked / pallas) support ``partial_fit``; for
-    the strictly-sequential tiers the result is identical to one
-    :func:`cluster` call over the concatenated stream, regardless of batching.
+    backend's state pytree (the paper's ``3n`` ints; ``(2A+1) n`` for the
+    sweep; ``3Pn`` for ``P`` shards), and the run can be suspended
+    (:meth:`save`) and resumed (:meth:`restore`) across processes —
+    including mid-stream: the checkpoint records :attr:`stream_offset` (raw
+    source rows consumed), so a restored clusterer's :meth:`fit` continues
+    an out-of-core file from the exact row the previous session stopped at.
+    Every built-in backend supports ``partial_fit``; for the
+    strictly-sequential tiers (sweep included) the result is identical to
+    one :func:`cluster` call over the concatenated stream, regardless of
+    batching.
     """
 
-    def __init__(self, config: ClusterConfig, state: Optional[ClusterState] = None):
-        self.config = config
+    def __init__(self, config: ClusterConfig, state=None):
         self._backend: Backend = get_backend(config.backend)
+        config = _resolve_config(config, self._backend, state=state)
+        self.config = config
         if not self._backend.resumable:
             raise ValueError(
                 f"backend {config.backend!r} does not support incremental "
                 "partial_fit; use cluster() for one-shot runs"
             )
         if state is None:
-            state = self._backend.init_fn(config.n)
-        _check_state_n(state, config)
+            state = self._backend.init_fn(config)
+        _check_state(state, config, self._backend)
         self._state = state
         self._last_result = None
         self._stream_offset = 0
@@ -237,7 +324,7 @@ class StreamClusterer:
 
     # ------------------------------------------------------------------
     @property
-    def state(self) -> ClusterState:
+    def state(self):
         return self._state
 
     @property
@@ -280,9 +367,23 @@ class StreamClusterer:
         :meth:`restore` resumes mid-stream rather than replaying.
         ``max_batches`` bounds this call (suspend points for cooperative
         preemption); returns ``self``.
+
+        For the sharded tier with ``batch_edges`` unset, the stream is
+        counted once and the batch sized to one window per shard (capped at
+        the default batch size, which stripes longer streams) — batches are
+        that tier's unit of shard assignment, so a single giant batch would
+        silently pile the whole stream onto shard 0.  The sizing depends
+        only on the source length, so resumed sessions deal identically.
         """
         source = as_source(edges)
-        pipe = _make_pipeline(source, self.config, self._backend)
+        config = self.config
+        if self._backend.state_kind == "sharded" and config.batch_edges is None:
+            m = source.count_edges()
+            per_shard = max(1, -(-m // config.n_shards))
+            config = config.replace(
+                batch_edges=min(per_shard, DEFAULT_BATCH_EDGES)
+            )
+        pipe = _make_pipeline(source, config, self._backend)
         batches = pipe.batches(start=self._stream_offset)
         n = 0
         try:
@@ -303,20 +404,29 @@ class StreamClusterer:
 
     def finalize(self) -> Clustering:
         """The clustering of everything ingested so far.  Does not consume
-        the state — more ``partial_fit`` calls may follow."""
-        if self._last_result is not None:
-            raw = self._last_result.labels
-            info = self._last_result.info
+        the state — more ``partial_fit`` calls may follow.
+
+        Backends with a ``finalize_fn`` (sweep, sharded) derive labels and
+        the :class:`ClusterState` view from the current state; the others
+        reuse the labels of the last ingested batch.
+        """
+        if self._backend.finalize_fn is not None:
+            result = self._backend.finalize_fn(self._state, self.config)
+        elif self._last_result is not None:
+            result = self._last_result
         else:  # no batch ingested yet: every node is its own singleton
             result = self._backend.fn(_EMPTY_BATCH, self.config, self._state)
             self._state = result.state
-            raw, info = result.labels, result.info
+        info = result.info
         if self.stream_batches:  # surfaced like streamed cluster() calls
             info = dict(info)
             info["peak_buffer_bytes"] = self.peak_buffer_bytes
             info["stream_batches"] = self.stream_batches
         return Clustering(
-            state=self._state, config=self.config, raw_labels=raw, info=info
+            state=result.state,
+            config=self.config,
+            raw_labels=result.labels,
+            info=info,
         )
 
     # ------------------------------------------------------------------
@@ -330,7 +440,8 @@ class StreamClusterer:
         any point leaves either a restorable checkpoint or a clean
         "no checkpoints" failure — never a state/config torn pair.  The raw
         stream offset is a leaf of the checkpoint pytree itself, so state
-        and stream position can never tear apart.
+        and stream position can never tear apart.  Wide states (sweep,
+        sharded) are just wider pytrees — they ride the same manager.
         """
         mgr = CheckpointManager(directory)  # creates the directory
         tmp = os.path.join(directory, _CONFIG_FILE + ".tmp")
@@ -352,29 +463,46 @@ class StreamClusterer:
         """Resume from :meth:`save`; ``config`` overrides the saved one.
 
         An override may switch backends only within the same label space
-        (dense → scan → pallas → chunked); an oracle state read as dense
-        state (or vice versa) would silently mislabel, so it is rejected.
+        *and* state kind (dense → scan → pallas → chunked); an oracle state
+        read as dense state — or a sweep pytree read as a 3n-int state —
+        would silently mislabel, so both are rejected.
         """
         with open(os.path.join(directory, _CONFIG_FILE)) as f:
             saved = ClusterConfig.from_json(f.read())
         if config is None:
             config = saved
         else:
-            saved_space = get_backend(saved.backend).label_space
-            new_space = get_backend(config.backend).label_space
-            if saved_space != new_space:
+            saved_backend = get_backend(saved.backend)
+            new_backend = get_backend(config.backend)
+            if saved_backend.state_kind != new_backend.state_kind:
                 raise ValueError(
                     f"cannot restore a {saved.backend!r} checkpoint "
-                    f"({saved_space} label space) with backend="
-                    f"{config.backend!r} ({new_space} label space)"
+                    f"({saved_backend.state_kind} state kind) with backend="
+                    f"{config.backend!r} ({new_backend.state_kind} state "
+                    "kind)"
                 )
+            if saved_backend.label_space != new_backend.label_space:
+                raise ValueError(
+                    f"cannot restore a {saved.backend!r} checkpoint "
+                    f"({saved_backend.label_space} label space) with backend="
+                    f"{config.backend!r} ({new_backend.label_space} label "
+                    "space)"
+                )
+            if config.n_shards is None and saved.n_shards is not None:
+                # shape fields the override leaves unset come from the saved
+                # config, never from the restoring host's device count — the
+                # checkpoint's shard axis is fixed on disk
+                config = config.replace(n_shards=saved.n_shards)
         backend = get_backend(config.backend)
+        config = _resolve_config(config, backend)
         mgr = CheckpointManager(directory)
-        # Restore against a host-side template: numpy leaves come back with
-        # the exact on-disk dtypes, so the int64 counters (edges_seen,
+        # Restore against a host-side, state-shape-aware template: the
+        # backend's init_fn builds the right pytree kind (ClusterState /
+        # SweepState / ShardedState) and numpy leaves come back with the
+        # exact on-disk dtypes, so the int64 counters (edges_seen,
         # stream_offset) are not demoted to int32 the way device placement
         # would.  Device tiers re-place the state themselves (to_device).
-        state_template = backend.init_fn(config.n).to_numpy()
+        state_template = backend.init_fn(config).to_numpy()
         template = {
             "cluster_state": state_template,
             "stream_offset": np.int64(0),

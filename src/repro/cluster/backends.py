@@ -3,17 +3,23 @@
 Thin adapters from the registry's uniform contract onto the state-threading
 tiers in ``repro.core`` / ``repro.kernels`` (DESIGN.md §3):
 
-======== ============================== ========= =========
-name     implementation                 resumable bit-exact
-======== ============================== ========= =========
-oracle   dict Algorithm 1 (paper space) yes       yes
-dense    numpy loop, node-id space      yes       yes
-scan     jax.lax.scan, 1 edge/step      yes       yes
-chunked  Jacobi chunks on the VPU       yes (†)   no
-pallas   serial-in-VMEM Pallas kernel   yes       yes
-multiparam  one-pass multi-v_max sweep  no        yes (‡)
-distributed local shards + merge pass   no        no
-======== ============================== ========= =========
+=========== ============================== ========== ========= =========
+name        implementation                 state kind resumable bit-exact
+=========== ============================== ========== ========= =========
+oracle      dict Algorithm 1 (paper space) cluster    yes       yes
+dense       numpy loop, node-id space      cluster    yes       yes
+scan        jax.lax.scan, 1 edge/step      cluster    yes       yes
+chunked     Jacobi chunks on the VPU       cluster    yes (†)   no
+pallas      serial-in-VMEM Pallas kernel   cluster    yes       yes
+multiparam  one-pass multi-v_max sweep     sweep      yes       yes (‡)
+distributed sharded local + merge pass     sharded    yes       no
+=========== ============================== ========== ========= =========
+
+Every tier is resumable: *resumable + out-of-core is the invariant, not the
+special case* — each backend's ``fn`` is pure state threading over one edge
+batch, and the two wide-state tiers derive labels at finalize time via
+``finalize_fn`` (selection for the sweep, the contracted merge for the
+sharded tier).
 
 † chunked partial_fit is deterministic but batch boundaries are Jacobi chunk
   boundaries, so labels depend on how the stream was batched.
@@ -22,28 +28,16 @@ distributed local shards + merge pass   no        no
 
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import multiparam as _multiparam
 from repro.core.chunked import chunked_update
-from repro.core.distributed import distributed_cluster
-from repro.core.state import ClusterState
+from repro.core.distributed import merge_sharded_state, sharded_update
+from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import dense_update, oracle_init, oracle_update, scan_update
 from repro.cluster.registry import BackendResult, register_backend
 from repro.kernels.edge_stream.ops import pallas_update
-
-
-def _require_fresh(state: ClusterState, name: str) -> None:
-    if int(state.edges_seen) != 0:
-        raise ValueError(
-            f"backend {name!r} is one-shot and cannot resume from a non-empty "
-            "state; use a resumable backend (oracle/dense/scan/chunked/pallas) "
-            "for StreamClusterer.partial_fit"
-        )
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +46,7 @@ def _require_fresh(state: ClusterState, name: str) -> None:
 
 @register_backend(
     "oracle",
-    init_fn=oracle_init,
+    init_fn=lambda config: oracle_init(config.n),
     resumable=True,
     bit_exact=True,
     label_space="oracle",
@@ -131,52 +125,78 @@ def _chunked(edges, config, state, mesh=None) -> BackendResult:
     return BackendResult(state=state, labels=state.c, info={})
 
 
-@register_backend(
-    "multiparam",
-    resumable=False,
-    bit_exact=True,
-    description="one-pass multi-v_max sweep + edge-free selection (paper §2.5)",
-)
-def _multiparam_backend(edges, config, state, mesh=None) -> BackendResult:
-    _require_fresh(state, "multiparam")
-    ej = jnp.asarray(edges)
-    sweep = _multiparam.cluster_stream_multiparam(
-        ej, jnp.asarray(config.v_maxes, jnp.int32), config.n
-    )
-    sel = _multiparam.select_result(sweep, criterion=config.criterion)
+def _multiparam_finalize(state: SweepState, config) -> BackendResult:
+    """Edge-free selection over the sweep columns; the result's state is the
+    selected column as a plain ClusterState (shared ``d``)."""
+    sel = _multiparam.select_result(state, criterion=config.criterion)
     best = sel["best_index"]
-    state = _multiparam.sweep_state(sweep, best, ej)
+    selected = state.entry(best)
     info = {
         "best_index": best,
         "best_v_max": sel["best_v_max"],
         "rows": sel["rows"],
-        # select_result above already pulls (A, n) to host once for the
-        # edge-free metrics; keeping the device array here avoids storing a
-        # second host copy for callers that never read sweep_labels.
-        "sweep_labels": sweep.c,
+        # select_result already pulls (A, n) to host for the edge-free
+        # metrics; keeping the state's array here avoids a second host copy
+        # for callers that never read sweep_labels.
+        "sweep_labels": state.c,
     }
-    return BackendResult(state=state, labels=state.c, info=info)
+    return BackendResult(state=selected, labels=selected.c, info=info)
+
+
+@register_backend(
+    "multiparam",
+    init_fn=lambda config: SweepState.init(config.n, config.v_maxes),
+    resumable=True,
+    bit_exact=True,
+    state_kind="sweep",
+    finalize_fn=_multiparam_finalize,
+    description="one-pass multi-v_max sweep + edge-free selection (paper "
+    "§2.5), state-threaded",
+)
+def _multiparam_backend(edges, config, state, mesh=None) -> BackendResult:
+    state = _multiparam.multiparam_update(state.to_device(), jnp.asarray(edges))
+    return BackendResult(state=state, labels=None, info={})
+
+
+def _resolved_shards(config) -> int:
+    # n_shards is the leading state axis; every API path pins it into the
+    # config (api._resolve_config) before init_fn runs.  One resolver only.
+    if config.n_shards is None:
+        raise ValueError(
+            "distributed init_fn needs config.n_shards pinned; go through "
+            "repro.cluster.cluster / StreamClusterer, or set it explicitly"
+        )
+    return int(config.n_shards)
+
+
+def _distributed_finalize(state: ShardedState, config) -> BackendResult:
+    v_max2 = config.v_max2 if config.v_max2 is not None else config.v_max
+    labels, merged = merge_sharded_state(
+        state, int(v_max2), chunk=config.chunk
+    )
+    return BackendResult(
+        state=merged, labels=labels, info={"n_shards": state.n_shards}
+    )
 
 
 @register_backend(
     "distributed",
-    resumable=False,
+    init_fn=lambda config: ShardedState.init(config.n, _resolved_shards(config)),
+    resumable=True,
     bit_exact=False,
-    accepts_source=True,
-    description="multi-device local shards + contracted global merge pass",
+    state_kind="sharded",
+    # NOT chunk_aligned: batches are this tier's unit of shard assignment, so
+    # rounding batch_edges up to a chunk multiple would merge windows and
+    # starve trailing shards (the chunked tier pads each batch internally).
+    finalize_fn=_distributed_finalize,
+    description="sharded local passes + contracted merge from per-shard "
+    "states (batch-dealt, out-of-core)",
 )
 def _distributed(edges, config, state, mesh=None) -> BackendResult:
-    _require_fresh(state, "distributed")
-    n_shards = config.n_shards
-    if mesh is None and n_shards is None:
-        n_shards = jax.device_count()
-    labels, info = distributed_cluster(
-        edges,  # array or EdgeSource; sharded out-of-core by ShardedSource
-        int(config.v_max),
-        config.n,
-        mesh=mesh,
-        n_shards=n_shards,
+    state = sharded_update(
+        state.to_device(),
+        jnp.asarray(edges),
+        jnp.int32(config.v_max),
         chunk=config.chunk,
-        v_max2=config.v_max2,
     )
-    return BackendResult(state=None, labels=labels, info=info)
+    return BackendResult(state=state, labels=None, info={})

@@ -29,18 +29,25 @@ class ClusterConfig:
         is O(batch_edges), the stream itself never materializes).  ``None``
         streams out-of-core sources at a default batch size and keeps
         in-memory arrays on the historical one-shot path; setting it forces
-        batched ingestion even for arrays.  Applies to the resumable
-        backends only — the one-shot tiers (``multiparam``,
-        ``distributed``) consume the whole stream regardless.  Rounded up
-        to a ``chunk`` multiple for the chunk-aligned tiers so batching
-        never moves a Jacobi/DMA boundary.
+        batched ingestion even for arrays.  Every backend is resumable, so
+        this applies uniformly — the sweep streams like any sequential
+        tier, and the ``distributed`` tier deals batches onto shards (with
+        ``batch_edges`` unset it defaults to one window per shard, capped
+        at the default batch size).  Rounded up to a ``chunk`` multiple for
+        the chunk-aligned tiers so batching never moves a Jacobi/DMA
+        boundary.
       v_maxes: multi-sweep thresholds for ``backend="multiparam"`` (paper
         §2.5: one pass, many parameters).
       criterion: edge-free sweep selector, ``"density"`` or ``"entropy"``.
       n_shards: stream shards for ``backend="distributed"`` (defaults to the
-        visible device count at call time).
+        visible device count — or the mesh's — at state-init time; pinned
+        into the config then, since it is the leading axis of the
+        :class:`~repro.core.state.ShardedState`).
       v_max2: merge-phase threshold for ``distributed`` (defaults to
-        ``v_max``).
+        ``v_max``).  The merge clusters the cross-shard identity stream
+        built from the per-shard states, so it only has effect when
+        ``n_shards > 1`` — a single-shard run is exactly one chunked pass
+        at ``v_max``.
       interpret: run Pallas kernels in interpret mode (True on CPU; set
         False on real TPUs).
     """

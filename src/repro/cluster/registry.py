@@ -8,13 +8,26 @@ adding an eighth top-level entry point.
 
 Backend contract::
 
+    init_fn(config) -> state                      # fresh state pytree
     fn(edges, config, state, mesh=None) -> BackendResult(state, labels, info)
+    finalize_fn(state, config) -> BackendResult   # optional
 
 * ``edges``: (m, 2) int array in stream order (PAD rows are no-ops).
-* ``state``: a :class:`ClusterState` produced by this backend's ``init_fn``
-  (fresh or carried from a previous batch when ``resumable``).
-* ``labels``: raw per-node label array in the backend's label space;
-  compare across backends via ``canonical_labels``.
+* ``state``: the pytree produced by this backend's ``init_fn`` (fresh or
+  carried from a previous batch) — its *kind* is declared by
+  ``state_kind`` (``"cluster"``: the 3n-int :class:`ClusterState`;
+  ``"sweep"``: the §2.5 :class:`~repro.core.state.SweepState`;
+  ``"sharded"``: the distributed :class:`~repro.core.state.ShardedState`).
+  The API layer dispatches on the kind instead of assuming ``ClusterState``,
+  which is what lets every tier ride the same resumable, out-of-core
+  ``partial_fit`` spine.
+* ``labels``: raw per-node label array in the backend's label space; a
+  backend with a ``finalize_fn`` may return ``labels=None`` from ``fn`` —
+  labels are then derived from state at finalize time (so per-batch ingest
+  stays pure state threading).  ``finalize_fn`` returns the
+  :class:`ClusterState` *view* of the result (e.g. the selected sweep entry,
+  the merged shard state), which is what :class:`repro.cluster.Clustering`
+  carries — so edge-free metrics work uniformly across state kinds.
 """
 
 from __future__ import annotations
@@ -24,11 +37,17 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 from repro.core.state import ClusterState
 
+STATE_KINDS = ("cluster", "sweep", "sharded")
+
 
 class BackendResult(NamedTuple):
-    state: Optional[ClusterState]  # None if the backend has no state pullback
-    labels: Any  # (n,) raw label array
+    state: Any  # the backend's state pytree (kind per Backend.state_kind)
+    labels: Any  # (n,) raw label array; None from fn when finalize_fn derives
     info: Dict[str, Any]
+
+
+def _default_init(config) -> ClusterState:
+    return ClusterState.init(config.n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,16 +56,18 @@ class Backend:
 
     name: str
     fn: Callable[..., BackendResult]
-    init_fn: Callable[[int], ClusterState]
+    init_fn: Callable[[Any], Any]  # config -> fresh state pytree
     resumable: bool  # supports partial_fit state threading
     bit_exact: bool  # strict stream order (identical to Algorithm 1)
+    state_kind: str = "cluster"  # which state pytree init_fn/fn thread
     label_space: str = "dense"  # "dense": c[i] is a node id, v[cid] its volume
     #                             "oracle": 1-based paper ids, v[cid-1]
     chunk_aligned: bool = False  # ingest batches must be config.chunk
     #   multiples for batching-invariant labels (Jacobi/DMA granularity); the
     #   BatchPipeline rounds its batch size up accordingly
-    accepts_source: bool = False  # fn handles an EdgeSource itself (no
-    #   materialization needed even though not resumable)
+    finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None
+    #   derive labels/info (and the ClusterState view of the result) from
+    #   state alone — required when fn returns labels=None
     description: str = ""
 
 
@@ -56,17 +77,22 @@ _REGISTRY: Dict[str, Backend] = {}
 def register_backend(
     name: str,
     *,
-    init_fn: Callable[[int], ClusterState] = ClusterState.init,
+    init_fn: Callable[[Any], Any] = _default_init,
     resumable: bool = False,
     bit_exact: bool = False,
+    state_kind: str = "cluster",
     label_space: str = "dense",
     chunk_aligned: bool = False,
-    accepts_source: bool = False,
+    finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None,
     description: str = "",
 ):
     """Decorator: register ``fn`` as backend ``name``.  Re-registration under
     an existing name is an error (shadowing a tier silently would poison the
     cross-backend equivalence tests)."""
+    if state_kind not in STATE_KINDS:
+        raise ValueError(
+            f"unknown state_kind {state_kind!r}; expected one of {STATE_KINDS}"
+        )
 
     def deco(fn: Callable[..., BackendResult]):
         if name in _REGISTRY:
@@ -77,9 +103,10 @@ def register_backend(
             init_fn=init_fn,
             resumable=resumable,
             bit_exact=bit_exact,
+            state_kind=state_kind,
             label_space=label_space,
             chunk_aligned=chunk_aligned,
-            accepts_source=accepts_source,
+            finalize_fn=finalize_fn,
             description=description,
         )
         return fn

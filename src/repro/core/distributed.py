@@ -1,109 +1,158 @@
-"""Multi-device streaming clustering: local pass + contracted global pass.
+"""Sharded streaming clustering: per-shard local passes + contracted merge.
 
 Beyond-paper distributed extension (paper §5 names parallelism as future
-work).  The stream is split into ``P`` contiguous shards, one per device on
-the ``data`` mesh axis:
+work).  The stream is dealt onto ``P`` shards at batch granularity
+(:class:`~repro.core.state.ShardedState` — one batch per shard reproduces
+contiguous window sharding; more batches stripe an order-preserving
+subsequence onto each shard):
 
-1. **Local phase** (``shard_map``): every device runs the chunked Tier-2
-   clusterer on its shard only — zero communication.
-2. **Merge phase**: shard-local labels live in the global node-id space (a
-   label is the founding node's id), so merging is a second clustering run on
-   a *contracted stream*: (i) identity edges ``(c_s[i], c_{s+1}[i])`` linking
-   each node's supernodes across consecutive shards — streamed FIRST so merges
-   happen while volumes are small, then (ii) every original edge rewritten to
-   its shard's supernodes.  Final label of node ``i`` is the phase-2 label of
-   its first-active shard supernode.
+1. **Local phase** (:func:`sharded_update`): each arriving batch runs the
+   chunked Tier-2 clusterer against its shard's slice of the stacked state —
+   zero cross-shard communication, host edge residency O(batch).  The old
+   path that stacked the whole stream into one O(m) ``(P, shard_len, 2)``
+   device array is gone; :func:`distributed_cluster` now drains
+   ``ShardedSource.shards()`` window by window through the same update.
+2. **Merge phase** (:func:`merge_sharded_state`): built *from the per-shard
+   states alone* — no replay of the stream.  Shard-local labels live in the
+   global node-id space (a label is the founding node's id), so merging is a
+   second clustering run over the identity edges ``(c_s[i], c_{s+1}[i])``
+   linking each node's supernodes across consecutive shards, with the
+   phase-2 state seeded by each supernode's shard-local volume (its internal
+   mass — what the old contracted self-loop pass approximated).  Final label
+   of node ``i`` is the phase-2 label of its first-active shard supernode.
 
-Quality vs the single-stream algorithm is measured in
-``benchmarks/table2_quality.py`` — not assumed.
+Because the merge needs only ``(c, d, v)`` per shard, the tier is resumable:
+a :class:`ShardedState` checkpoints mid-stream like any other state pytree
+and labels can be derived at any point.  Quality vs the single-stream
+algorithm is measured in ``benchmarks/table2_quality.py`` — not assumed.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.chunked import chunked_update
-from repro.core.state import ClusterState
+from repro.core.state import ClusterState, ShardedState, count_live_edges
 from repro.core.streaming import PAD
 from repro.graph.sources import ShardedSource, as_source
 
 Array = jax.Array
 
-
-def _local_phase(shards: Array, v_max: int, n: int, chunk: int):
-    """vmapped local clustering; one shard per device under pjit."""
-
-    def one(shard):
-        s = chunked_update(
-            ClusterState.init(n), shard, jnp.int32(v_max), chunk=chunk
-        )
-        return s.c, s.d, s.v
-
-    return jax.vmap(one)(shards)
+# Edges per drain batch in the one-shot ``distributed_cluster`` driver —
+# bounds host residency per shard regardless of shard length.
+_DRAIN_BATCH_EDGES = 1 << 20
 
 
-@functools.partial(
-    jax.jit, static_argnames=("v_max", "n", "chunk", "v_max2")
-)
-def _merge_phase(
-    shards: Array,
-    cs: Array,
-    ds: Array,
-    v_max: int,
-    n: int,
-    chunk: int,
-    v_max2: int,
-):
-    """Contract + global clustering + label pull-back (replicated compute)."""
-    Pn = cs.shape[0]
-    # Identity edges: consecutive-shard supernodes of each active node.
-    active = ds > 0  # (P, n)
-    ident = []
-    for s in range(Pn - 1):
-        both = active[s] & active[s + 1]
-        a = jnp.where(both, cs[s], PAD)
-        b = jnp.where(both, cs[s + 1], PAD)
-        ident.append(jnp.stack([a, b], axis=1))
-    ident = (
-        jnp.concatenate(ident, axis=0)
-        if ident
-        else jnp.zeros((0, 2), jnp.int32)
+def mesh_shards(mesh: Optional[Mesh]) -> Optional[int]:
+    """Shard count implied by a mesh (product over all axes), or ``None``."""
+    if mesh is None:
+        return None
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+
+def sharded_update(
+    state: ShardedState,
+    edges: Array,
+    v_max: Array,
+    chunk: int = 1024,
+    shard: Optional[int] = None,
+) -> ShardedState:
+    """Ingest one edge batch into one shard of a :class:`ShardedState`.
+
+    ``shard`` defaults to ``cursor % P`` (round-robin batch dealing); the
+    explicit form is used by :func:`distributed_cluster` to drain contiguous
+    ``ShardedSource`` windows.  The cursor advances either way, so resumed
+    runs continue the dealing sequence deterministically.
+    """
+    P = state.n_shards
+    s = int(state.cursor) % P if shard is None else int(shard)
+    sub = ClusterState(
+        d=state.d[s], c=state.c[s], v=state.v[s], edges_seen=jnp.int32(0)
     )
-    # Original edges rewritten to their own shard's supernodes.
-    def rewrite(shard, c_s):
-        live = (shard[:, 0] != PAD) & (shard[:, 1] != PAD)
-        a = jnp.where(live, c_s[jnp.maximum(shard[:, 0], 0)], PAD)
-        b = jnp.where(live, c_s[jnp.maximum(shard[:, 1], 0)], PAD)
-        return jnp.stack([a, b], axis=1)
+    sub = chunked_update(sub, jnp.asarray(edges), jnp.int32(v_max), chunk=chunk)
+    return ShardedState(
+        d=state.d.at[s].set(sub.d),
+        c=state.c.at[s].set(sub.c),
+        v=state.v.at[s].set(sub.v),
+        cursor=state.cursor + 1,
+        edges_seen=state.edges_seen + count_live_edges(edges, PAD),
+    )
 
-    contracted = jax.vmap(rewrite)(shards, cs).reshape(-1, 2)
-    stream2 = jnp.concatenate([ident, contracted], axis=0)
-    # Intra-supernode contracted edges become self-loops, which the clusterer
-    # skips — seed the phase-2 state with that internal mass (+2 per edge) so
-    # the v_max threshold still sees each supernode's true volume.
-    selfmask = (stream2[:, 0] == stream2[:, 1]) & (stream2[:, 0] != PAD)
-    tgt = jnp.where(selfmask, stream2[:, 0], n)
-    self_mass = (
-        jnp.zeros(n + 1, jnp.int32).at[tgt].add(2 * selfmask.astype(jnp.int32))
-    )[:n]
+
+def merge_sharded_state(
+    state: ShardedState,
+    v_max2: int,
+    chunk: int = 1024,
+) -> Tuple[np.ndarray, ClusterState]:
+    """Contract + global clustering + label pull-back, from per-shard states.
+
+    Returns ``(labels, merged_state)``: dense-space labels for every node and
+    a merged :class:`ClusterState` (true node degrees, final labels, volumes
+    re-derived as per-community degree sums) so the edge-free metrics
+    (entropy / avg density) are available for this tier like any other.
+    """
+    n, P = state.n, state.n_shards
+    cs = np.asarray(state.c)
+    ds = np.asarray(state.d)
+    vs = np.asarray(state.v)
+    active = ds > 0  # (P, n)
+
+    # Identity edges: each active node links its supernodes in *successive
+    # active* shards (not adjacent shard indices — under batch striping a
+    # node may skip a shard, and its chain must not break there).
+    ident = []
+    prev_label = np.full(n, PAD, np.int32)  # label at the node's last active shard
+    for s in range(P):
+        both = active[s] & (prev_label != PAD)
+        if s > 0:
+            a = np.where(both, prev_label, PAD).astype(np.int32)
+            b = np.where(both, cs[s], PAD).astype(np.int32)
+            ident.append(np.stack([a, b], axis=1))
+        prev_label = np.where(active[s], cs[s], prev_label)
+    ident_edges = (
+        np.concatenate(ident, axis=0) if ident else np.zeros((0, 2), np.int32)
+    )
+
+    # Phase-2 seed: each supernode's shard-local volume is its internal mass;
+    # masked to communities actually founded in that shard (stale volume
+    # residue of absorbed communities must not leak in).
+    seed_mass = np.zeros(n, np.int64)
+    idx = np.arange(n)
+    for s in range(P):
+        live = np.zeros(n, bool)
+        live[cs[s][active[s]]] = True
+        seed_mass += np.where(live, vs[s], 0)
     seed = ClusterState.init(n)
-    seed.d = self_mass
-    seed.v = self_mass
-    c2 = chunked_update(seed, stream2, jnp.int32(v_max2), chunk=chunk).c
+    seed.d = jnp.asarray(np.minimum(seed_mass, np.iinfo(np.int32).max), jnp.int32)
+    seed.v = seed.d
+    c2 = np.asarray(
+        chunked_update(
+            seed, jnp.asarray(ident_edges), jnp.int32(v_max2), chunk=chunk
+        ).c
+    )
 
     # Pull back: node -> first-active-shard supernode -> phase-2 label.
     any_active = active.any(axis=0)
-    s_first = jnp.argmax(active, axis=0)
-    label1 = jnp.where(
-        any_active, cs[s_first, jnp.arange(n)], jnp.arange(n, dtype=jnp.int32)
+    s_first = np.argmax(active, axis=0)
+    label1 = np.where(any_active, cs[s_first, idx], idx.astype(np.int32))
+    labels = c2[label1]
+
+    d_total = ds.sum(axis=0, dtype=np.int64)
+    d32 = np.minimum(d_total, np.iinfo(np.int32).max).astype(np.int32)
+    v_merged = np.zeros(n, np.int64)
+    np.add.at(v_merged, labels, d_total)
+    merged = ClusterState(
+        d=d32,
+        c=labels.astype(np.int32),
+        v=np.minimum(v_merged, np.iinfo(np.int32).max).astype(np.int32),
+        edges_seen=np.int64(state.edges_seen),
     )
-    return c2[label1]
+    return labels, merged
 
 
 def distributed_cluster(
@@ -115,33 +164,24 @@ def distributed_cluster(
     chunk: int = 1024,
     v_max2: Optional[int] = None,
 ) -> Tuple[np.ndarray, dict]:
-    """Cluster an edge stream across devices.  Returns (labels, info).
+    """Cluster an edge stream across ``P`` contiguous shards.
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="distributed")``.
 
     ``edges`` may be a host array or any :class:`repro.graph.sources
-    .EdgeSource`; out-of-core sources are split contiguously by
-    ``ShardedSource`` with a single streaming fill (the stacked shard array
-    itself is O(m) by necessity — all shards live on devices at once).
+    .EdgeSource`.  Each ``ShardedSource`` window is drained batch-by-batch
+    through the chunked tier's state threading (:func:`sharded_update`), so
+    host edge residency is O(batch) per shard — the stacked O(m) device
+    array of the previous implementation no longer exists.  ``mesh`` is
+    accepted for the shard count only (``P = prod(mesh axes)``).
     """
-    if mesh is not None:
-        n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    n_shards = n_shards or 1
+    n_shards = mesh_shards(mesh) or n_shards or 1
     v_max2 = v_max2 if v_max2 is not None else v_max
-    # ShardedSource.stacked fills (n_shards, shard_len, 2) with one streaming
-    # pass; for an in-memory array that is the same single copy shard_stream
-    # would make, so every source type takes this one path.
-    shards = jnp.asarray(ShardedSource(as_source(edges), n_shards).stacked())
-
-    local = jax.jit(
-        functools.partial(_local_phase, v_max=v_max, n=n, chunk=chunk)
-    )
-    if mesh is not None:
-        spec = NamedSharding(mesh, P(mesh.axis_names))
-        shards = jax.device_put(shards, spec)
-        local = jax.jit(
-            functools.partial(_local_phase, v_max=v_max, n=n, chunk=chunk),
-            in_shardings=spec,
-        )
-    cs, ds, vs = local(shards)
-    labels = _merge_phase(shards, cs, ds, v_max, n, chunk, v_max2)
+    sharded = ShardedSource(as_source(edges), n_shards)
+    state = ShardedState.init(n, n_shards)
+    for s, window in enumerate(sharded.shards()):
+        for batch in window.batches(_DRAIN_BATCH_EDGES):
+            state = sharded_update(state, batch, v_max, chunk=chunk, shard=s)
+    labels, _ = merge_sharded_state(state, v_max2, chunk=chunk)
     info = {"n_shards": n_shards}
     return np.asarray(labels), info

@@ -1,4 +1,4 @@
-"""One-pass multi-``v_max`` sweep (paper §2.5).
+"""One-pass multi-``v_max`` sweep (paper §2.5) — state-threaded.
 
 The degree dictionary ``d`` is independent of ``v_max``; only ``(c, v)`` are
 duplicated per parameter value — exactly the paper's observation.  The sweep
@@ -6,6 +6,14 @@ runs all ``A`` parameter values in a single pass over the stream, then selects
 a result using *edge-free* metrics (entropy / average density) computable from
 ``(c, v)`` alone.  Modularity is intentionally not offered as a selector: its
 computation needs the whole graph (paper §2.5).
+
+:func:`multiparam_update` is the resumable tier: it takes and returns a
+:class:`repro.core.state.SweepState`, so the stream can arrive in arbitrary
+batches (``repro.cluster.StreamClusterer.partial_fit``) — k batches produce
+a sweep bit-identical to the one-shot scan, because the per-edge ``lax.scan``
+threads exactly the same state across batch boundaries and PAD rows are
+no-ops.  The one-shot :func:`cluster_stream_multiparam` remains as a thin
+shim.
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.metrics import avg_density_from_state, entropy_from_state
-from repro.core.state import ClusterState, count_live_edges
+from repro.core.state import SweepState, count_live_edges
 from repro.core.streaming import PAD
 
 Array = jax.Array
@@ -61,48 +69,71 @@ def _edge_update_multi(state, edge, *, n: int):
     return (d, c, v, vmaxes), ()
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def cluster_stream_multiparam(edges: Array, v_maxes: Array, n: int) -> SweepResult:
-    """Run Algorithm 1 for every value in ``v_maxes`` in one pass."""
-    A = v_maxes.shape[0]
+@jax.jit
+def multiparam_update(state: SweepState, edges: Array) -> SweepState:
+    """State-threading §2.5 sweep tier: ingest ``edges`` into ``state``.
+
+    Strictly sequential (one edge per ``lax.scan`` step, all ``A`` parameter
+    values vectorized per step), so every sweep column is bit-exact with a
+    single-parameter ``scan``/``dense`` run at that ``v_max``, and batched
+    ingestion is bit-identical to the one-shot run regardless of batching.
+    The slot-``n`` write sink for PAD/self-loop rows is appended/stripped
+    here, as in the chunked tier.
+    """
+    n = state.d.shape[0]
+    A = state.c.shape[0]
     edges = edges.astype(jnp.int32)
-    c0 = jnp.broadcast_to(
-        jnp.concatenate([jnp.arange(n, dtype=jnp.int32), jnp.int32([n])]), (A, n + 1)
-    )
+    sink_col = jnp.full((A, 1), n, jnp.int32)
     init = (
-        jnp.zeros(n + 1, jnp.int32),
-        c0,
-        jnp.zeros((A, n + 1), jnp.int32),
-        v_maxes.astype(jnp.int32),
+        jnp.concatenate([state.d.astype(jnp.int32), jnp.int32([0])]),
+        jnp.concatenate([state.c.astype(jnp.int32), sink_col], axis=1),
+        jnp.concatenate(
+            [state.v.astype(jnp.int32), jnp.zeros((A, 1), jnp.int32)], axis=1
+        ),
+        state.v_maxes.astype(jnp.int32),
     )
     (d, c, v, _), _ = jax.lax.scan(
         functools.partial(_edge_update_multi, n=n), init, edges
     )
-    return SweepResult(c=c[:, :n], d=d[:n], v=v[:, :n], v_max=v_maxes)
-
-
-def sweep_state(result: SweepResult, index: int, edges: Array) -> ClusterState:
-    """The :class:`ClusterState` of one sweep entry (shared ``d``, per-``v_max``
-    ``c``/``v``) — lets the unified API return sweep picks in the common state
-    representation."""
-    return ClusterState(
-        d=result.d,
-        c=result.c[index],
-        v=result.v[index],
-        edges_seen=count_live_edges(edges, PAD),
+    return SweepState(
+        d=d[:n],
+        c=c[:, :n],
+        v=v[:, :n],
+        v_maxes=state.v_maxes,
+        edges_seen=state.edges_seen + count_live_edges(edges, PAD),
     )
 
 
-def select_result(result: SweepResult, criterion: str = "density") -> Dict:
-    """Pick the best sweep entry using edge-free metrics (paper §2.5)."""
+def cluster_stream_multiparam(edges: Array, v_maxes: Array, n: int) -> SweepResult:
+    """One-shot Algorithm 1 for every value in ``v_maxes`` in one pass.
+
+    .. deprecated:: use ``repro.cluster.cluster(..., backend="multiparam")``;
+       this is a shim over the state-threading :func:`multiparam_update`.
+    """
+    s = multiparam_update(
+        SweepState.init(int(n), np.asarray(v_maxes)), jnp.asarray(edges)
+    )
+    return SweepResult(c=s.c, d=s.d, v=s.v, v_max=jnp.asarray(v_maxes))
+
+
+def select_result(result, criterion: str = "density") -> Dict:
+    """Pick the best sweep entry using edge-free metrics (paper §2.5).
+
+    ``result`` may be a :class:`SweepResult` or a
+    :class:`~repro.core.state.SweepState` (same field layout for ``c``/``d``/
+    ``v``).
+    """
     c = np.asarray(result.c)
     v = np.asarray(result.v)
     w = float(np.asarray(result.d).sum())
+    v_maxes = np.asarray(
+        result.v_max if isinstance(result, SweepResult) else result.v_maxes
+    )
     rows = []
     for a in range(c.shape[0]):
         rows.append(
             {
-                "v_max": int(np.asarray(result.v_max)[a]),
+                "v_max": int(v_maxes[a]),
                 "entropy": entropy_from_state(v[a], w),
                 "density": avg_density_from_state(c[a], v[a]),
             }

@@ -1,14 +1,26 @@
-"""The streaming-clustering state pytree — the paper's ``3n`` integers.
+"""The streaming-clustering state pytrees.
 
-:class:`ClusterState` is the single state representation shared by every
-clustering backend (DESIGN.md §3/§6): degree ``d``, community label ``c``,
-community volume ``v`` (all size ``n``, int32, dense node-id label space)
-plus an ``edges_seen`` counter of live edges ingested so far.
+:class:`ClusterState` is the paper's ``3n`` integers (DESIGN.md §3/§6):
+degree ``d``, community label ``c``, community volume ``v`` (all size ``n``,
+int32, dense node-id label space) plus an ``edges_seen`` counter of live
+edges ingested so far.
 
-It is a registered JAX pytree, so it flows through ``jit``/``scan`` and is
-serializable as-is by :class:`repro.checkpoint.manager.CheckpointManager` —
-that is what makes clustering suspendable/resumable across sessions
-(:class:`repro.cluster.StreamClusterer`).
+Two wider siblings make *every* tier resumable and out-of-core rather than
+just the single-parameter ones:
+
+* :class:`SweepState` — the §2.5 multi-``v_max`` sweep: one shared ``d`` of
+  size ``n`` plus ``(A, n)`` ``c``/``v`` (degrees are parameter-independent;
+  only labels and volumes fork per ``v_max``).
+* :class:`ShardedState` — the distributed tier: ``P`` per-shard
+  ``ClusterState``s stacked on a leading shard axis, plus a batch cursor so
+  arriving batches deal onto shards deterministically.
+
+All three are registered JAX pytrees, so they flow through ``jit``/``scan``
+and are serializable as-is by
+:class:`repro.checkpoint.manager.CheckpointManager` — that is what makes
+clustering suspendable/resumable across sessions for every backend
+(:class:`repro.cluster.StreamClusterer`): a sweep or sharded checkpoint is
+just a wider pytree riding the same manager.
 """
 
 from __future__ import annotations
@@ -83,6 +95,164 @@ class ClusterState:
         )
 
     def block_until_ready(self) -> "ClusterState":
+        for leaf in (self.d, self.c, self.v):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return self
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SweepState:
+    """Multi-``v_max`` sweep state (paper §2.5) — the degree dictionary is
+    independent of ``v_max``, so ``d`` is shared across all ``A`` parameter
+    values while ``(c, v)`` fork per value.  Footprint: ``(2A + 1) n`` ints
+    vs ``A`` independent runs' ``3An``.
+    """
+
+    d: Array  # (n,)   int32 shared node degrees
+    c: Array  # (A, n) int32 community labels per v_max
+    v: Array  # (A, n) int32 community volumes per v_max
+    v_maxes: Array  # (A,) int32 the swept thresholds (carried in-state so a
+    #   checkpoint is self-describing and a resumed run cannot silently
+    #   continue under different parameters)
+    edges_seen: Array  # () live edges ingested (see ClusterState.edges_seen)
+
+    @classmethod
+    def init(cls, n: int, v_maxes, *, numpy: bool = False) -> "SweepState":
+        """Fresh sweep state for ``n`` nodes and the given ``v_maxes``."""
+        v_maxes = np.asarray(v_maxes, np.int32)
+        A = int(v_maxes.shape[0])
+        if numpy:
+            return cls(
+                d=np.zeros(n, np.int32),
+                c=np.broadcast_to(np.arange(n, dtype=np.int32), (A, n)).copy(),
+                v=np.zeros((A, n), np.int32),
+                v_maxes=v_maxes,
+                edges_seen=np.int64(0),
+            )
+        return cls(
+            d=jnp.zeros(n, jnp.int32),
+            c=jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (A, n)),
+            v=jnp.zeros((A, n), jnp.int32),
+            v_maxes=jnp.asarray(v_maxes),
+            edges_seen=jnp.int32(0),
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.d.shape[0])
+
+    @property
+    def A(self) -> int:
+        return int(self.v_maxes.shape[0])
+
+    def entry(self, index: int) -> ClusterState:
+        """One sweep column as a plain :class:`ClusterState` (shared ``d``,
+        per-``v_max`` ``c``/``v``) — the common representation the unified
+        API returns for the selected parameter value."""
+        return ClusterState(
+            d=self.d,
+            c=self.c[index],
+            v=self.v[index],
+            edges_seen=self.edges_seen,
+        )
+
+    def to_numpy(self) -> "SweepState":
+        return SweepState(
+            d=np.asarray(self.d),
+            c=np.asarray(self.c),
+            v=np.asarray(self.v),
+            v_maxes=np.asarray(self.v_maxes),
+            edges_seen=np.int64(self.edges_seen),
+        )
+
+    def to_device(self) -> "SweepState":
+        return SweepState(
+            d=jnp.asarray(self.d, jnp.int32),
+            c=jnp.asarray(self.c, jnp.int32),
+            v=jnp.asarray(self.v, jnp.int32),
+            v_maxes=jnp.asarray(self.v_maxes, jnp.int32),
+            edges_seen=jnp.asarray(self.edges_seen, jnp.int32),
+        )
+
+    def block_until_ready(self) -> "SweepState":
+        for leaf in (self.d, self.c, self.v):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return self
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedState:
+    """Distributed-tier state: ``P`` per-shard Algorithm-1 states stacked on
+    a leading shard axis.
+
+    Arriving batches are dealt onto shards by ``cursor`` (round-robin over
+    batches): with one batch per shard the split is the classic contiguous
+    window sharding; with more batches each shard ingests an interleaved,
+    order-preserving subsequence of the stream — the paper's streaming
+    argument applies within every shard either way, and the assignment is a
+    pure function of the batch index, so runs are deterministic and
+    checkpoint/resume safe (the cursor is a state leaf).
+    """
+
+    d: Array  # (P, n) int32 per-shard node degrees
+    c: Array  # (P, n) int32 per-shard community labels (node-id space)
+    v: Array  # (P, n) int32 per-shard community volumes
+    cursor: Array  # () int32 batches ingested so far (next shard = cursor % P)
+    edges_seen: Array  # () live edges ingested across all shards
+
+    @classmethod
+    def init(cls, n: int, n_shards: int, *, numpy: bool = False) -> "ShardedState":
+        if numpy:
+            return cls(
+                d=np.zeros((n_shards, n), np.int32),
+                c=np.broadcast_to(
+                    np.arange(n, dtype=np.int32), (n_shards, n)
+                ).copy(),
+                v=np.zeros((n_shards, n), np.int32),
+                cursor=np.int64(0),
+                edges_seen=np.int64(0),
+            )
+        return cls(
+            d=jnp.zeros((n_shards, n), jnp.int32),
+            c=jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (n_shards, n)),
+            v=jnp.zeros((n_shards, n), jnp.int32),
+            cursor=jnp.int32(0),
+            edges_seen=jnp.int32(0),
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.d.shape[1])
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.d.shape[0])
+
+    def to_numpy(self) -> "ShardedState":
+        return ShardedState(
+            d=np.asarray(self.d),
+            c=np.asarray(self.c),
+            v=np.asarray(self.v),
+            cursor=np.int64(self.cursor),
+            edges_seen=np.int64(self.edges_seen),
+        )
+
+    def to_device(self) -> "ShardedState":
+        return ShardedState(
+            d=jnp.asarray(self.d, jnp.int32),
+            c=jnp.asarray(self.c, jnp.int32),
+            v=jnp.asarray(self.v, jnp.int32),
+            cursor=jnp.asarray(self.cursor, jnp.int32),
+            edges_seen=jnp.asarray(self.edges_seen, jnp.int32),
+        )
+
+    def block_until_ready(self) -> "ShardedState":
         for leaf in (self.d, self.c, self.v):
             if hasattr(leaf, "block_until_ready"):
                 leaf.block_until_ready()

@@ -65,8 +65,9 @@ class EdgeSource:
         return sum(int(sl.shape[0]) for sl in self.iter_slices(0))
 
     def materialize(self) -> np.ndarray:
-        """The full stream as one host array — O(m) memory, for the
-        non-resumable tiers (multiparam) and tests only."""
+        """The full stream as one host array — O(m) memory.  Tests and
+        non-streaming baselines only: every registered backend ingests
+        sources out-of-core, so no API path calls this."""
         parts = [np.asarray(sl, np.int32) for sl in self.iter_slices(0)]
         if not parts:
             return np.zeros((0, 2), np.int32)
@@ -334,10 +335,12 @@ class ShardedSource(EdgeSource):
         ]
 
     def stacked(self) -> np.ndarray:
-        """The device-ready ``(n_shards, shard_len, 2)`` PAD-padded stack.
+        """The ``(n_shards, shard_len, 2)`` PAD-padded stack — O(m) output.
 
-        O(m) output by necessity (all shards live on devices at once); built
-        with a single streaming fill — no second full host copy.
+        Reference implementation only (kept for its unit test against the
+        vectorized ``shard_stream``): the distributed tier now drains
+        :meth:`shards` window by window through the chunked tier's
+        ``partial_fit``, so no production path materializes this array.
         """
         L = self.shard_len
         out = np.full((self.n_shards * L, 2), PAD, dtype=np.int32)

@@ -46,13 +46,23 @@ def test_registry_lists_all_seven_backends():
 
 
 def test_backend_capabilities():
+    """Resumable + out-of-core is the invariant: every registered tier
+    threads a state pytree through partial_fit."""
+    for name in ALL_BACKENDS:
+        assert get_backend(name).resumable, name
     for name in SEQUENTIAL:
-        b = get_backend(name)
-        assert b.bit_exact and b.resumable, name
-    assert get_backend("chunked").resumable
+        assert get_backend(name).bit_exact, name
     assert not get_backend("chunked").bit_exact
-    for name in ("multiparam", "distributed"):
-        assert not get_backend(name).resumable, name
+    assert not get_backend("distributed").bit_exact
+    assert get_backend("multiparam").bit_exact  # per sweep column
+    # state-kind dispatch: the API layer no longer assumes ClusterState
+    kinds = {name: get_backend(name).state_kind for name in ALL_BACKENDS}
+    assert kinds["multiparam"] == "sweep"
+    assert kinds["distributed"] == "sharded"
+    assert all(kinds[b] == "cluster" for b in RESUMABLE)
+    # labels of the wide-state tiers are derived at finalize time
+    assert get_backend("multiparam").finalize_fn is not None
+    assert get_backend("distributed").finalize_fn is not None
     with pytest.raises(KeyError):
         get_backend("nope")
 
@@ -173,16 +183,68 @@ def test_partial_fit_chunked_deterministic_and_valid():
     assert int(np.asarray(a.state.v).sum()) == 2 * m
 
 
-@pytest.mark.parametrize("backend", ["multiparam", "distributed"])
-def test_one_shot_backends_refuse_partial_fit(backend):
-    kw = (
-        dict(v_max=None, v_maxes=(2, 4))
-        if backend == "multiparam"
-        else dict(v_max=4)
+def test_multiparam_partial_fit_matches_one_shot():
+    """The sweep is a partial_fit backend now: k batches through the wider
+    SweepState produce labels bit-identical to the one-shot call."""
+    n, m = 80, 500
+    edges = _random_stream(n, m, 11)
+    cfg = ClusterConfig(n=n, backend="multiparam", v_maxes=(4, 16, 64))
+    one_shot = cluster(edges, cfg)
+    sc = StreamClusterer(cfg)
+    for batch in np.array_split(edges, 5):
+        sc.partial_fit(batch)
+    res = sc.finalize()
+    assert np.array_equal(res.labels, one_shot.labels)
+    assert res.info["best_v_max"] == one_shot.info["best_v_max"]
+    assert sc.edges_seen == m
+    # finalize does not consume the sweep: the clusterer still threads the
+    # wide state while the result carries the selected ClusterState view
+    assert sc.state.c.ndim == 2 and res.state.c.ndim == 1
+
+
+def test_distributed_partial_fit_deals_batches_onto_shards():
+    n, m = 100, 800
+    edges = _random_stream(n, m, 41)
+    cfg = ClusterConfig(
+        n=n, v_max=8, backend="distributed", n_shards=4, chunk=32
     )
-    cfg = ClusterConfig(n=20, backend=backend, **kw)
-    with pytest.raises(ValueError, match="partial_fit"):
-        StreamClusterer(cfg)
+    sc = StreamClusterer(cfg)
+    for batch in np.array_split(edges, 4):
+        sc.partial_fit(batch)
+    res = sc.finalize()
+    assert int(sc.state.cursor) == 4
+    # every shard ingested one batch
+    assert (np.asarray(sc.state.d).sum(axis=1) > 0).all()
+    assert sc.edges_seen == m
+    # the merged state makes edge-free metrics available for this tier
+    assert res.state is not None and res.entropy is not None
+    assert int(np.asarray(res.state.d).sum()) == 2 * m
+
+
+def test_sweep_state_rejects_mismatched_v_maxes():
+    """A carried/restored sweep state must match config.v_maxes — resuming
+    under different parameters would silently corrupt the sweep."""
+    cfg = ClusterConfig(n=20, backend="multiparam", v_maxes=(2, 4))
+    sc = StreamClusterer(cfg)
+    sc.partial_fit(_random_stream(20, 50, 43))
+    with pytest.raises(ValueError, match="v_maxes"):
+        cluster(
+            _random_stream(20, 10, 44),
+            ClusterConfig(n=20, backend="multiparam", v_maxes=(2, 8)),
+            state=sc.state,
+        )
+
+
+def test_sharded_state_rejects_mismatched_shard_count():
+    cfg = ClusterConfig(n=20, v_max=4, backend="distributed", n_shards=2)
+    sc = StreamClusterer(cfg)
+    sc.partial_fit(_random_stream(20, 50, 45))
+    with pytest.raises(ValueError, match="n_shards"):
+        cluster(
+            _random_stream(20, 10, 46),
+            cfg.replace(n_shards=3),
+            state=sc.state,
+        )
 
 
 def test_finalize_before_any_batch_is_all_singletons():
@@ -272,6 +334,21 @@ def test_restore_rejects_cross_label_space_override(tmp_path):
     assert StreamClusterer.restore(
         str(tmp_path), config=_cfg("pallas", n=40)
     ).edges_seen == 100
+
+
+def test_restore_rejects_cross_state_kind_override(tmp_path):
+    """A sweep checkpoint is a wider pytree — restoring it as a 3n-int
+    backend (or vice versa) is rejected by the state-kind check."""
+    sc = StreamClusterer(ClusterConfig(n=30, backend="multiparam", v_maxes=(4, 8)))
+    sc.partial_fit(_random_stream(30, 100, 53))
+    sc.save(str(tmp_path))
+    with pytest.raises(ValueError, match="state kind"):
+        StreamClusterer.restore(str(tmp_path), config=_cfg("scan", n=30))
+    # same-kind restore round-trips the full sweep
+    sc2 = StreamClusterer.restore(str(tmp_path))
+    assert sc2.edges_seen == sc.edges_seen
+    assert np.array_equal(np.asarray(sc2.state.c), np.asarray(sc.state.c))
+    assert np.array_equal(np.asarray(sc2.state.v_maxes), [4, 8])
 
 
 def test_carried_state_must_match_config_n(tmp_path):
