@@ -7,6 +7,10 @@ quality across commits, not absolute numbers.  ``streaming_tiers`` rows
 record the memory frontier of the two wide-state tiers (multiparam sweep,
 sharded distributed): measured peak edge-buffer bytes vs the bytes the
 stream would occupy materialized, next to each tier's state bytes.
+``compressed_stream`` rows record the ingest-bandwidth frontier: on-disk
+bytes/edge and decode throughput for the raw vs delta+varint codecs (the
+dvc ratio staying under 0.5x raw is checked structurally — it is a format
+property, not a runner-speed number).
 
     PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_smoke.json]
                                               [--baseline BENCH_smoke.json]
@@ -70,6 +74,55 @@ def streaming_tiers():
     return rows
 
 
+def compressed_stream():
+    """Codec rows: on-disk bytes/edge and decode throughput, raw vs dvc.
+
+    The stream is the delta codec's target regime — sorted-by-source with
+    community locality (the SNAP/CSR-ish on-disk layout) — so the row
+    records the bandwidth trade the codec exists for: fewer stream bytes
+    for vectorized decode compute.
+    """
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.graph.codecs import DeltaVarintCodec, RawCodec
+    from repro.graph.sources import CodecFileSource
+
+    n, m = 20_000, 400_000
+    rng = np.random.default_rng(23)
+    i = np.sort(rng.integers(0, n, m).astype(np.int64))
+    j = (i + rng.integers(-64, 65, m)) % n
+    edges = np.stack([i, np.where(j == i, (j + 1) % n, j)], 1).astype(np.int32)
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        for name, codec in (("raw", RawCodec()), ("dvc", DeltaVarintCodec())):
+            path = os.path.join(d, f"s.{name}")
+            t0 = time.time()
+            src = CodecFileSource.write(path, edges, codec)
+            enc_s = time.time() - t0
+            t0 = time.time()
+            sink = 0
+            for sl in src.iter_slices(0):
+                # reduce every row: raw slices are lazy memmap views, so the
+                # timed loop must fault the pages or it measures nothing
+                sink += int(np.asarray(sl, np.int64).sum())
+            dec_s = time.time() - t0
+            assert sink == int(edges.astype(np.int64).sum())
+            nbytes = os.path.getsize(path)
+            rows.append({
+                "codec": name, "m": m,
+                "bytes_per_edge": nbytes / m,
+                "ratio_vs_raw": nbytes / (8 * m),
+                "encode_s": enc_s, "decode_s": dec_s,
+                # raw-equivalent stream bandwidth the decode sustains
+                "decode_mb_per_s": 8 * m / dec_s / 1e6,
+            })
+    return rows
+
+
 def run():
     from benchmarks import memory_footprint, table1_speed, table2_quality
 
@@ -91,6 +144,7 @@ def run():
         "table1_speed": speed,
         "table2_quality": quality,
         "streaming_tiers": streaming_tiers(),
+        "compressed_stream": compressed_stream(),
         "memory": memory_footprint.run(),
     }
 
@@ -99,7 +153,8 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
     """Structural diff: same suites, same row identities, memory-claim
     fields present.  Values are runner-dependent and not compared."""
     problems = []
-    for key in ("table1_speed", "table2_quality", "streaming_tiers", "memory"):
+    for key in ("table1_speed", "table2_quality", "streaming_tiers",
+                "compressed_stream", "memory"):
         if (key in baseline) != (key in report):
             problems.append(f"suite {key!r} appeared/disappeared")
 
@@ -132,6 +187,25 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
                 problems.append(
                     f"tier {row.get('tier')!r} buffered the whole stream "
                     f"({row.get('peak_buffer_bytes')} B)")
+    if "compressed_stream" in baseline and "compressed_stream" in report:
+        got, want = ids(report["compressed_stream"], "codec"), ids(
+            baseline["compressed_stream"], "codec")
+        if got != want:
+            problems.append(f"codecs changed: {want} -> {got}")
+        for row in report.get("compressed_stream", []):
+            for field in ("bytes_per_edge", "ratio_vs_raw",
+                          "decode_mb_per_s"):
+                if field not in row:
+                    problems.append(
+                        f"codec {row.get('codec')!r} lost {field!r}")
+            # the bandwidth claim itself: the compressed stream must stay
+            # under half the raw bytes/edge (hardware-independent; a row
+            # missing the field entirely is reported by the loop above)
+            ratio = row.get("ratio_vs_raw")
+            if row.get("codec") == "dvc" and ratio is not None and ratio >= 0.5:
+                problems.append(
+                    f"dvc ratio_vs_raw {ratio:.3f} >= 0.5 — compression "
+                    "claim regressed")
     return problems
 
 
@@ -151,6 +225,9 @@ def main(argv=None):
     for r in report["streaming_tiers"]:
         print(f"smoke/{r['tier']},buf={r['peak_buffer_bytes']},"
               f"state={r['state_bytes']},edges={r['edge_list_bytes']}")
+    for r in report["compressed_stream"]:
+        print(f"smoke/codec-{r['codec']},{r['bytes_per_edge']:.2f} B/edge,"
+              f"{r['decode_mb_per_s']:.0f} MB/s decode")
     if args.baseline:
         try:
             with open(args.baseline) as f:

@@ -113,6 +113,28 @@ class CheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # ------------------------------------------------------------------
+    def leaf_names(self, step: Optional[int] = None) -> set:
+        """Leaf names recorded in a checkpoint's manifest (latest by
+        default; empty set when no checkpoint exists).
+
+        Lets callers dispatch on checkpoint *layout* before building a
+        restore template — e.g. the cluster API restores the new
+        variable-length ``stream_cursor`` leaf when present and falls back
+        to the legacy scalar ``stream_offset`` otherwise, instead of
+        exception-probing with trial templates.
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return set()
+        path = os.path.join(self.directory, f"step_{step}", "manifest.json")
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+        except FileNotFoundError:
+            return set()
+        return {leaf["name"] for leaf in manifest.get("leaves", [])}
+
+    # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
         steps = []
         for name in os.listdir(self.directory):

@@ -26,7 +26,8 @@ from repro.core.metrics import (  # noqa: F401
     nmi,
 )
 from repro.core.state import ClusterState, ShardedState, SweepState  # noqa: F401
-from repro.core.streaming import PAD, canonical_labels  # noqa: F401
+from repro.core.streaming import canonical_labels  # noqa: F401
+from repro.graph.pipeline import PAD  # noqa: F401
 from repro.cluster.api import Clustering, StreamClusterer, cluster  # noqa: F401
 from repro.cluster.config import ClusterConfig  # noqa: F401
 from repro.cluster.registry import (  # noqa: F401
@@ -36,13 +37,16 @@ from repro.cluster.registry import (  # noqa: F401
     get_backend,
     register_backend,
 )
+from repro.graph.codecs import Cursor, DeltaVarintCodec, RawCodec  # noqa: F401
 from repro.graph.pipeline import BatchPipeline  # noqa: F401
 from repro.graph.sources import (  # noqa: F401
     ArraySource,
     BinaryFileSource,
+    CodecFileSource,
     EdgeListFileSource,
     EdgeSource,
     GeneratorSource,
+    MergedSource,
     ShardedSource,
     as_source,
 )
@@ -54,12 +58,17 @@ __all__ = [
     "BackendResult",
     "BatchPipeline",
     "BinaryFileSource",
+    "CodecFileSource",
     "ClusterConfig",
     "ClusterState",
     "Clustering",
+    "Cursor",
+    "DeltaVarintCodec",
     "EdgeListFileSource",
     "EdgeSource",
     "GeneratorSource",
+    "MergedSource",
+    "RawCodec",
     "ShardedSource",
     "ShardedState",
     "StreamClusterer",

@@ -6,9 +6,11 @@ backend registry; ``StreamClusterer`` exposes the same engine incrementally
 :class:`~repro.graph.sources.EdgeSource`, ``finalize`` for the result), with
 the backend's state pytree suspendable to disk via
 ``repro.checkpoint.manager`` and resumable in a later session — including
-mid-stream: checkpoints record the raw stream offset, so ``restore`` +
-``fit(source)`` picks up an out-of-core file exactly where the previous
-session stopped.
+mid-stream: checkpoints record the stream :class:`~repro.graph.codecs
+.Cursor` (raw row + the source's opaque resume token), so ``restore`` +
+``fit(source)`` picks up an out-of-core file — raw, delta+varint
+compressed, or a multi-stream merge — exactly where the previous session
+stopped.
 
 *Resumable + out-of-core is the invariant, not the special case*: every
 backend threads a state pytree (``ClusterState`` / ``SweepState`` /
@@ -39,6 +41,7 @@ from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import canonical_labels
 from repro.cluster.config import ClusterConfig
 from repro.cluster.registry import Backend, get_backend
+from repro.graph.codecs import Cursor
 from repro.graph.pipeline import BatchPipeline
 from repro.graph.sources import ArraySource, EdgeSource, as_source
 
@@ -295,9 +298,11 @@ class StreamClusterer:
     backend's state pytree (the paper's ``3n`` ints; ``(2A+1) n`` for the
     sweep; ``3Pn`` for ``P`` shards), and the run can be suspended
     (:meth:`save`) and resumed (:meth:`restore`) across processes —
-    including mid-stream: the checkpoint records :attr:`stream_offset` (raw
-    source rows consumed), so a restored clusterer's :meth:`fit` continues
-    an out-of-core file from the exact row the previous session stopped at.
+    including mid-stream: the checkpoint records :attr:`stream_cursor` (raw
+    source rows consumed plus the source's opaque resume token), so a
+    restored clusterer's :meth:`fit` continues an out-of-core file from the
+    exact row the previous session stopped at — seeking straight to a
+    recorded sync point for compressed/text streams.
     Every built-in backend supports ``partial_fit``; for the
     strictly-sequential tiers (sweep included) the result is identical to
     one :func:`cluster` call over the concatenated stream, regardless of
@@ -318,7 +323,7 @@ class StreamClusterer:
         _check_state(state, config, self._backend)
         self._state = state
         self._last_result = None
-        self._stream_offset = 0
+        self._cursor = Cursor(0)
         self.peak_buffer_bytes = 0
         self.stream_batches = 0
 
@@ -332,11 +337,19 @@ class StreamClusterer:
         return int(self._state.edges_seen)
 
     @property
+    def stream_cursor(self) -> Cursor:
+        """The stream position as an opaque :class:`Cursor` — raw rows
+        ingested plus whatever resume token the source minted for that row
+        (block sync byte offsets for compressed files, per-source offsets
+        for merged streams).  A leaf of every checkpoint."""
+        return self._cursor
+
+    @property
     def stream_offset(self) -> int:
         """Raw source rows ingested so far (counts PAD/self-loop rows too —
         this is a *stream position*, unlike ``edges_seen`` which counts live
-        edges only).  Recorded in checkpoints for mid-stream resume."""
-        return self._stream_offset
+        edges only).  The row coordinate of :attr:`stream_cursor`."""
+        return self._cursor.row
 
     def partial_fit(self, edge_batch, *, raw_rows: Optional[int] = None) -> "StreamClusterer":
         """Ingest one batch of edges; returns ``self`` for chaining.
@@ -344,13 +357,15 @@ class StreamClusterer:
         ``raw_rows``: how many raw stream rows this batch represents (defaults
         to the batch length) — :meth:`fit` passes the pre-padding row count so
         ``stream_offset`` tracks the source, not the padded device shape.
+        Directly pushed batches advance the cursor row with an empty token
+        (there is no source to mint one); :meth:`fit` refreshes the token
+        from its source after every batch.
         """
         result = self._backend.fn(edge_batch, self.config, self._state)
         self._state = result.state
         self._last_result = result
-        self._stream_offset += int(
-            raw_rows if raw_rows is not None else np.shape(edge_batch)[0]
-        )
+        rows = int(raw_rows if raw_rows is not None else np.shape(edge_batch)[0])
+        self._cursor = Cursor(self._cursor.row + rows)
         return self
 
     def fit(
@@ -384,11 +399,15 @@ class StreamClusterer:
                 batch_edges=min(per_shard, DEFAULT_BATCH_EDGES)
             )
         pipe = _make_pipeline(source, config, self._backend)
-        batches = pipe.batches(start=self._stream_offset)
+        batches = pipe.batches(start=self._cursor)
         n = 0
         try:
             for batch in batches:
                 self.partial_fit(batch.edges, raw_rows=batch.n_rows)
+                # refresh the resume token: the source knows the best sync
+                # point (codec block, text byte offset, merge positions) for
+                # the row partial_fit just advanced to
+                self._cursor = source.cursor_at(self._cursor.row)
                 n += 1
                 if max_batches is not None and n >= max_batches:
                     break
@@ -438,10 +457,11 @@ class StreamClusterer:
 
         The config is written first via atomic replace, so a preemption at
         any point leaves either a restorable checkpoint or a clean
-        "no checkpoints" failure — never a state/config torn pair.  The raw
-        stream offset is a leaf of the checkpoint pytree itself, so state
-        and stream position can never tear apart.  Wide states (sweep,
-        sharded) are just wider pytrees — they ride the same manager.
+        "no checkpoints" failure — never a state/config torn pair.  The
+        stream cursor (row + opaque codec token, as a flat int64 leaf) is
+        part of the checkpoint pytree itself, so state and stream position
+        can never tear apart.  Wide states (sweep, sharded) are just wider
+        pytrees — they ride the same manager.
         """
         mgr = CheckpointManager(directory)  # creates the directory
         tmp = os.path.join(directory, _CONFIG_FILE + ".tmp")
@@ -452,7 +472,7 @@ class StreamClusterer:
             self.edges_seen,
             {
                 "cluster_state": self._state,
-                "stream_offset": np.int64(self._stream_offset),
+                "stream_cursor": self._cursor.to_array(),
             },
         )
 
@@ -503,18 +523,29 @@ class StreamClusterer:
         # stream_offset) are not demoted to int32 the way device placement
         # would.  Device tiers re-place the state themselves (to_device).
         state_template = backend.init_fn(config).to_numpy()
-        template = {
-            "cluster_state": state_template,
-            "stream_offset": np.int64(0),
-        }
-        try:
+        leaves = mgr.leaf_names()
+        if "stream_cursor" in leaves:
+            template = {
+                "cluster_state": state_template,
+                # variable-length leaf: the manager restores host leaves at
+                # their on-disk shape, so any token width round-trips
+                "stream_cursor": np.zeros(1, np.int64),
+            }
             restored = mgr.restore(template)
-            offset = int(restored["stream_offset"])
-        except FileNotFoundError:
-            # pre-offset checkpoint layout (no stream_offset leaf): restore
-            # state alone and start stream accounting from zero
+            cursor = Cursor.from_array(restored["stream_cursor"])
+        elif "stream_offset" in leaves:
+            # pre-cursor checkpoint layout: a bare int64 raw-row offset —
+            # restore it as a token-less cursor (always a valid position)
+            template = {
+                "cluster_state": state_template,
+                "stream_offset": np.int64(0),
+            }
+            restored = mgr.restore(template)
+            cursor = Cursor(int(restored["stream_offset"]))
+        else:
+            # pre-offset layout (state only): stream accounting from zero
             restored = mgr.restore({"cluster_state": state_template})
-            offset = 0
+            cursor = Cursor(0)
         sc = cls(config, state=restored["cluster_state"])
-        sc._stream_offset = offset
+        sc._cursor = cursor
         return sc

@@ -38,7 +38,7 @@ from jax.sharding import Mesh
 
 from repro.core.chunked import chunked_update
 from repro.core.state import ClusterState, ShardedState, count_live_edges
-from repro.core.streaming import PAD
+from repro.graph.pipeline import PAD
 from repro.graph.sources import ShardedSource, as_source
 
 Array = jax.Array

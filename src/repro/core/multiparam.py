@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core.metrics import avg_density_from_state, entropy_from_state
 from repro.core.state import SweepState, count_live_edges
-from repro.core.streaming import PAD
+from repro.graph.pipeline import PAD
 
 Array = jax.Array
 

@@ -39,10 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import ClusterState, count_live_edges
-from repro.graph.pipeline import PAD, pad_edges_to_chunks  # noqa: F401
-#   Canonical home of the sentinel and chunk padding is now
-#   repro.graph.pipeline; both names are re-exported here for the historical
-#   import path (core.chunked / kernels used to import them from this module).
+from repro.graph.pipeline import PAD
 
 Array = jax.Array
 

@@ -1,11 +1,20 @@
-from repro.graph import generators, pipeline, sources, stream  # noqa: F401
+from repro.graph import codecs, generators, pipeline, sources, stream  # noqa: F401
+from repro.graph.codecs import (  # noqa: F401
+    Cursor,
+    DeltaVarintCodec,
+    EdgeCodec,
+    RawCodec,
+    as_cursor,
+)
 from repro.graph.pipeline import PAD, Batch, BatchPipeline  # noqa: F401
 from repro.graph.sources import (  # noqa: F401
     ArraySource,
     BinaryFileSource,
+    CodecFileSource,
     EdgeListFileSource,
     EdgeSource,
     GeneratorSource,
+    MergedSource,
     ShardedSource,
     as_source,
 )

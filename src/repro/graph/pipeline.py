@@ -13,9 +13,17 @@ This module is the single home of the stream-shape plumbing (DESIGN.md
   :class:`repro.graph.sources.EdgeSource`, re-chunks them into *fixed-size*
   batches (so every jitted tier compiles exactly once per run), pads with
   PAD, and double-buffers production on a background thread so host parsing
-  /generation overlaps device compute.  Peak host edge-buffer residency is
-  tracked (``peak_buffer_bytes``) — the paper's memory claim is state =
-  ``3n`` ints; the pipeline keeps edges at O(batch), not O(m).
+  /generation — *and codec block decompression*: the source's
+  ``resume``/``iter_slices`` generators, where
+  :class:`~repro.graph.codecs.DeltaVarintCodec` decoding happens, are pulled
+  entirely on the prefetch worker — overlaps device compute.  Peak host
+  edge-buffer residency is tracked (``peak_buffer_bytes``) — the paper's
+  memory claim is state = ``3n`` ints; the pipeline keeps edges at O(batch),
+  not O(m).
+
+Stream positions are :class:`~repro.graph.codecs.Cursor` values;
+``batches(start=...)`` accepts either a cursor or the historical raw-row
+int.
 """
 
 from __future__ import annotations
@@ -23,9 +31,11 @@ from __future__ import annotations
 import threading
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Iterable, Iterator, NamedTuple, Optional
+from typing import Iterable, Iterator, NamedTuple, Optional, Union
 
 import numpy as np
+
+from repro.graph.codecs import Cursor, as_cursor
 
 # Sentinel node id used to pad edge batches/chunks to fixed shapes; padded
 # edges are no-ops in every clustering tier.  (Canonical definition — re-
@@ -197,7 +207,7 @@ class BatchPipeline:
         with self._lock:
             self._inflight_bytes -= nbytes
 
-    def _counted_slices(self, start: int) -> Iterator[np.ndarray]:
+    def _counted_slices(self, start: Cursor) -> Iterator[np.ndarray]:
         """Pass raw source slices through while counting them toward
         residency — parse blocks / generator segments are real host memory
         even when the batches carved from them are views.
@@ -208,7 +218,7 @@ class BatchPipeline:
         held: deque = deque()  # (nbytes, rows) per still-pinnable slice
         held_rows = 0  # running total, so pruning is O(1) per slice
         try:
-            for sl in self.source.iter_slices(start):
+            for sl in self.source.resume(start):
                 sl = np.asarray(sl)
                 held.append((int(sl.nbytes), int(sl.shape[0])))
                 held_rows += int(sl.shape[0])
@@ -222,10 +232,12 @@ class BatchPipeline:
             for nbytes, _ in held:
                 self._release(nbytes)
 
-    def _produce(self, start: int) -> Iterator[Batch]:
+    def _produce(self, start: Cursor) -> Iterator[Batch]:
         """Raw producer: rechunk + pad + residency accounting.  Runs on the
-        prefetch thread."""
-        offset = start
+        prefetch thread — so source-side work (file parsing, synthetic
+        generation, codec block decode) overlaps the consumer's device
+        compute."""
+        offset = start.row
         slices = self._counted_slices(start)
         stream = rechunk(slices, self.batch_edges)
         try:
@@ -238,10 +250,12 @@ class BatchPipeline:
             stream.close()
             slices.close()
 
-    def batches(self, start: int = 0) -> Iterator[Batch]:
-        """Yield fixed-shape batches beginning at raw stream row ``start``."""
+    def batches(self, start: Union[int, Cursor] = 0) -> Iterator[Batch]:
+        """Yield fixed-shape batches from a stream position — a
+        :class:`~repro.graph.codecs.Cursor` (token-accelerated resume) or a
+        raw row offset."""
         inner = _prefetch_iter(
-            self._produce(start),
+            self._produce(as_cursor(start)),
             self.prefetch,
             on_drop=lambda b: self._release(b.edges.nbytes),
         )

@@ -5,16 +5,17 @@ of edges processed strictly once.  TPUs want fixed shapes, so streams are cut
 into fixed-size chunks padded with ``PAD`` sentinel edges (no-ops in every
 clustering tier).
 
-The padding primitives now live in :mod:`repro.graph.pipeline` (one
-implementation for host and device); ``pad_to_chunks`` is re-exported here
-for the historical import path.
+The padding primitives live in :mod:`repro.graph.pipeline` (one
+implementation for host and device) — import ``pad_to_chunks`` /
+``pad_edges_to_chunks`` from there; this module keeps only the
+stream-memory accounting helpers and the vectorized ``shard_stream``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.graph.pipeline import PAD, pad_to_chunks  # noqa: F401
+from repro.graph.pipeline import PAD
 
 
 def shard_stream(edges: np.ndarray, n_shards: int) -> np.ndarray:

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.streaming import PAD
+from repro.graph.pipeline import PAD
 
 
 def edge_stream_kernel(

@@ -19,11 +19,13 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.cluster import ClusterConfig, StreamClusterer, cluster
+from repro.graph.codecs import Cursor, DeltaVarintCodec
 from repro.graph.generators import chung_lu_segments, sbm_segments
 from repro.graph.pipeline import PAD, Batch, BatchPipeline, rechunk
 from repro.graph.sources import (
     ArraySource,
     BinaryFileSource,
+    CodecFileSource,
     EdgeListFileSource,
     GeneratorSource,
     ShardedSource,
@@ -54,6 +56,9 @@ def _all_sources(edges, tmp_path):
     """The same stream behind every concrete source type."""
     txt = _write_txt(tmp_path / "g.txt", edges)
     binp = BinaryFileSource.write(tmp_path / "g.bin", edges)
+    dvc = CodecFileSource.write(
+        tmp_path / "g.dvc", edges, DeltaVarintCodec(block_edges=173)
+    )
     gen = GeneratorSource(
         lambda s, length: edges[s : s + length], len(edges), segment_edges=97
     )
@@ -61,6 +66,7 @@ def _all_sources(edges, tmp_path):
         "array": ArraySource(edges),
         "text": EdgeListFileSource(txt),
         "binary": binp,
+        "dvc": dvc,
         "generator": gen,
     }
 
@@ -128,17 +134,18 @@ def test_pipeline_early_close_shuts_down_prefetch():
     assert pipe._inflight_bytes == 0
 
 
-def test_historical_pad_names_still_importable():
-    """Satellite: the duplicated pad logic is folded into graph/pipeline;
-    the old import paths keep working as shims."""
+def test_pad_shims_deleted_canonical_home_is_pipeline():
+    """Satellite: the historical ``core.streaming`` / ``graph.stream`` pad
+    shims are gone — ``repro.graph.pipeline`` is the single home of the
+    padding primitives (PAD stays importable where it is genuinely used)."""
     import jax.numpy as jnp
 
-    from repro.core.streaming import PAD as pad1
-    from repro.core.streaming import pad_edges_to_chunks
-    from repro.graph.stream import PAD as pad2
-    from repro.graph.stream import pad_to_chunks
+    import repro.core.streaming as core_streaming
+    import repro.graph.stream as graph_stream
+    from repro.graph.pipeline import pad_edges_to_chunks, pad_to_chunks
 
-    assert pad1 == pad2 == PAD
+    assert not hasattr(core_streaming, "pad_edges_to_chunks")
+    assert not hasattr(graph_stream, "pad_to_chunks")
     chunks = pad_to_chunks(_random_stream(20, 130, 4), 64)
     assert chunks.shape == (3, 64, 2)
     padded, n_chunks = pad_edges_to_chunks(jnp.zeros((5, 2), jnp.int32), 8)
@@ -295,7 +302,7 @@ def test_int64_counters_survive_restore_past_2_31(tmp_path):
     sc = StreamClusterer(ClusterConfig(n=10, v_max=4, backend="dense"))
     sc.partial_fit(np.array([[0, 1]], np.int32))
     sc._state.edges_seen = np.int64(2**31 + 5)
-    sc._stream_offset = 2**31 + 9
+    sc._cursor = Cursor(2**31 + 9)
     sc.save(str(tmp_path))
     sc2 = StreamClusterer.restore(str(tmp_path))
     assert sc2.edges_seen == 2**31 + 5

@@ -15,7 +15,8 @@ from repro.core.streaming import (
     cluster_stream_scan,
 )
 from repro.graph.generators import chung_lu_stream, ring_of_cliques, sbm_stream
-from repro.graph.stream import pad_to_chunks, shard_stream
+from repro.graph.pipeline import pad_to_chunks
+from repro.graph.stream import shard_stream
 
 
 def _random_stream(n, m, seed):
