@@ -10,7 +10,11 @@ stream would occupy materialized, next to each tier's state bytes.
 ``compressed_stream`` rows record the ingest-bandwidth frontier: on-disk
 bytes/edge and decode throughput for the raw vs delta+varint codecs (the
 dvc ratio staying under 0.5x raw is checked structurally — it is a format
-property, not a runner-speed number).
+property, not a runner-speed number).  ``device_pipeline`` rows record the
+dispatch-amortisation frontier: edges/s and exact dispatches-per-million-
+edges for per-batch vs fused megabatch ingestion (``lax.scan``-over-chunks
+and double-buffered-DMA Pallas), with the ~K-fold dispatch reduction and
+the no-new-buffers counters asserted in-suite.
 
     PYTHONPATH=src python -m benchmarks.smoke [--out BENCH_smoke.json]
                                               [--baseline BENCH_smoke.json]
@@ -71,6 +75,82 @@ def streaming_tiers():
         "state_bytes": 3 * 4 * n * 4,  # 3Pn ints, P = 4
         "edge_list_bytes": edge_list_bytes(src.n_edges, 4),
     })
+    return rows
+
+
+def device_pipeline():
+    """Fused megabatch dispatch rows (DESIGN.md §10 device pipelining).
+
+    The per-batch loop pays one jitted dispatch + one host→device transfer
+    + one Python round-trip per ``BatchPipeline`` batch; megabatch mode
+    stages K batches into one ``(K, B, 2)`` buffer on the prefetch thread
+    and dispatches once (``chunked``: one ``lax.scan`` over all chunks;
+    ``pallas``: one double-buffered-DMA kernel launch).  Rows record
+    edges/s and *dispatches per million edges* — the dispatch counts are
+    exact integers (hardware-independent), so the ~K-fold amortisation is
+    asserted here and structurally checked against the baseline; the
+    speedup ratio is recorded for the trajectory.
+
+    Deliberately dispatch-bound shapes (small batches): the point is to
+    measure the overhead the fused path removes, not the Jacobi compute.
+    """
+    import jax
+
+    from repro.cluster import ClusterConfig, GeneratorSource, cluster
+    from repro.graph.generators import chung_lu_segments
+    from repro.graph.pipeline import pad_template_allocs
+
+    # (mode, backend, m, batch_edges=chunk, megabatch_k)
+    cases = [
+        ("chunked-per-batch", "chunked", 400_000, 512, None),
+        ("chunked-fused-scan", "chunked", 400_000, 512, 64),
+        ("pallas-per-batch", "pallas", 100_000, 1024, None),
+        ("pallas-megabatch-dma", "pallas", 100_000, 1024, 16),
+    ]
+    n = 10_000
+    rows = []
+    base_eps = {}
+    for mode, backend, m, B, k in cases:
+        src = GeneratorSource(chung_lu_segments(n, seed=29), m,
+                              segment_edges=1 << 13)
+        cfg = ClusterConfig(n=n, v_max=64, backend=backend, chunk=B,
+                            batch_edges=B, megabatch_k=k)
+        cluster(src, cfg).block_until_ready()  # warmup/compile
+        live_before = len(jax.live_arrays())
+        allocs_before = pad_template_allocs()
+        t0 = time.time()
+        res = cluster(src, cfg).block_until_ready()
+        dt = time.time() - t0
+        # Allocation counters: the PAD template must not regrow per batch,
+        # and (with donated state buffers) a steady-state run must not
+        # accumulate device arrays — both deterministic, both asserted.
+        if pad_template_allocs() != allocs_before:
+            raise RuntimeError(
+                f"{mode}: PAD template reallocated during steady-state run")
+        live_after = len(jax.live_arrays())
+        if live_after - live_before > 16:
+            raise RuntimeError(
+                f"{mode}: device buffers grew {live_before} -> {live_after} "
+                "across one run — donation/lifetime regression")
+        batches = res.info["stream_batches"]
+        dispatches = res.info["stream_dispatches"]
+        want = batches if k is None else -(-batches // k)
+        if dispatches != want:
+            raise RuntimeError(
+                f"{mode}: {dispatches} dispatches for {batches} batches "
+                f"(megabatch_k={k}) — expected {want}")
+        row = {
+            "mode": mode, "backend": backend, "m": m, "batch_edges": B,
+            "megabatch_k": k, "seconds": dt, "edges_per_s": m / dt,
+            "dispatches": dispatches,
+            "dispatches_per_m_edges": dispatches / (m / 1e6),
+            "peak_buffer_bytes": res.info["peak_buffer_bytes"],
+        }
+        if k is None:
+            base_eps[backend] = m / dt
+        else:
+            row["speedup_vs_per_batch"] = (m / dt) / base_eps[backend]
+        rows.append(row)
     return rows
 
 
@@ -144,6 +224,7 @@ def run():
         "table1_speed": speed,
         "table2_quality": quality,
         "streaming_tiers": streaming_tiers(),
+        "device_pipeline": device_pipeline(),
         "compressed_stream": compressed_stream(),
         "memory": memory_footprint.run(),
     }
@@ -154,7 +235,7 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
     fields present.  Values are runner-dependent and not compared."""
     problems = []
     for key in ("table1_speed", "table2_quality", "streaming_tiers",
-                "compressed_stream", "memory"):
+                "device_pipeline", "compressed_stream", "memory"):
         if (key in baseline) != (key in report):
             problems.append(f"suite {key!r} appeared/disappeared")
 
@@ -187,6 +268,32 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
                 problems.append(
                     f"tier {row.get('tier')!r} buffered the whole stream "
                     f"({row.get('peak_buffer_bytes')} B)")
+    if "device_pipeline" in baseline and "device_pipeline" in report:
+        got, want = ids(report["device_pipeline"], "mode"), ids(
+            baseline["device_pipeline"], "mode")
+        if got != want:
+            problems.append(f"device_pipeline modes changed: {want} -> {got}")
+        by_backend = {}
+        for row in report.get("device_pipeline", []):
+            for field in ("edges_per_s", "dispatches",
+                          "dispatches_per_m_edges", "peak_buffer_bytes"):
+                if field not in row:
+                    problems.append(
+                        f"device_pipeline {row.get('mode')!r} lost {field!r}")
+            by_backend.setdefault(row.get("backend"), {})[
+                "mega" if row.get("megabatch_k") else "per_batch"] = row
+        for backend, pair in by_backend.items():
+            # the dispatch-amortisation claim itself: exact integer counts,
+            # hardware-independent — the fused path must dispatch at most
+            # half as often per edge as the per-batch baseline
+            if "mega" in pair and "per_batch" in pair:
+                mega = pair["mega"].get("dispatches_per_m_edges")
+                per = pair["per_batch"].get("dispatches_per_m_edges")
+                if mega is not None and per is not None and mega * 2 > per:
+                    problems.append(
+                        f"device_pipeline {backend!r}: fused path dispatches "
+                        f"{mega:.1f}/Medge vs per-batch {per:.1f}/Medge — "
+                        "amortisation claim regressed")
     if "compressed_stream" in baseline and "compressed_stream" in report:
         got, want = ids(report["compressed_stream"], "codec"), ids(
             baseline["compressed_stream"], "codec")
@@ -225,6 +332,11 @@ def main(argv=None):
     for r in report["streaming_tiers"]:
         print(f"smoke/{r['tier']},buf={r['peak_buffer_bytes']},"
               f"state={r['state_bytes']},edges={r['edge_list_bytes']}")
+    for r in report["device_pipeline"]:
+        extra = (f",x{r['speedup_vs_per_batch']:.2f}"
+                 if "speedup_vs_per_batch" in r else "")
+        print(f"smoke/pipeline-{r['mode']},{r['edges_per_s']:.0f} edges/s,"
+              f"{r['dispatches_per_m_edges']:.1f} disp/Medge{extra}")
     for r in report["compressed_stream"]:
         print(f"smoke/codec-{r['codec']},{r['bytes_per_edge']:.2f} B/edge,"
               f"{r['decode_mb_per_s']:.0f} MB/s decode")

@@ -38,7 +38,7 @@ from repro.cluster.registry import (  # noqa: F401
     register_backend,
 )
 from repro.graph.codecs import Cursor, DeltaVarintCodec, RawCodec  # noqa: F401
-from repro.graph.pipeline import BatchPipeline  # noqa: F401
+from repro.graph.pipeline import BatchPipeline, MegaBatch  # noqa: F401
 from repro.graph.sources import (  # noqa: F401
     ArraySource,
     BinaryFileSource,
@@ -67,6 +67,7 @@ __all__ = [
     "EdgeListFileSource",
     "EdgeSource",
     "GeneratorSource",
+    "MegaBatch",
     "MergedSource",
     "RawCodec",
     "ShardedSource",

@@ -60,11 +60,13 @@ def _make_pipeline(
 ) -> BatchPipeline:
     """The ingest pipeline for one run: fixed batch shape (one jit compile),
     chunk-aligned for the Jacobi/DMA tiers so batching never moves a chunk
-    boundary (labels match the one-shot run even for ``chunked``)."""
+    boundary (labels match the one-shot run even for ``chunked``), prefetch
+    depth per config (``None`` defers to the pipeline's own default)."""
     return BatchPipeline(
         source,
         config.batch_edges or DEFAULT_BATCH_EDGES,
         pad_multiple=config.chunk if backend.chunk_aligned else 1,
+        **({} if config.prefetch is None else {"prefetch": config.prefetch}),
     )
 
 
@@ -201,6 +203,15 @@ class Clustering:
         return float(dens.mean()) if dens.size else 0.0
 
     @property
+    def peak_buffer_bytes(self) -> Optional[int]:
+        """Measured peak host edge-buffer residency of the run that produced
+        this result (``None`` for non-streamed runs).  Scales with the
+        configured pipeline depth: ``(prefetch + 1) * batch_edges`` rows per
+        buffered (mega)batch, times ``megabatch_k`` in megabatch mode."""
+        v = self.info.get("peak_buffer_bytes")
+        return None if v is None else int(v)
+
+    @property
     def community_stats(self) -> Dict[str, float]:
         return community_stats(self.labels)
 
@@ -245,7 +256,10 @@ def cluster(
       state: optional carried state pytree (see ``Backend.state_kind``);
         fresh state is created when omitted.  Must come from a run with the
         same shape parameters (``n``; sweep ``v_maxes``; shard count) and
-        the same backend label space.
+        the same backend label space.  Treated as *consumed*: the device
+        tiers donate their state buffers, so a device-resident state passed
+        here must not be reused afterwards (host/numpy states are copied at
+        dispatch and stay valid).
       mesh: optional ``jax.sharding.Mesh`` — contributes its device count as
         the default ``n_shards`` for ``backend="distributed"``.
 
@@ -326,6 +340,11 @@ class StreamClusterer:
         self._cursor = Cursor(0)
         self.peak_buffer_bytes = 0
         self.stream_batches = 0
+        self.stream_megabatches = 0
+        # Device dispatches issued (one per partial_fit / fused megabatch) —
+        # the denominator of the dispatch-amortisation story: megabatch mode
+        # drops this ~K-fold for the same stream_batches.
+        self.stream_dispatches = 0
 
     # ------------------------------------------------------------------
     @property
@@ -366,6 +385,40 @@ class StreamClusterer:
         self._last_result = result
         rows = int(raw_rows if raw_rows is not None else np.shape(edge_batch)[0])
         self._cursor = Cursor(self._cursor.row + rows)
+        self.stream_dispatches += 1
+        return self
+
+    def partial_fit_megabatch(
+        self, edge_batches, *, raw_rows: Optional[int] = None
+    ) -> "StreamClusterer":
+        """Ingest ``(K, B, 2)`` stacked fixed-shape batches in *one* fused
+        device dispatch; returns ``self`` for chaining.
+
+        Requires the backend to register a ``megabatch_fn`` (``chunked``:
+        one ``lax.scan`` over all K·B/chunk Jacobi chunks; ``pallas``: one
+        double-buffered-DMA kernel launch) — results are bit-identical to
+        ``K`` sequential :meth:`partial_fit` calls over the same batches,
+        and trailing all-PAD batches are no-ops, so ragged tails ride the
+        same shape.  ``raw_rows`` is the raw-source row count the megabatch
+        represents (defaults to ``K * B``, the padded shape); :meth:`fit`
+        passes the pre-padding count so the cursor tracks the source.
+        """
+        if self._backend.megabatch_fn is None:
+            raise ValueError(
+                f"backend {self.config.backend!r} has no fused megabatch "
+                "path; use partial_fit per batch"
+            )
+        result = self._backend.megabatch_fn(
+            edge_batches, self.config, self._state
+        )
+        self._state = result.state
+        self._last_result = result
+        K = int(np.shape(edge_batches)[0])
+        B = int(np.shape(edge_batches)[1])
+        rows = int(raw_rows if raw_rows is not None else K * B)
+        self._cursor = Cursor(self._cursor.row + rows)
+        self.stream_dispatches += 1
+        self.stream_megabatches += 1
         return self
 
     def fit(
@@ -383,6 +436,17 @@ class StreamClusterer:
         ``max_batches`` bounds this call (suspend points for cooperative
         preemption); returns ``self``.
 
+        With ``config.megabatch_k = K`` set and a backend that registers a
+        fused ``megabatch_fn`` (``chunked``, ``pallas``), ingestion runs in
+        *megabatch mode*: the pipeline stages ``K`` consecutive batches into
+        one ``(K, batch_edges, 2)`` host buffer on its prefetch thread and
+        the device is dispatched once per megabatch — ~K-fold fewer
+        dispatches/transfers, labels bit-identical to per-batch ingestion,
+        and the stream cursor still lands on exact batch-row boundaries (so
+        checkpoints taken at any per-batch suspend point resume cleanly
+        into megabatch mode, and vice versa).  A ``max_batches`` budget that
+        is not a megabatch multiple drains the remainder per-batch.
+
         For the sharded tier with ``batch_edges`` unset, the stream is
         counted once and the batch sized to one window per shard (capped at
         the default batch size, which stripes longer streams) — batches are
@@ -399,22 +463,50 @@ class StreamClusterer:
                 batch_edges=min(per_shard, DEFAULT_BATCH_EDGES)
             )
         pipe = _make_pipeline(source, config, self._backend)
-        batches = pipe.batches(start=self._cursor)
+        K = config.megabatch_k
+        use_mega = (
+            K is not None
+            and K > 1
+            and self._backend.megabatch_fn is not None
+        )
         n = 0
-        try:
-            for batch in batches:
-                self.partial_fit(batch.edges, raw_rows=batch.n_rows)
-                # refresh the resume token: the source knows the best sync
-                # point (codec block, text byte offset, merge positions) for
-                # the row partial_fit just advanced to
-                self._cursor = source.cursor_at(self._cursor.row)
-                n += 1
-                if max_batches is not None and n >= max_batches:
-                    break
-        finally:
-            # deterministic suspension: shut the prefetch thread down before
-            # reading the residency figure or returning control
-            batches.close()
+        exhausted = False
+        if use_mega and (max_batches is None or max_batches >= K):
+            megas = pipe.megabatches(K, start=self._cursor)
+            try:
+                exhausted = True  # flipped back if we stop for the budget
+                for mega in megas:
+                    self.partial_fit_megabatch(
+                        mega.edges, raw_rows=mega.n_rows
+                    )
+                    # refresh the resume token (see the per-batch loop below)
+                    self._cursor = source.cursor_at(self._cursor.row)
+                    n += mega.n_batches
+                    if mega.n_batches < K:
+                        break  # ragged tail: the stream is exhausted
+                    if max_batches is not None and max_batches - n < K:
+                        # not enough budget for another full megabatch; any
+                        # remainder drains per-batch below
+                        exhausted = False
+                        break
+            finally:
+                megas.close()
+        if not exhausted and (max_batches is None or n < max_batches):
+            batches = pipe.batches(start=self._cursor)
+            try:
+                for batch in batches:
+                    self.partial_fit(batch.edges, raw_rows=batch.n_rows)
+                    # refresh the resume token: the source knows the best
+                    # sync point (codec block, text byte offset, merge
+                    # positions) for the row partial_fit just advanced to
+                    self._cursor = source.cursor_at(self._cursor.row)
+                    n += 1
+                    if max_batches is not None and n >= max_batches:
+                        break
+            finally:
+                # deterministic suspension: shut the prefetch thread down
+                # before reading the residency figure or returning control
+                batches.close()
         self.peak_buffer_bytes = max(
             self.peak_buffer_bytes, pipe.peak_buffer_bytes
         )
@@ -441,10 +533,18 @@ class StreamClusterer:
             info = dict(info)
             info["peak_buffer_bytes"] = self.peak_buffer_bytes
             info["stream_batches"] = self.stream_batches
+            info["stream_dispatches"] = self.stream_dispatches
+            if self.stream_megabatches:
+                info["stream_megabatches"] = self.stream_megabatches
+        # The device tiers *donate* their state buffers (chunked / pallas /
+        # multiparam / sharded updates), so the live self._state — which
+        # result.state/labels may alias via to_device() — is consumed by the
+        # next partial_fit.  Snapshot the result to host so a finalized
+        # Clustering outlives further ingestion, per this method's contract.
         return Clustering(
-            state=result.state,
+            state=None if result.state is None else result.state.to_numpy(),
             config=self.config,
-            raw_labels=result.labels,
+            raw_labels=np.asarray(result.labels),
             info=info,
         )
 

@@ -32,12 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import multiparam as _multiparam
-from repro.core.chunked import chunked_update
+from repro.core.chunked import chunked_update, chunked_update_megabatch
 from repro.core.distributed import merge_sharded_state, sharded_update
 from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import dense_update, oracle_init, oracle_update, scan_update
 from repro.cluster.registry import BackendResult, register_backend
-from repro.kernels.edge_stream.ops import pallas_update
+from repro.kernels.edge_stream.ops import pallas_update, pallas_update_megabatch
 
 
 # ---------------------------------------------------------------------------
@@ -85,11 +85,25 @@ def _scan(edges, config, state, mesh=None) -> BackendResult:
     return BackendResult(state=state, labels=state.c, info={})
 
 
+def _pallas_megabatch(edges, config, state) -> BackendResult:
+    """Fused (K, B, 2) ingest: one double-buffered-DMA kernel launch for the
+    whole megabatch, state VMEM-resident throughout (bit-exact)."""
+    state = pallas_update_megabatch(
+        state.to_device(),
+        jnp.asarray(edges),
+        int(config.v_max),
+        chunk=config.chunk,
+        interpret=config.interpret,
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
 @register_backend(
     "pallas",
     resumable=True,
     bit_exact=True,
     chunk_aligned=True,
+    megabatch_fn=_pallas_megabatch,
     description="serial-in-VMEM Pallas kernel (bit-exact, TPU-native)",
 )
 def _pallas(edges, config, state, mesh=None) -> BackendResult:
@@ -107,11 +121,26 @@ def _pallas(edges, config, state, mesh=None) -> BackendResult:
 # Parallel tiers (quality parity measured, not assumed)
 # ---------------------------------------------------------------------------
 
+def _chunked_megabatch(edges, config, state) -> BackendResult:
+    """Fused (K, B, 2) ingest: one ``lax.scan`` over all K * B / chunk Jacobi
+    chunks per dispatch.  Bit-identical to K sequential per-batch calls when
+    B is a chunk multiple — which the pipeline guarantees for this
+    chunk-aligned backend."""
+    state = chunked_update_megabatch(
+        state.to_device(),
+        jnp.asarray(edges),
+        jnp.int32(config.v_max),
+        chunk=config.chunk,
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
 @register_backend(
     "chunked",
     resumable=True,
     bit_exact=False,
     chunk_aligned=True,
+    megabatch_fn=_chunked_megabatch,
     description="Jacobi chunked tier (vectorised decisions, scatter conflict "
     "resolution)",
 )
@@ -135,10 +164,9 @@ def _multiparam_finalize(state: SweepState, config) -> BackendResult:
         "best_index": best,
         "best_v_max": sel["best_v_max"],
         "rows": sel["rows"],
-        # select_result already pulls (A, n) to host for the edge-free
-        # metrics; keeping the state's array here avoids a second host copy
-        # for callers that never read sweep_labels.
-        "sweep_labels": state.c,
+        # host snapshot: multiparam_update donates the sweep state, so the
+        # live (A, n) array would be consumed by the next partial_fit
+        "sweep_labels": np.asarray(state.c),
     }
     return BackendResult(state=selected, labels=selected.c, info=info)
 

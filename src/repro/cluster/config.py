@@ -36,6 +36,19 @@ class ClusterConfig:
         at the default batch size).  Rounded up to a ``chunk`` multiple for
         the chunk-aligned tiers so batching never moves a Jacobi/DMA
         boundary.
+      megabatch_k: stack this many consecutive ingest batches into one
+        ``(K, batch_edges, 2)`` staging buffer and dispatch them to the
+        device *fused* (one ``lax.scan``-over-chunks dispatch for
+        ``chunked``, one double-buffered-DMA kernel launch for ``pallas``)
+        — ~K-fold fewer dispatches/transfers, labels bit-identical to the
+        per-batch path, checkpoint cursors still land on exact batch rows.
+        ``None`` (default) keeps per-batch dispatch; set only for backends
+        with a fused path (others ignore it).  Host staging memory grows to
+        ``(prefetch + 1) * K * batch_edges`` rows — visible in the measured
+        ``peak_buffer_bytes``.
+      prefetch: how many batches (or megabatches) the ingest pipeline
+        produces ahead on its background thread (``None`` → 2, classic
+        double buffering).  0 disables the prefetch thread entirely.
       v_maxes: multi-sweep thresholds for ``backend="multiparam"`` (paper
         §2.5: one pass, many parameters).
       criterion: edge-free sweep selector, ``"density"`` or ``"entropy"``.
@@ -57,6 +70,8 @@ class ClusterConfig:
     backend: str = "chunked"
     chunk: int = 1024
     batch_edges: Optional[int] = None
+    megabatch_k: Optional[int] = None
+    prefetch: Optional[int] = None
     v_maxes: Optional[Tuple[int, ...]] = None
     criterion: str = "density"
     n_shards: Optional[int] = None
@@ -78,6 +93,14 @@ class ClusterConfig:
         if self.batch_edges is not None and self.batch_edges < 1:
             raise ValueError(
                 f"batch_edges must be >= 1, got {self.batch_edges}"
+            )
+        if self.megabatch_k is not None and self.megabatch_k < 1:
+            raise ValueError(
+                f"megabatch_k must be >= 1, got {self.megabatch_k}"
+            )
+        if self.prefetch is not None and self.prefetch < 0:
+            raise ValueError(
+                f"prefetch must be >= 0, got {self.prefetch}"
             )
         if self.criterion not in ("density", "entropy"):
             raise ValueError(

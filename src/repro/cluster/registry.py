@@ -11,6 +11,7 @@ Backend contract::
     init_fn(config) -> state                      # fresh state pytree
     fn(edges, config, state, mesh=None) -> BackendResult(state, labels, info)
     finalize_fn(state, config) -> BackendResult   # optional
+    megabatch_fn(edges, config, state) -> BackendResult  # optional fused path
 
 * ``edges``: (m, 2) int array in stream order (PAD rows are no-ops).
 * ``state``: the pytree produced by this backend's ``init_fn`` (fresh or
@@ -68,6 +69,12 @@ class Backend:
     finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None
     #   derive labels/info (and the ClusterState view of the result) from
     #   state alone — required when fn returns labels=None
+    megabatch_fn: Optional[Callable[..., BackendResult]] = None
+    #   fused megabatch ingest: one dispatch over (K, batch_edges, 2) stacked
+    #   fixed-shape batches (DESIGN.md §10 device pipelining).  Must be
+    #   bit-identical to K sequential fn calls over the same batches;
+    #   trailing all-PAD batches (a ragged tail megabatch) are no-ops.  The
+    #   API layer uses it when ClusterConfig.megabatch_k is set.
     description: str = ""
 
 
@@ -84,6 +91,7 @@ def register_backend(
     label_space: str = "dense",
     chunk_aligned: bool = False,
     finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None,
+    megabatch_fn: Optional[Callable[..., BackendResult]] = None,
     description: str = "",
 ):
     """Decorator: register ``fn`` as backend ``name``.  Re-registration under
@@ -107,6 +115,7 @@ def register_backend(
             label_space=label_space,
             chunk_aligned=chunk_aligned,
             finalize_fn=finalize_fn,
+            megabatch_fn=megabatch_fn,
             description=description,
         )
         return fn

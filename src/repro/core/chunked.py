@@ -72,21 +72,12 @@ def _chunk_update(state, chunk, *, v_max: int, n: int):
     return (d, c, v), ()
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def chunked_update(
-    state: ClusterState, edges: Array, v_max: Array, chunk: int = 1024
+def _scan_chunks(
+    state: ClusterState, chunks: Array, v_max: Array, n: int
 ) -> ClusterState:
-    """State-threading chunked tier: ingest ``edges`` into ``state``.
-
-    ``edges``: (m, 2) int32 (PAD-padded ok); the batch is padded up to a
-    multiple of ``chunk`` internally, and PAD edges are no-ops — but note the
-    *grouping* of edges into Jacobi chunks restarts at every call, so batch
-    boundaries are chunk boundaries (deterministic, batching-dependent).
-    """
-    n = state.d.shape[0]
-    padded, n_chunks = pad_edges_to_chunks(edges, chunk)
-    chunks = padded.reshape(n_chunks, chunk, 2)
-
+    """Scan the Jacobi chunk update over ``(n_chunks, chunk, 2)`` edges —
+    the shared core of the per-batch and fused megabatch entry points (one
+    compile, ``n_chunks`` chunk steps per dispatch)."""
     init = (
         jnp.concatenate([state.d.astype(jnp.int32), jnp.int32([0])]),
         jnp.concatenate([state.c.astype(jnp.int32), jnp.int32([n])]),
@@ -99,11 +90,61 @@ def chunked_update(
         d=d[:n],
         c=c[:n],
         v=v[:n],
-        edges_seen=state.edges_seen + count_live_edges(edges, PAD),
+        edges_seen=state.edges_seen + count_live_edges(chunks.reshape(-1, 2), PAD),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("v_max", "n", "chunk"))
+@functools.partial(
+    jax.jit, static_argnames=("chunk",), donate_argnums=(0,)
+)
+def chunked_update(
+    state: ClusterState, edges: Array, v_max: Array, chunk: int = 1024
+) -> ClusterState:
+    """State-threading chunked tier: ingest ``edges`` into ``state``.
+
+    ``edges``: (m, 2) int32 (PAD-padded ok); the batch is padded up to a
+    multiple of ``chunk`` internally, and PAD edges are no-ops — but note the
+    *grouping* of edges into Jacobi chunks restarts at every call, so batch
+    boundaries are chunk boundaries (deterministic, batching-dependent).
+
+    ``state`` is *donated*: on accelerator backends its buffers are reused
+    for the output (no per-step 3n-int copy), so callers must treat the
+    passed-in state as consumed — exactly the ``partial_fit`` contract,
+    which replaces its state with the returned one.
+    """
+    n = state.d.shape[0]
+    padded, n_chunks = pad_edges_to_chunks(edges, chunk)
+    return _scan_chunks(state, padded.reshape(n_chunks, chunk, 2), v_max, n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk",), donate_argnums=(0,)
+)
+def chunked_update_megabatch(
+    state: ClusterState, edges: Array, v_max: Array, chunk: int = 1024
+) -> ClusterState:
+    """Fused megabatch chunked tier: ingest ``(K, B, 2)`` stacked batches in
+    *one* dispatch.
+
+    The K batches are flattened and scanned as one ``lax.scan`` over
+    ``K * B / chunk`` Jacobi chunks — when ``B`` is a multiple of ``chunk``
+    (guaranteed for pipeline-staged megabatches: the ``BatchPipeline`` rounds
+    its batch size up to the chunk for chunk-aligned backends), the chunk
+    grouping is identical to ``K`` sequential :func:`chunked_update` calls,
+    so labels are bit-identical to the per-batch path while dispatch/transfer
+    overhead drops ~K-fold.  All-PAD trailing batches (a ragged tail
+    megabatch) are no-ops.  ``state`` is donated, as in
+    :func:`chunked_update`.
+    """
+    n = state.d.shape[0]
+    K, B = edges.shape[0], edges.shape[1]
+    padded, n_chunks = pad_edges_to_chunks(edges.reshape(K * B, 2), chunk)
+    return _scan_chunks(state, padded.reshape(n_chunks, chunk, 2), v_max, n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("v_max", "n", "chunk"), donate_argnums=(4, 5)
+)
 def cluster_stream_chunked(
     edges: Array,
     v_max: int,

@@ -29,6 +29,7 @@ algorithm is measured in ``benchmarks/table2_quality.py`` — not assumed.
 
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -55,6 +56,32 @@ def mesh_shards(mesh: Optional[Mesh]) -> Optional[int]:
     return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
 
 
+@functools.partial(
+    jax.jit, static_argnames=("chunk",), donate_argnums=(0,)
+)
+def _sharded_update_jit(
+    state: ShardedState, edges: Array, v_max: Array, shard: Array, chunk: int
+) -> ShardedState:
+    """One fused dispatch per batch: gather the shard's slice, run the
+    chunked scan, scatter it back.  The stacked state is *donated*, so on
+    accelerator backends the ``3Pn``-int update happens in place instead of
+    copying the whole stack every step."""
+    sub = ClusterState(
+        d=state.d[shard], c=state.c[shard], v=state.v[shard],
+        edges_seen=jnp.int32(0),
+    )
+    sub = chunked_update(sub, edges, v_max, chunk=chunk)
+    return ShardedState(
+        d=state.d.at[shard].set(sub.d),
+        c=state.c.at[shard].set(sub.c),
+        v=state.v.at[shard].set(sub.v),
+        cursor=state.cursor + 1,
+        # chunked_update seeded edges_seen=0, so sub carries this batch's
+        # live-edge count
+        edges_seen=state.edges_seen + sub.edges_seen,
+    )
+
+
 def sharded_update(
     state: ShardedState,
     edges: Array,
@@ -68,19 +95,20 @@ def sharded_update(
     explicit form is used by :func:`distributed_cluster` to drain contiguous
     ``ShardedSource`` windows.  The cursor advances either way, so resumed
     runs continue the dealing sequence deterministically.
+
+    The whole gather → chunked scan → scatter step is one jitted dispatch
+    with the stacked state donated (callers must treat the passed-in state
+    as consumed — the ``partial_fit`` contract).
     """
     P = state.n_shards
-    s = int(state.cursor) % P if shard is None else int(shard)
-    sub = ClusterState(
-        d=state.d[s], c=state.c[s], v=state.v[s], edges_seen=jnp.int32(0)
+    # round-robin stays lazy (cursor % P on device) — no host sync per batch
+    s = (
+        jnp.asarray(state.cursor % P, jnp.int32)
+        if shard is None
+        else jnp.int32(shard)
     )
-    sub = chunked_update(sub, jnp.asarray(edges), jnp.int32(v_max), chunk=chunk)
-    return ShardedState(
-        d=state.d.at[s].set(sub.d),
-        c=state.c.at[s].set(sub.c),
-        v=state.v.at[s].set(sub.v),
-        cursor=state.cursor + 1,
-        edges_seen=state.edges_seen + count_live_edges(edges, PAD),
+    return _sharded_update_jit(
+        state, jnp.asarray(edges), jnp.int32(v_max), s, chunk=chunk
     )
 
 
@@ -128,8 +156,11 @@ def merge_sharded_state(
         live[cs[s][active[s]]] = True
         seed_mass += np.where(live, vs[s], 0)
     seed = ClusterState.init(n)
-    seed.d = jnp.asarray(np.minimum(seed_mass, np.iinfo(np.int32).max), jnp.int32)
-    seed.v = seed.d
+    seed32 = np.minimum(seed_mass, np.iinfo(np.int32).max).astype(np.int32)
+    # two placements, not one aliased buffer: chunked_update donates its
+    # state, and donation rejects pytrees whose leaves share a buffer
+    seed.d = jnp.asarray(seed32)
+    seed.v = jnp.array(seed32)
     c2 = np.asarray(
         chunked_update(
             seed, jnp.asarray(ident_edges), jnp.int32(v_max2), chunk=chunk

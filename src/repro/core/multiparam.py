@@ -69,7 +69,7 @@ def _edge_update_multi(state, edge, *, n: int):
     return (d, c, v, vmaxes), ()
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def multiparam_update(state: SweepState, edges: Array) -> SweepState:
     """State-threading §2.5 sweep tier: ingest ``edges`` into ``state``.
 
@@ -78,7 +78,9 @@ def multiparam_update(state: SweepState, edges: Array) -> SweepState:
     single-parameter ``scan``/``dense`` run at that ``v_max``, and batched
     ingestion is bit-identical to the one-shot run regardless of batching.
     The slot-``n`` write sink for PAD/self-loop rows is appended/stripped
-    here, as in the chunked tier.
+    here, as in the chunked tier.  ``state`` is donated — the ``(2A + 1) n``
+    ints update in place on accelerator backends; callers must treat the
+    passed-in state as consumed (the ``partial_fit`` contract).
     """
     n = state.d.shape[0]
     A = state.c.shape[0]

@@ -20,6 +20,14 @@ This module is the single home of the stream-shape plumbing (DESIGN.md
   edge-buffer residency is tracked (``peak_buffer_bytes``) — the paper's
   memory claim is state = ``3n`` ints; the pipeline keeps edges at O(batch),
   not O(m).
+* :meth:`BatchPipeline.megabatches` — the device-pipelining staging mode
+  (DESIGN.md §10): ``K`` consecutive fixed-shape batches are stacked into
+  one ``(K, B, 2)`` host buffer on the prefetch thread, so a fused backend
+  (``lax.scan``-over-chunks, double-buffered-DMA Pallas) dispatches *once*
+  per ``K`` batches instead of once per batch.  A ragged tail megabatch is
+  padded with all-PAD batches (no-ops on every tier), keeping the device
+  shape constant — one compile per run, bit-identical labels to the
+  per-batch path.
 
 Stream positions are :class:`~repro.graph.codecs.Cursor` values;
 ``batches(start=...)`` accepts either a cursor or the historical raw-row
@@ -48,11 +56,49 @@ PAD = -1
 # Padding primitives (host + device)
 # ---------------------------------------------------------------------------
 
+# Preallocated all-PAD row template backing pad_batch / megabatch staging:
+# padded buffers are carved by copying template rows instead of a fresh
+# ``np.full`` fill per batch.  Grown geometrically under a lock (reads of an
+# already-large-enough template are lock-free); ``_pad_template_allocs``
+# counts the growths so the smoke bench can assert the steady state
+# allocates nothing new.
+_pad_template = np.full((1 << 10, 2), PAD, dtype=np.int32)
+_pad_template_lock = threading.Lock()
+_pad_template_allocs = 1
+
+
+_pad_template.flags.writeable = False  # a stray write would poison all pads
+
+
+def pad_template(rows: int) -> np.ndarray:
+    """A read-only view of ``rows`` all-PAD ``(rows, 2)`` int32 rows."""
+    global _pad_template, _pad_template_allocs
+    tmpl = _pad_template
+    if tmpl.shape[0] < rows:
+        with _pad_template_lock:
+            if _pad_template.shape[0] < rows:
+                size = max(rows, 2 * _pad_template.shape[0])
+                grown = np.full((size, 2), PAD, dtype=np.int32)
+                grown.flags.writeable = False
+                _pad_template = grown
+                _pad_template_allocs += 1
+            tmpl = _pad_template
+    return tmpl[:rows]
+
+
+def pad_template_allocs() -> int:
+    """How many times the shared PAD template has been (re)allocated —
+    a growth counter, not a per-batch one; the smoke bench asserts it stays
+    flat across steady-state streaming."""
+    return _pad_template_allocs
+
+
 def pad_batch(edges: np.ndarray, length: int) -> np.ndarray:
     """Pad a host ``(m, 2)`` batch with PAD rows up to exactly ``length``.
 
     Zero-copy when the batch is already full-length int32 (the steady-state
-    case: every non-final pipeline batch).
+    case: every non-final pipeline batch); the padded tail is filled from
+    the preallocated PAD template rather than a fresh ``np.full``.
     """
     edges = np.asarray(edges)
     m = edges.shape[0]
@@ -60,8 +106,9 @@ def pad_batch(edges: np.ndarray, length: int) -> np.ndarray:
         raise ValueError(f"batch of {m} rows exceeds pad length {length}")
     if m == length and edges.dtype == np.int32:
         return edges
-    out = np.full((length, 2), PAD, dtype=np.int32)
+    out = np.empty((length, 2), dtype=np.int32)
     out[:m] = edges
+    out[m:] = pad_template(length - m)
     return out
 
 
@@ -75,8 +122,9 @@ def pad_to_chunks(edges: np.ndarray, chunk: int) -> np.ndarray:
     edges = np.asarray(edges)
     m = edges.shape[0]
     n_chunks = max(1, -(-m // chunk))
-    out = np.full((n_chunks * chunk, 2), PAD, dtype=np.int32)
+    out = np.empty((n_chunks * chunk, 2), dtype=np.int32)
     out[:m] = edges
+    out[m:] = pad_template(n_chunks * chunk - m)
     return out.reshape(n_chunks, chunk, 2)
 
 
@@ -154,6 +202,22 @@ class Batch(NamedTuple):
     offset: int  # raw rows consumed from the source before this batch
 
 
+class MegaBatch(NamedTuple):
+    """``K`` stacked pipeline batches staged as one fixed-shape host buffer.
+
+    The fused device paths (``lax.scan``-over-chunks, double-buffered-DMA
+    Pallas) consume one of these per dispatch.  ``edges`` always has the
+    full ``(K, batch_edges, 2)`` shape — a ragged tail (fewer than ``K``
+    real batches left in the stream) is padded with all-PAD batches, which
+    are no-ops in every tier, so the device sees exactly one shape per run.
+    """
+
+    edges: np.ndarray  # (K, batch_edges, 2) int32, PAD-padded
+    n_rows: int  # raw source rows across the megabatch (before padding)
+    offset: int  # raw rows consumed from the source before this megabatch
+    n_batches: int  # real (non-padding) batches stacked (1..K)
+
+
 class BatchPipeline:
     """Fixed-shape batching + host/device overlap for an edge source.
 
@@ -193,6 +257,7 @@ class BatchPipeline:
         self.prefetch = max(0, int(prefetch))
         self.peak_buffer_bytes = 0
         self.batches_produced = 0
+        self.megabatches_produced = 0
         self._inflight_bytes = 0
         self._lock = threading.Lock()
 
@@ -272,11 +337,99 @@ class BatchPipeline:
                 self._release(prev.edges.nbytes)
             inner.close()
 
+    def _produce_mega(self, k: int, start: Cursor) -> Iterator[MegaBatch]:
+        """Raw megabatch producer: stack ``k`` consecutive batches into one
+        ``(k, batch_edges, 2)`` buffer.  Runs entirely on the prefetch
+        thread, so the stacking memcpy (and everything upstream of it —
+        parsing, generation, codec decode) overlaps the consumer's device
+        dispatch.  The buffer is carved PAD-filled from the shared template
+        (no per-megabatch ``np.full``), and a ragged tail keeps the full
+        ``k``-batch shape with all-PAD trailing batches.
+        """
+        B = self.batch_edges
+        offset = start.row
+        slices = self._counted_slices(start)
+        stream = rechunk(slices, B)
+        try:
+            while True:
+                buf = None
+                rows = 0
+                n_batches = 0
+                try:
+                    for raw in stream:
+                        m = raw.shape[0]
+                        if buf is None:
+                            # uninitialised on purpose: every row is either
+                            # overwritten with real edges below or PAD-filled
+                            # from the template before the yield
+                            buf = np.empty((k, B, 2), np.int32)
+                            self._acquire(buf.nbytes)
+                        buf[n_batches, :m] = raw
+                        if m < B:  # short final batch of the stream
+                            buf[n_batches, m:] = pad_template(B - m)
+                        rows += m
+                        n_batches += 1
+                        if n_batches == k:
+                            break
+                    if buf is not None and n_batches < k:
+                        # ragged tail: trailing all-PAD no-op batches
+                        buf[n_batches:] = pad_template(
+                            (k - n_batches) * B
+                        ).reshape(-1, B, 2)
+                except BaseException:
+                    # a producer error between _acquire and yield: the buffer
+                    # never reaches a consumer, so unwind its accounting here
+                    if buf is not None:
+                        self._release(buf.nbytes)
+                    raise
+                if buf is None:
+                    return
+                yield MegaBatch(
+                    edges=buf, n_rows=rows, offset=offset, n_batches=n_batches
+                )
+                offset += rows
+                if n_batches < k:
+                    return  # ragged tail: the stream is exhausted
+        finally:
+            stream.close()
+            slices.close()
+
+    def megabatches(
+        self, k: int, start: Union[int, Cursor] = 0
+    ) -> Iterator[MegaBatch]:
+        """Yield ``(k, batch_edges, 2)`` megabatches from a stream position.
+
+        The fused-dispatch analogue of :meth:`batches`: identical batch
+        boundaries (``rechunk`` by ``batch_edges`` from the same start row),
+        so a megabatch is exactly the concatenation of the next ``k``
+        :meth:`batches` results — which is what makes the fused device paths
+        bit-identical to per-batch ingestion.  Residency accounting counts
+        each staged ``k``-batch buffer, so ``peak_buffer_bytes`` honestly
+        reflects the larger staging footprint.
+        """
+        if k < 1:
+            raise ValueError(f"megabatch k must be >= 1, got {k}")
+        inner = _prefetch_iter(
+            self._produce_mega(k, as_cursor(start)),
+            self.prefetch,
+            on_drop=lambda mb: self._release(mb.edges.nbytes),
+        )
+        prev: Optional[MegaBatch] = None
+        try:
+            for mega in inner:
+                if prev is not None:
+                    self._release(prev.edges.nbytes)
+                prev = mega
+                self.megabatches_produced += 1
+                self.batches_produced += mega.n_batches
+                yield mega
+        finally:
+            if prev is not None:
+                self._release(prev.edges.nbytes)
+            inner.close()
+
     def __iter__(self) -> Iterator[Batch]:
         return self.batches()
-
-
-_SENTINEL = object()
 
 
 def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
@@ -287,6 +440,13 @@ def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
     so producer memory stays bounded even if the consumer stalls.  On early
     close, items already produced but never consumed are handed to
     ``on_drop`` so the caller can undo any per-item accounting.
+
+    A producer exception (decode error, torn file, generator bug) is
+    captured on the worker, the queue of already-produced items is drained
+    through ``on_drop``, the worker thread is *joined*, and only then is the
+    exception re-raised on the consumer — so a failure mid-stream can never
+    leave a dangling producer thread or leaked residency accounting behind
+    the caller's back.
     """
     if depth <= 0:
         yield from gen
@@ -294,29 +454,36 @@ def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
     ex = ThreadPoolExecutor(max_workers=1)
 
     def pull():
+        # Capture *every* outcome as a tagged pair: the consumer must be
+        # able to tell produced items (which need on_drop accounting if
+        # never consumed) from terminal signals without re-raising inside
+        # the cleanup path.
         try:
-            return next(gen)
+            return ("item", next(gen))
         except StopIteration:
-            return _SENTINEL
+            return ("stop", None)
+        except BaseException as e:  # propagated on the consumer after join
+            return ("raise", e)
 
     futures: deque = deque()
     try:
         for _ in range(depth):
             futures.append(ex.submit(pull))
         while futures:
-            item = futures.popleft().result()
-            if item is _SENTINEL:
+            kind, value = futures.popleft().result()
+            if kind == "stop":
                 break
+            if kind == "raise":
+                # the finally below drains the queue and joins the worker
+                # before this leaves the generator
+                raise value
             futures.append(ex.submit(pull))
-            yield item
+            yield value
     finally:
         for f in futures:
             if not f.cancel():
-                try:
-                    item = f.result()
-                except Exception:
-                    item = _SENTINEL
-                if item is not _SENTINEL and on_drop is not None:
-                    on_drop(item)
+                kind, value = f.result()
+                if kind == "item" and on_drop is not None:
+                    on_drop(value)
         ex.shutdown(wait=True)
         gen.close()

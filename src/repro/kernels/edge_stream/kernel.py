@@ -3,14 +3,24 @@
 TPU adaptation of the paper's CPU pointer-chasing loop (DESIGN.md §3):
 the state is exactly ``3n`` int32 — for n ≤ ~1.3M nodes that is ≤ 16 MB and
 fits VMEM, so every per-edge load/store hits VMEM (~ns latency) instead of
-HBM.  The edge stream is the *grid*: chunk ``t`` is DMA'd HBM→VMEM by the
-Pallas pipeline while chunk ``t-1`` is being processed; the (d, c, v) output
-blocks have a constant index map, so they stay resident in VMEM across all
-grid steps and are written back to HBM once at the end.
+HBM.  Two entry points share the same per-edge update:
+
+* **Grid-pipelined** (:func:`build_call`): the edge stream is the *grid* —
+  chunk ``t`` is DMA'd HBM→VMEM by the Pallas pipeline while chunk ``t-1``
+  is being processed; the (d, c, v) output blocks have a constant index
+  map, so they stay resident in VMEM across all grid steps and are written
+  back to HBM once at the end.  One ``pallas_call`` per ingest batch.
+* **Megabatch, explicit double-buffered DMA** (:func:`build_megabatch_call`):
+  the whole ``(n_chunks, chunk, 2)`` megabatch stays in HBM
+  (``memory_space=ANY``) and the kernel drives its own edge DMA — two VMEM
+  chunk slots with manual ``make_async_copy``s, chunk ``t+1`` streaming in
+  while chunk ``t``'s sequential ``fori_loop`` runs, the state resident in
+  VMEM across the *entire* megabatch.  One ``pallas_call`` per ``K`` staged
+  pipeline batches (DESIGN.md §10 device pipelining).
 
 Semantics are bit-exact with ``core.streaming.cluster_stream_dense`` — the
 sequential `fori_loop` inside the kernel preserves the paper's strict stream
-order (unlike the Jacobi tier).
+order (unlike the Jacobi tier), whichever entry point dispatches it.
 
 Layout note for real hardware: the 1-D state arrays would be lane-padded to
 (⌈n/128⌉, 128) tiles; scalar load/store then addresses (idx // 128, idx % 128).
@@ -25,8 +35,48 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.graph.pipeline import PAD
+
+
+def _apply_edge(i_raw, j_raw, d_ref, c_ref, v_ref, *, v_max: int):
+    """One Algorithm-1 step against the VMEM-resident (d, c, v) refs —
+    shared by the grid-pipelined and manual-DMA kernels."""
+    live = (i_raw != PAD) & (j_raw != PAD) & (i_raw != j_raw)
+    i = jnp.maximum(i_raw, 0)
+    j = jnp.maximum(j_raw, 0)
+
+    @pl.when(live)
+    def _update():
+        di = d_ref[i] + 1
+        d_ref[i] = di
+        dj = d_ref[j] + 1
+        d_ref[j] = dj
+
+        ci = c_ref[i]
+        cj = c_ref[j]
+        # Sequential +1 per endpoint community; reload so ci == cj sees +2.
+        v_ref[ci] = v_ref[ci] + 1
+        v_ref[cj] = v_ref[cj] + 1
+        vci = v_ref[ci]
+        vcj = v_ref[cj]
+
+        ok = (vci <= v_max) & (vcj <= v_max)
+        i_joins = ok & (vci <= vcj)
+        j_joins = ok & (vci > vcj)
+
+        @pl.when(i_joins)
+        def _move_i():  # i joins the community of j
+            v_ref[cj] = v_ref[cj] + di
+            v_ref[ci] = v_ref[ci] - di
+            c_ref[i] = cj
+
+        @pl.when(j_joins)
+        def _move_j():  # j joins the community of i
+            v_ref[ci] = v_ref[ci] + dj
+            v_ref[cj] = v_ref[cj] - dj
+            c_ref[j] = ci
 
 
 def edge_stream_kernel(
@@ -49,43 +99,9 @@ def edge_stream_kernel(
     chunk = edges_ref.shape[0]
 
     def body(e, carry):
-        i_raw = edges_ref[e, 0]
-        j_raw = edges_ref[e, 1]
-        live = (i_raw != PAD) & (j_raw != PAD) & (i_raw != j_raw)
-        i = jnp.maximum(i_raw, 0)
-        j = jnp.maximum(j_raw, 0)
-
-        @pl.when(live)
-        def _update():
-            di = d_ref[i] + 1
-            d_ref[i] = di
-            dj = d_ref[j] + 1
-            d_ref[j] = dj
-
-            ci = c_ref[i]
-            cj = c_ref[j]
-            # Sequential +1 per endpoint community; reload so ci == cj sees +2.
-            v_ref[ci] = v_ref[ci] + 1
-            v_ref[cj] = v_ref[cj] + 1
-            vci = v_ref[ci]
-            vcj = v_ref[cj]
-
-            ok = (vci <= v_max) & (vcj <= v_max)
-            i_joins = ok & (vci <= vcj)
-            j_joins = ok & (vci > vcj)
-
-            @pl.when(i_joins)
-            def _move_i():  # i joins the community of j
-                v_ref[cj] = v_ref[cj] + di
-                v_ref[ci] = v_ref[ci] - di
-                c_ref[i] = cj
-
-            @pl.when(j_joins)
-            def _move_j():  # j joins the community of i
-                v_ref[ci] = v_ref[ci] + dj
-                v_ref[cj] = v_ref[cj] - dj
-                c_ref[j] = ci
-
+        _apply_edge(
+            edges_ref[e, 0], edges_ref[e, 1], d_ref, c_ref, v_ref, v_max=v_max
+        )
         return carry
 
     jax.lax.fori_loop(0, chunk, body, None)
@@ -99,6 +115,113 @@ def build_call(n: int, chunk: int, n_chunks: int, v_max: int, interpret: bool):
         grid=(n_chunks,),
         in_specs=[
             pl.BlockSpec((chunk, 2), lambda t: (t, 0)),
+            state_spec,
+            state_spec,
+            state_spec,
+        ],
+        out_specs=[state_spec, state_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # d
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # c
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # v
+        ],
+        interpret=interpret,
+    )
+
+
+N_EDGE_SLOTS = 2  # double buffering: one slot streams in, one is consumed
+
+
+def edge_stream_megabatch_kernel(
+    edges_hbm_ref,
+    d0_ref,
+    c0_ref,
+    v0_ref,
+    d_ref,
+    c_ref,
+    v_ref,
+    *,
+    v_max: int,
+    n: int,
+    chunk: int,
+    n_chunks: int,
+):
+    """Whole-megabatch kernel with explicit double-buffered edge DMA.
+
+    ``edges_hbm_ref`` is the full ``(n_chunks, chunk, 2)`` megabatch, left
+    in HBM (``memory_space=ANY``).  The kernel owns the edge movement: two
+    ``(chunk, 2)`` VMEM slots, chunk ``t+1``'s async copy started *before*
+    chunk ``t``'s sequential edge loop runs, so the DMA engine streams edges
+    while the scalar loop updates the VMEM-resident (d, c, v).  One kernel
+    launch ingests the entire megabatch — the state never round-trips to
+    HBM between the K staged batches.
+    """
+    d_ref[...] = d0_ref[...]
+    c_ref[...] = c0_ref[...]
+    v_ref[...] = v0_ref[...]
+
+    def scoped(slots_ref, sems_ref):
+        def edge_dma(t):
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            return pltpu.make_async_copy(
+                edges_hbm_ref.at[t], slots_ref.at[slot], sems_ref.at[slot]
+            )
+
+        # Warm-up: chunk 0 starts streaming before the loop.
+        edge_dma(jnp.int32(0)).start()
+
+        def chunk_body(t, carry):
+            # Kick off chunk t+1 while chunk t is (still) in flight /
+            # being consumed — the double buffer's other slot is free.
+            @pl.when(t + 1 < n_chunks)
+            def _prefetch_next():
+                edge_dma(t + 1).start()
+
+            edge_dma(t).wait()
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+
+            def body(e, c):
+                _apply_edge(
+                    slots_ref[slot, e, 0],
+                    slots_ref[slot, e, 1],
+                    d_ref,
+                    c_ref,
+                    v_ref,
+                    v_max=v_max,
+                )
+                return c
+
+            jax.lax.fori_loop(0, chunk, body, None)
+            return carry
+
+        jax.lax.fori_loop(0, n_chunks, chunk_body, None)
+
+    pl.run_scoped(
+        scoped,
+        pltpu.VMEM((N_EDGE_SLOTS, chunk, 2), jnp.int32),
+        pltpu.SemaphoreType.DMA((N_EDGE_SLOTS,)),
+    )
+
+
+def build_megabatch_call(
+    n: int, chunk: int, n_chunks: int, v_max: int, interpret: bool
+):
+    """One fused dispatch over a ``(n_chunks, chunk, 2)`` megabatch: edges
+    stay in HBM and are double-buffer DMA'd by the kernel itself; the 3n-int
+    state is seeded into VMEM once and written back once."""
+    kernel = functools.partial(
+        edge_stream_megabatch_kernel,
+        v_max=v_max,
+        n=n,
+        chunk=chunk,
+        n_chunks=n_chunks,
+    )
+    state_spec = pl.BlockSpec((n,), lambda: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
             state_spec,
             state_spec,
             state_spec,

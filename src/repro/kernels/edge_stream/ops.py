@@ -9,10 +9,14 @@ import jax.numpy as jnp
 
 from repro.core.state import ClusterState, count_live_edges
 from repro.graph.pipeline import PAD, pad_edges_to_chunks
-from repro.kernels.edge_stream.kernel import build_call
+from repro.kernels.edge_stream.kernel import build_call, build_megabatch_call
 
 
-@functools.partial(jax.jit, static_argnames=("v_max", "chunk", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_max", "chunk", "interpret"),
+    donate_argnums=(0,),
+)
 def pallas_update(
     state: ClusterState,
     edges: jax.Array,
@@ -24,7 +28,9 @@ def pallas_update(
 
     Bit-exact with ``core.streaming.dense_update`` (strict stream order) —
     the kernel seeds its VMEM-resident (d, c, v) from ``state`` at grid step
-    0, so arbitrary batch boundaries produce identical results.
+    0, so arbitrary batch boundaries produce identical results.  ``state``
+    is donated (treat the passed-in state as consumed — the ``partial_fit``
+    contract).
     """
     n = state.d.shape[0]
     padded, n_chunks = pad_edges_to_chunks(edges, chunk)
@@ -37,6 +43,44 @@ def pallas_update(
     )
     return ClusterState(
         d=d, c=c, v=v, edges_seen=state.edges_seen + count_live_edges(edges, PAD)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_max", "chunk", "interpret"),
+    donate_argnums=(0,),
+)
+def pallas_update_megabatch(
+    state: ClusterState,
+    edges: jax.Array,
+    v_max: int,
+    chunk: int = 2048,
+    interpret: bool = True,
+) -> ClusterState:
+    """Fused megabatch Pallas tier: ingest ``(K, B, 2)`` stacked batches in
+    one kernel launch with explicit double-buffered edge DMA.
+
+    The megabatch is flattened to ``K * B / chunk`` DMA chunks; the kernel
+    keeps the 3n-int state in VMEM across all of them and streams chunk
+    ``t+1`` from HBM while chunk ``t``'s sequential edge loop runs
+    (``kernel.edge_stream_megabatch_kernel``).  Strict stream order is
+    preserved, so labels are bit-exact with per-batch :func:`pallas_update`
+    — and with ``dense_update`` — for *any* ``K``/``B``; trailing all-PAD
+    batches (a ragged tail megabatch) are no-ops.  ``state`` is donated.
+    """
+    n = state.d.shape[0]
+    K, B = edges.shape[0], edges.shape[1]
+    padded, n_chunks = pad_edges_to_chunks(edges.reshape(K * B, 2), chunk)
+    call = build_megabatch_call(n, chunk, n_chunks, int(v_max), interpret)
+    d, c, v = call(
+        padded.reshape(n_chunks, chunk, 2),
+        state.d.astype(jnp.int32),
+        state.c.astype(jnp.int32),
+        state.v.astype(jnp.int32),
+    )
+    return ClusterState(
+        d=d, c=c, v=v, edges_seen=state.edges_seen + count_live_edges(edges.reshape(-1, 2), PAD)
     )
 
 

@@ -1,0 +1,415 @@
+"""Device-resident streaming engine: fused megabatch dispatch (DESIGN.md §10).
+
+Covers the device-pipelining contract end to end:
+
+* megabatch staging (`BatchPipeline.megabatches`) reproduces per-batch
+  boundaries exactly — a megabatch is the concatenation of the next K
+  batches, ragged tails padded with all-PAD no-op batches;
+* the fused device paths — `chunked_update_megabatch` (one `lax.scan` over
+  all chunks) and `pallas_update_megabatch` (double-buffered-DMA kernel) —
+  are bit-identical to K sequential per-batch updates, across K, batch
+  size, and stream length (hypothesis property + deterministic grid);
+* `cluster`/`fit` in megabatch mode produce bit-identical labels with
+  ~K-fold fewer device dispatches, and checkpoint suspend/resume at a
+  megabatch-interior batch cursor restores to identical labels;
+* the prefetch worker propagates producer exceptions (and is joined) and
+  `pad_batch` fills from the shared PAD template without per-batch
+  template reallocation.
+"""
+
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.cluster import (  # noqa: E402
+    ClusterConfig,
+    GeneratorSource,
+    StreamClusterer,
+    cluster,
+)
+from repro.core.chunked import chunked_update, chunked_update_megabatch  # noqa: E402
+from repro.core.state import ClusterState  # noqa: E402
+from repro.core.streaming import dense_update  # noqa: E402
+from repro.graph.generators import chung_lu_segments  # noqa: E402
+from repro.graph.pipeline import (  # noqa: E402
+    PAD,
+    BatchPipeline,
+    pad_batch,
+    pad_template_allocs,
+)
+from repro.graph.sources import ArraySource  # noqa: E402
+from repro.kernels.edge_stream.ops import (  # noqa: E402
+    pallas_update,
+    pallas_update_megabatch,
+)
+
+
+def _edges(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, (m, 2)).astype(np.int32)
+    return e
+
+
+def _stack_megabatch(edges, k, batch_edges):
+    """Reference staging: K PAD-padded batches stacked (ragged tail ok)."""
+    mb = np.full((k, batch_edges, 2), PAD, np.int32)
+    rows = 0
+    for b in range(k):
+        raw = edges[b * batch_edges : (b + 1) * batch_edges]
+        mb[b, : raw.shape[0]] = raw
+        rows += raw.shape[0]
+    return mb, rows
+
+
+# ---------------------------------------------------------------------------
+# Pipeline staging
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 3, 4])
+@pytest.mark.parametrize("m", [0, 40, 256, 1000, 1023])
+def test_megabatches_are_stacked_batches(k, m):
+    """A megabatch is exactly the next K per-batch results, PAD-padded."""
+    edges = _edges(97, m, seed=m + k)
+    B = 64
+    per = list(BatchPipeline(ArraySource(edges), B).batches())
+    megas = list(BatchPipeline(ArraySource(edges), B).megabatches(k))
+    assert len(megas) == -(-len(per) // k)
+    idx = 0
+    for mega in megas:
+        assert mega.edges.shape == (k, B, 2)
+        assert mega.offset == (per[idx].offset if per else 0)
+        for b in range(mega.n_batches):
+            np.testing.assert_array_equal(mega.edges[b], per[idx].edges)
+            idx += 1
+        # padding batches of a ragged tail are all-PAD no-ops
+        assert (mega.edges[mega.n_batches :] == PAD).all()
+    assert idx == len(per)
+    assert sum(mb.n_rows for mb in megas) == m
+
+
+def test_megabatch_residency_counts_staging_buffer():
+    """peak_buffer_bytes sees the (K, B, 2) staging buffers."""
+    edges = _edges(97, 4096, seed=0)
+    B, K = 256, 4
+    pipe = BatchPipeline(ArraySource(edges), B, prefetch=1)
+    for _ in pipe.megabatches(K):
+        pass
+    assert pipe.peak_buffer_bytes >= K * B * 2 * 4
+    assert pipe.megabatches_produced == 4
+    assert pipe.batches_produced == 16
+
+
+def test_megabatch_k_validation():
+    pipe = BatchPipeline(ArraySource(_edges(7, 8, 1)), 4)
+    with pytest.raises(ValueError, match="megabatch k"):
+        next(pipe.megabatches(0))
+
+
+# ---------------------------------------------------------------------------
+# Fused device paths ≡ per-batch (direct tier calls)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 100, 192, 250])
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_chunked_megabatch_matches_sequential(k, m):
+    n, chunk, B = 150, 16, 64
+    edges = _edges(n, m, seed=m * 7 + k)
+    seq = ClusterState.init(n)
+    for b in range(-(-m // B) if m else 1):
+        raw = edges[b * B : (b + 1) * B]
+        seq = chunked_update(
+            seq, jnp.asarray(pad_batch(raw, B)), jnp.int32(9), chunk=chunk
+        )
+    n_batches = max(1, -(-m // B))
+    # stack everything into ceil(n_batches / k) megabatches of k batches
+    fused = ClusterState.init(n)
+    done = 0
+    while done < n_batches:
+        mb, _ = _stack_megabatch(edges[done * B :], k, B)
+        fused = chunked_update_megabatch(
+            fused, jnp.asarray(mb), jnp.int32(9), chunk=chunk
+        )
+        done += k
+    for leaf in ("d", "c", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seq, leaf)), np.asarray(getattr(fused, leaf))
+        )
+    assert int(seq.edges_seen) == int(fused.edges_seen)
+
+
+@pytest.mark.parametrize("m", [1, 100, 192])
+@pytest.mark.parametrize("k", [1, 3])
+def test_pallas_megabatch_bit_exact_with_dense(k, m):
+    """The double-buffered-DMA kernel preserves strict stream order: its
+    result equals the numpy-sequential dense oracle (and the per-batch
+    grid kernel) for any K / batch size / ragged tail."""
+    n, chunk, B = 120, 8, 32
+    edges = _edges(n, m, seed=m * 3 + k)
+    ref = dense_update(ClusterState.init(n, numpy=True), edges, 7)
+
+    per = ClusterState.init(n)
+    for b in range(max(1, -(-m // B))):
+        raw = edges[b * B : (b + 1) * B]
+        per = pallas_update(
+            per, jnp.asarray(pad_batch(raw, B)), 7, chunk=chunk, interpret=True
+        )
+
+    fused = ClusterState.init(n)
+    n_batches = max(1, -(-m // B))
+    done = 0
+    while done < n_batches:
+        mb, _ = _stack_megabatch(edges[done * B :], k, B)
+        fused = pallas_update_megabatch(
+            fused, jnp.asarray(mb), 7, chunk=chunk, interpret=True
+        )
+        done += k
+    for leaf in ("d", "c", "v"):
+        np.testing.assert_array_equal(
+            getattr(ref, leaf), np.asarray(getattr(fused, leaf))
+        )
+        np.testing.assert_array_equal(
+            np.asarray(getattr(per, leaf)), np.asarray(getattr(fused, leaf))
+        )
+
+
+# ---------------------------------------------------------------------------
+# API: megabatch fit ≡ per-batch fit (labels bit-identical, fewer dispatches)
+# ---------------------------------------------------------------------------
+
+def _source(n, m, seed, segment=700):
+    return GeneratorSource(
+        chung_lu_segments(n, seed=seed), m, segment_edges=segment
+    )
+
+
+@pytest.mark.parametrize("backend", ["chunked", "pallas"])
+@pytest.mark.parametrize("k,batch_edges,m", [
+    (2, 256, 5000),    # many full megabatches + ragged tail
+    (4, 512, 2048),    # exactly one megabatch
+    (3, 256, 200),     # stream shorter than one batch
+    (5, 256, 4 * 256), # ragged megabatch tail, full batches
+])
+def test_megabatch_fit_labels_bit_identical(backend, k, batch_edges, m):
+    n = 1200
+    src = _source(n, m, seed=k + m)
+    cfg = ClusterConfig(
+        n=n, v_max=24, backend=backend, chunk=128, batch_edges=batch_edges
+    )
+    r_per = cluster(src, cfg)
+    r_mega = cluster(src, cfg.replace(megabatch_k=k))
+    np.testing.assert_array_equal(r_per.labels, r_mega.labels)
+    # ~K-fold dispatch amortisation, exactly: ceil(batches / K) dispatches
+    batches = r_mega.info["stream_batches"]
+    assert r_mega.info["stream_dispatches"] == -(-batches // k)
+    assert r_mega.info["stream_megabatches"] == -(-batches // k)
+    assert r_per.info["stream_dispatches"] == r_per.info["stream_batches"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=5),
+    b_chunks=st.integers(min_value=1, max_value=3),
+    m=st.integers(min_value=1, max_value=3000),
+    backend=st.sampled_from(["chunked", "pallas"]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_megabatch_fit_labels_bit_identical_property(
+    k, b_chunks, m, backend, seed
+):
+    """Hypothesis sweep over K, batch size, and stream length (ragged tails
+    included): megabatch mode never changes labels on either fused tier."""
+    n = 500
+    chunk = 64
+    src = _source(n, m, seed=seed, segment=311)
+    cfg = ClusterConfig(
+        n=n, v_max=16, backend=backend, chunk=chunk,
+        batch_edges=b_chunks * chunk,
+    )
+    r_per = cluster(src, cfg)
+    r_mega = cluster(src, cfg.replace(megabatch_k=k))
+    np.testing.assert_array_equal(r_per.labels, r_mega.labels)
+
+
+def test_megabatch_config_ignored_without_fused_path():
+    """Backends without a megabatch_fn silently use per-batch dispatch."""
+    n, m = 400, 1500
+    src = _source(n, m, seed=3)
+    cfg = ClusterConfig(
+        n=n, v_max=16, backend="scan", batch_edges=256, megabatch_k=4
+    )
+    r = cluster(src, cfg)
+    ref = cluster(src, cfg.replace(megabatch_k=None))
+    np.testing.assert_array_equal(r.labels, ref.labels)
+    assert "stream_megabatches" not in r.info
+
+
+def test_partial_fit_megabatch_requires_fused_backend():
+    sc = StreamClusterer(ClusterConfig(n=10, v_max=4, backend="scan"))
+    with pytest.raises(ValueError, match="no fused megabatch path"):
+        sc.partial_fit_megabatch(np.zeros((2, 4, 2), np.int32))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="megabatch_k"):
+        ClusterConfig(n=10, v_max=4, megabatch_k=0)
+    with pytest.raises(ValueError, match="prefetch"):
+        ClusterConfig(n=10, v_max=4, prefetch=-1)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: suspend/resume at megabatch-interior batch cursors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["chunked", "pallas"])
+@pytest.mark.parametrize("stop_after", [1, 3, 5])
+def test_checkpoint_resume_at_megabatch_interior_cursor(
+    tmp_path, backend, stop_after
+):
+    """Suspend at a batch boundary that is *interior* to a megabatch (per-
+    batch ingest for j batches, j not a multiple of K), restore in a new
+    clusterer, finish in megabatch mode — labels identical to both the
+    uninterrupted megabatch run and the per-batch run."""
+    n, m, B, K = 900, 6000, 256, 4
+    src = _source(n, m, seed=11)
+    cfg = ClusterConfig(
+        n=n, v_max=24, backend=backend, chunk=128, batch_edges=B,
+        megabatch_k=K,
+    )
+
+    sc = StreamClusterer(cfg)
+    sc.fit(src, max_batches=stop_after)  # < K: per-batch suspend point
+    assert sc.stream_offset == stop_after * B
+    ckpt = str(tmp_path / f"ck-{backend}-{stop_after}")
+    sc.save(ckpt)
+
+    sc2 = StreamClusterer.restore(ckpt)
+    assert sc2.stream_offset == stop_after * B
+    res = sc2.fit(src).finalize()
+
+    ref_mega = cluster(src, cfg)
+    ref_per = cluster(src, cfg.replace(megabatch_k=None))
+    np.testing.assert_array_equal(res.labels, ref_mega.labels)
+    np.testing.assert_array_equal(res.labels, ref_per.labels)
+
+
+def test_megabatch_fit_max_batches_budget_exact(tmp_path):
+    """A max_batches budget that is not a megabatch multiple drains the
+    remainder per-batch and the cursor lands on the exact batch row."""
+    n, m, B, K = 600, 4000, 256, 3
+    src = _source(n, m, seed=19)
+    cfg = ClusterConfig(
+        n=n, v_max=16, backend="chunked", chunk=128, batch_edges=B,
+        megabatch_k=K,
+    )
+    sc = StreamClusterer(cfg)
+    sc.fit(src, max_batches=7)  # 2 megabatches + 1 per-batch remainder
+    assert sc.stream_batches == 7
+    assert sc.stream_offset == 7 * B
+    assert sc.stream_megabatches == 2
+    assert sc.stream_dispatches == 3
+    ckpt = str(tmp_path / "ck-budget")
+    sc.save(ckpt)
+    res = StreamClusterer.restore(ckpt).fit(src).finalize()
+    ref = cluster(src, cfg.replace(megabatch_k=None))
+    np.testing.assert_array_equal(res.labels, ref.labels)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch worker failure path + PAD template
+# ---------------------------------------------------------------------------
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _exploding_segments(fail_at_row):
+    def segment(start, length):
+        if start + length > fail_at_row:
+            raise _Boom(f"decode failed at row {start}")
+        return np.full((length, 2), 1, np.int32)
+
+    return segment
+
+
+@pytest.mark.parametrize("mega", [False, True])
+# 900: fails while stacking the *first* batch of a megabatch; 1100: fails
+# interior to a megabatch, after its staging buffer is already acquired
+@pytest.mark.parametrize("fail_at", [900, 1100])
+def test_prefetch_propagates_producer_exception_and_joins(mega, fail_at):
+    """A decode error mid-stream surfaces as-is on the consumer and the
+    prefetch worker thread is joined — no dangling producer."""
+    src = GeneratorSource(
+        _exploding_segments(fail_at), 10_000, segment_edges=128
+    )
+    pipe = BatchPipeline(src, 256, prefetch=2)
+    threads_before = threading.active_count()
+    it = pipe.megabatches(3) if mega else pipe.batches()
+    consumed = 0
+    with pytest.raises(_Boom, match="decode failed"):
+        for _ in it:
+            consumed += 1
+    assert consumed >= 1  # rows before the failure were delivered
+    # the worker is joined before the exception reaches the consumer
+    assert threading.active_count() <= threads_before
+    # residency accounting unwound (nothing left acquired)
+    assert pipe._inflight_bytes == 0
+
+
+def test_fit_surfaces_producer_exception():
+    src = GeneratorSource(_exploding_segments(600), 5_000, segment_edges=128)
+    cfg = ClusterConfig(
+        n=50, v_max=8, backend="chunked", chunk=64, batch_edges=128,
+        megabatch_k=2,
+    )
+    with pytest.raises(_Boom):
+        StreamClusterer(cfg).fit(src)
+
+
+@pytest.mark.parametrize("backend", ["chunked", "pallas", "multiparam"])
+def test_finalize_result_survives_further_partial_fits(backend):
+    """finalize() does not consume the run: with donated state buffers the
+    next partial_fit deletes the live device state, so a finalized
+    Clustering must hold its own host snapshot."""
+    n = 200
+    kw = (
+        dict(v_maxes=(4, 16)) if backend == "multiparam" else dict(v_max=8)
+    )
+    cfg = ClusterConfig(n=n, backend=backend, chunk=64, **kw)
+    sc = StreamClusterer(cfg)
+    sc.partial_fit(_edges(n, 500, seed=1))
+    mid = sc.finalize()  # untouched until after the next ingest
+    sc.partial_fit(_edges(n, 500, seed=2))
+    end = sc.finalize()
+    # the earlier result is still fully readable after more ingestion (with
+    # donation and no snapshot this raised "Array has been deleted")
+    ref = StreamClusterer(cfg).partial_fit(_edges(n, 500, seed=1)).finalize()
+    np.testing.assert_array_equal(mid.labels, ref.labels)
+    assert mid.entropy is not None
+    assert int(mid.state.edges_seen) <= int(end.state.edges_seen)
+
+
+def test_pad_batch_uses_template_without_reallocating():
+    B = 512
+    pad_batch(_edges(9, 100, 0), B)  # warm the template past B rows
+    allocs = pad_template_allocs()
+    for i in range(50):
+        out = pad_batch(_edges(9, 100 + i, i), B)
+        assert out.shape == (B, 2)
+        assert (out[100 + i :] == PAD).all()
+    assert pad_template_allocs() == allocs  # steady state: zero growths
+
+
+def test_pad_batch_result_is_fresh_and_writable():
+    src_rows = _edges(9, 10, 0)
+    out = pad_batch(src_rows, 32)
+    out[:] = 0  # must not alias the shared PAD template
+    again = pad_batch(_edges(9, 10, 1), 32)
+    assert (again[10:] == PAD).all()
