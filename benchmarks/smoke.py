@@ -252,6 +252,35 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
             baseline["table2_quality"], "algo")
         if got != want:
             problems.append(f"table2 algos changed: {want} -> {got}")
+        # quality deltas: the regimes are seeded and every tier is
+        # deterministic, so F1/NMI/Q are comparable across runners — a drop
+        # beyond tolerance fails CI exactly like a perf-claim regression.
+        # Rows tagged "extrapolated" are projections, not measurements, and
+        # are skipped from all value comparisons.
+        tol = 0.05
+        base_rows = {(r.get("regime"), r.get("algo")): r
+                     for r in baseline["table2_quality"]
+                     if not r.get("extrapolated")}
+        for row in report["table2_quality"]:
+            if row.get("extrapolated"):
+                continue
+            base = base_rows.get((row.get("regime"), row.get("algo")))
+            if base is None:
+                continue
+            for field in ("f1", "nmi", "modularity"):
+                if field not in row:
+                    problems.append(
+                        f"table2 {row.get('algo')!r} lost {field!r}")
+                elif field in base and row[field] < base[field] - tol:
+                    problems.append(
+                        f"table2 {row.get('regime')}/{row.get('algo')}: "
+                        f"{field} {base[field]:.3f} -> {row[field]:.3f} — "
+                        "quality regressed")
+            if "refine_sketch_peak_bytes" in base and \
+                    "refine_sketch_peak_bytes" not in row:
+                problems.append(
+                    f"table2 {row.get('algo')!r} lost the refinement "
+                    "memory claim (refine_sketch_peak_bytes)")
     if "streaming_tiers" in baseline and "streaming_tiers" in report:
         got, want = ids(report["streaming_tiers"], "tier"), ids(
             baseline["streaming_tiers"], "tier")

@@ -51,13 +51,24 @@ def run(regimes=None):
         source = GeneratorSource(segment, m, segment_edges=1 << 15)
         edges = source.materialize()  # one copy: clusterers + evaluation
 
-        def add(name, labels, seconds):
+        def add(name, labels, seconds, **extra):
             labels = canonical_labels(labels)
             rows.append({
                 "regime": regime, "algo": name,
                 "f1": avg_f1(labels, truth), "nmi": nmi(labels, truth),
                 "modularity": modularity(edges, labels), "seconds": seconds,
+                **extra,
             })
+
+        def refine_fields(info):
+            # the refinement memory/fidelity claim, visible per row
+            return dict(
+                refine_sketch_peak_bytes=info["refine_sketch_peak_bytes"],
+                refine_dropped_weight=info["refine_dropped_weight"],
+                refine_supernodes=info["refine_supernodes"],
+                refine_communities=info["refine_communities"],
+                refine_replay_rows=info["refine_replay_rows"],
+            )
 
         t0 = time.perf_counter()
         sweep = cluster(edges, ClusterConfig(
@@ -73,6 +84,24 @@ def run(regimes=None):
         best = int(np.argmax(f1s))
         add(f"STR(best v_max={V_MAXES[best]})", np.asarray(sweep_labels[best]),
             t1 - t0)
+
+        # the refinement tiers (DESIGN.md §11): same one-pass sweep, plus a
+        # contracted-supergraph refinement at finalize — sketch-only
+        # (louvain) and sketch+buffered-replay, the quality acceptance row
+        t0 = time.perf_counter()
+        ref_lv = cluster(edges, ClusterConfig(
+            n=n, backend="multiparam", v_maxes=V_MAXES, criterion="density",
+            refine="louvain"))
+        add("STR(sweep)+refine(louvain)", ref_lv.labels,
+            time.perf_counter() - t0, refine=ref_lv.config.refine,
+            **refine_fields(ref_lv.info))
+
+        t0 = time.perf_counter()
+        ref_rp = cluster(edges, ClusterConfig(
+            n=n, backend="multiparam", v_maxes=V_MAXES, criterion="density",
+            refine="labelprop+replay"))
+        add("STR(sweep)+refine", ref_rp.labels, time.perf_counter() - t0,
+            refine=ref_rp.config.refine, **refine_fields(ref_rp.info))
 
         t0 = time.perf_counter()
         dist = cluster(edges, ClusterConfig(

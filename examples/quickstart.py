@@ -52,7 +52,20 @@ def main():
         print(f"    v_max={row['v_max']:4d} entropy={row['entropy']:.2f} "
               f"density={row['density']:.3f}")
 
-    # 4. Incremental ingestion: edges arrive in batches; identical labels to
+    # 4. Multi-stage refinement (DESIGN.md §11): the same one-pass sweep,
+    #    plus a contracted-supergraph refinement at finalize — the sketch is
+    #    accumulated during the stream (no second edge pass), "+replay"
+    #    re-plays the buffered window through the refined labels.
+    ref_ = cluster(edges, ClusterConfig(
+        n=n, backend="multiparam", v_maxes=(16, 32, 64, 128, 256, 512),
+        refine="labelprop+replay"))
+    print(f"[sweep+refine] Q={modularity(edges, ref_.labels):.3f} "
+          f"F1={avg_f1(ref_.labels, truth):.3f} "
+          f"(sketch peak {ref_.info['refine_sketch_peak_bytes']/1e6:.1f} MB, "
+          f"dropped weight {ref_.info['refine_dropped_weight']}, "
+          f"replayed {ref_.info['refine_replay_rows']} edges)")
+
+    # 5. Incremental ingestion: edges arrive in batches; identical labels to
     #    the one-shot call for the sequential backends.
     sc = StreamClusterer(ClusterConfig(n=n, v_max=64, backend="scan"))
     for batch in np.array_split(edges, 10):
@@ -62,7 +75,7 @@ def main():
     print(f"[partial_fit ] 10 batches, {sc.edges_seen} edges, "
           f"identical to one-shot: {np.array_equal(inc.labels, ref.labels)}")
 
-    # 5. Out-of-core ingestion: the same stream from a SNAP-style text file,
+    # 6. Out-of-core ingestion: the same stream from a SNAP-style text file,
     #    parsed in constant memory through the BatchPipeline — the edge list
     #    never materializes.  The paper's memory claim, measured: resident
     #    edges are O(batch_edges) while state is exactly 3n ints.

@@ -24,12 +24,18 @@ from repro.core.metrics import (  # noqa: F401
     community_stats,
     modularity,
     nmi,
+    weighted_modularity,
 )
 from repro.core.state import ClusterState, ShardedState, SweepState  # noqa: F401
 from repro.core.streaming import canonical_labels  # noqa: F401
 from repro.graph.pipeline import PAD  # noqa: F401
 from repro.cluster.api import Clustering, StreamClusterer, cluster  # noqa: F401
 from repro.cluster.config import ClusterConfig  # noqa: F401
+from repro.cluster.refine import (  # noqa: F401
+    RefineRuntime,
+    ReplayBuffer,
+    SupergraphAccumulator,
+)
 from repro.cluster.registry import (  # noqa: F401
     Backend,
     BackendResult,
@@ -70,9 +76,12 @@ __all__ = [
     "MegaBatch",
     "MergedSource",
     "RawCodec",
+    "RefineRuntime",
+    "ReplayBuffer",
     "ShardedSource",
     "ShardedState",
     "StreamClusterer",
+    "SupergraphAccumulator",
     "SweepState",
     "as_source",
     "available_backends",
@@ -84,4 +93,5 @@ __all__ = [
     "modularity",
     "nmi",
     "register_backend",
+    "weighted_modularity",
 ]

@@ -40,7 +40,8 @@ from repro.core.metrics import community_stats, entropy_from_state
 from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import canonical_labels
 from repro.cluster.config import ClusterConfig
-from repro.cluster.registry import Backend, get_backend
+from repro.cluster.refine import RefineRuntime
+from repro.cluster.registry import Backend, BackendResult, get_backend
 from repro.graph.codecs import Cursor
 from repro.graph.pipeline import BatchPipeline
 from repro.graph.sources import ArraySource, EdgeSource, as_source
@@ -277,8 +278,10 @@ def cluster(
 
     in_memory = isinstance(source, ArraySource)
     # The sharded tier always streams — batches are its unit of shard
-    # assignment (fit() sizes the default window per shard).
-    if backend.state_kind == "sharded" or (
+    # assignment (fit() sizes the default window per shard).  Refined runs
+    # always stream too: the supergraph sketch is accumulated per ingested
+    # batch, so the one-shot array path would never feed it.
+    if backend.state_kind == "sharded" or config.refine is not None or (
         backend.resumable
         and (not in_memory or config.batch_edges is not None)
     ):
@@ -337,6 +340,14 @@ class StreamClusterer:
         _check_state(state, config, self._backend)
         self._state = state
         self._last_result = None
+        # Post-stream refinement (DESIGN.md §11): the runtime owns the
+        # supergraph sketch (one per sweep column) and the optional replay
+        # window; both are observed per dispatch and ride checkpoints.
+        self._refine: Optional[RefineRuntime] = (
+            RefineRuntime(config, self._backend)
+            if config.refine is not None
+            else None
+        )
         self._cursor = Cursor(0)
         self.peak_buffer_bytes = 0
         self.stream_batches = 0
@@ -383,6 +394,8 @@ class StreamClusterer:
         result = self._backend.fn(edge_batch, self.config, self._state)
         self._state = result.state
         self._last_result = result
+        if self._refine is not None:
+            self._refine.observe(self._state, edge_batch)
         rows = int(raw_rows if raw_rows is not None else np.shape(edge_batch)[0])
         self._cursor = Cursor(self._cursor.row + rows)
         self.stream_dispatches += 1
@@ -413,6 +426,11 @@ class StreamClusterer:
         )
         self._state = result.state
         self._last_result = result
+        if self._refine is not None:
+            # sketch observation follows dispatch granularity: one label
+            # fetch per fused megabatch, all K*B edges bucketed under the
+            # post-megabatch labels
+            self._refine.observe(self._state, edge_batches)
         K = int(np.shape(edge_batches)[0])
         B = int(np.shape(edge_batches)[1])
         rows = int(raw_rows if raw_rows is not None else K * B)
@@ -529,6 +547,16 @@ class StreamClusterer:
             result = self._backend.fn(_EMPTY_BATCH, self.config, self._state)
             self._state = result.state
         info = result.info
+        if self._refine is not None and result.state is not None:
+            # Multi-stage refinement (DESIGN.md §11): contract the streamed
+            # communities through the accumulated sketch, refine the
+            # supergraph, project back, optionally re-play the buffered
+            # window.  Nothing is consumed — the sketch keeps accumulating
+            # if more partial_fit calls follow.
+            labels, state, info = self._refine.apply(
+                np.asarray(result.labels), result.state, info, self.config
+            )
+            result = BackendResult(state=state, labels=labels, info=info)
         if self.stream_batches:  # surfaced like streamed cluster() calls
             info = dict(info)
             info["peak_buffer_bytes"] = self.peak_buffer_bytes
@@ -561,20 +589,23 @@ class StreamClusterer:
         stream cursor (row + opaque codec token, as a flat int64 leaf) is
         part of the checkpoint pytree itself, so state and stream position
         can never tear apart.  Wide states (sweep, sharded) are just wider
-        pytrees — they ride the same manager.
+        pytrees — they ride the same manager, and so does the refinement
+        runtime when ``config.refine`` is set: the supergraph sketch (and
+        the replay window, for ``+replay``) becomes an extra leaf-set, so a
+        resumed run's refinement is bit-identical to an uninterrupted one.
         """
         mgr = CheckpointManager(directory)  # creates the directory
         tmp = os.path.join(directory, _CONFIG_FILE + ".tmp")
         with open(tmp, "w") as f:
             f.write(self.config.to_json())
         os.replace(tmp, os.path.join(directory, _CONFIG_FILE))
-        return mgr.save(
-            self.edges_seen,
-            {
-                "cluster_state": self._state,
-                "stream_cursor": self._cursor.to_array(),
-            },
-        )
+        tree = {
+            "cluster_state": self._state,
+            "stream_cursor": self._cursor.to_array(),
+        }
+        if self._refine is not None:
+            tree["refine"] = self._refine.to_leaves()
+        return mgr.save(self.edges_seen, tree)
 
     @classmethod
     def restore(
@@ -648,4 +679,30 @@ class StreamClusterer:
             cursor = Cursor(0)
         sc = cls(config, state=restored["cluster_state"])
         sc._cursor = cursor
+        if sc._refine is not None:
+            # Refine leaves ride the same checkpoint (flattened as
+            # refine_acc{i}_{kv,meta} / refine_replay_rows).  Restore them
+            # only when the saved run recorded a matching set — an old or
+            # refine-less checkpoint resumes with a fresh (empty) sketch,
+            # which simply means the refinement only sees post-resume edges.
+            n_accs = len(sc._refine.accumulators)
+            acc_names = {
+                f"refine_acc{i}_{part}"
+                for i in range(n_accs)
+                for part in ("kv", "meta")
+            }
+            if acc_names <= leaves:
+                tmpl = {
+                    f"acc{i}": {
+                        "kv": np.zeros((0, 2), np.int64),
+                        "meta": np.zeros(4, np.int64),
+                    }
+                    for i in range(n_accs)
+                }
+                if (
+                    sc._refine.replay_buffer is not None
+                    and "refine_replay_rows" in leaves
+                ):
+                    tmpl["replay"] = {"rows": np.zeros((0, 2), np.int32)}
+                sc._refine.load_leaves(mgr.restore({"refine": tmpl})["refine"])
         return sc

@@ -61,6 +61,23 @@ class ClusterConfig:
         built from the per-shard states, so it only has effect when
         ``n_shards > 1`` — a single-shard run is exactly one chunked pass
         at ``v_max``.
+      refine: post-stream refinement stage (``repro.cluster.refine``,
+        DESIGN.md §11), dispatched at ``finalize()`` for every state kind:
+        ``"louvain"`` or ``"labelprop"`` run weighted rounds on the
+        contracted supergraph accumulated during the stream (plus
+        modularity-scored community merge/split moves); a ``"+replay"``
+        suffix (e.g. ``"louvain+replay"``) additionally re-plays the most
+        recent ``K*batch_edges`` buffered edges through the refined labels
+        — the split-capable stage — before they are discarded.  ``None``
+        (default) keeps the raw streamed labels.  Requires a
+        dense-label-space backend; runs with ``refine`` set always ingest
+        through the streaming path so the sketch sees every batch.
+      refine_rounds: refinement rounds on the supergraph (Louvain levels /
+        label-propagation sweeps; ``None`` -> 10).
+      refine_max_pairs: cap on inter-community sketch entries (``None`` ->
+        2**20, a 16 MB ceiling at 16 B/entry).  Overflow evicts the
+        lightest pairs into the sketch's ``dropped_weight`` counter —
+        bounded memory, never silent truncation.
       interpret: run Pallas kernels in interpret mode (True on CPU; set
         False on real TPUs).
     """
@@ -76,6 +93,9 @@ class ClusterConfig:
     criterion: str = "density"
     n_shards: Optional[int] = None
     v_max2: Optional[int] = None
+    refine: Optional[str] = None
+    refine_rounds: Optional[int] = None
+    refine_max_pairs: Optional[int] = None
     interpret: bool = True
 
     def __post_init__(self):
@@ -124,6 +144,18 @@ class ClusterConfig:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
         if self.v_max2 is not None and self.v_max2 < 1:
             raise ValueError(f"v_max2 must be >= 1, got {self.v_max2}")
+        if self.refine is not None:
+            from repro.cluster.refine import parse_refine
+
+            parse_refine(self.refine)  # raises on a malformed spec
+        if self.refine_rounds is not None and self.refine_rounds < 1:
+            raise ValueError(
+                f"refine_rounds must be >= 1, got {self.refine_rounds}"
+            )
+        if self.refine_max_pairs is not None and self.refine_max_pairs < 1:
+            raise ValueError(
+                f"refine_max_pairs must be >= 1, got {self.refine_max_pairs}"
+            )
 
     # ------------------------------------------------------------------
     def replace(self, **changes: Any) -> "ClusterConfig":

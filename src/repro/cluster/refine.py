@@ -1,0 +1,471 @@
+"""The multi-stage refinement subsystem behind ``ClusterConfig.refine``.
+
+Closes the streaming quality gap (ROADMAP item 1, CluStRE-style): after any
+streamed fit, the final communities are contracted into a weighted
+supergraph — O(#clusters), in memory even when the edge list never was — a
+few weighted Louvain / label-propagation rounds refine it, and the refined
+labels project back onto nodes.  Three cooperating pieces (DESIGN.md §11):
+
+* :class:`SupergraphAccumulator` — a bounded-memory sketch of
+  inter-community edge weight, updated per (mega)batch as the stream is
+  ingested (labels observed at dispatch granularity), so the contraction
+  needs **no second pass over the edges**.  Dense ``O(k^2)`` while the
+  community count is small; a capped top-weight hash after that, with a
+  ``dropped_weight`` counter so truncation is never silent.
+* :class:`ReplayBuffer` — the buffered variant (Faraj & Schulz): the most
+  recent ``K*batch_edges`` live edges are kept (row-exact, a pure function
+  of the stream position) and re-played through the projected labels as
+  weighted plurality sweeps — the one stage that can move *individual*
+  nodes, i.e. split streamed clusters, at zero extra I/O.
+* :class:`RefineRuntime` — per-run wiring: creates one accumulator per
+  sweep column (``SweepState``), one for the single-state kinds; observes
+  batches against the right labels per state kind; serializes sketch +
+  replay window as checkpoint leaves (bit-identical resume); applies the
+  refinement at ``finalize()`` and rebuilds the :class:`ClusterState` view.
+
+Everything here is host-side numpy — refinement is a post-stream,
+O(#clusters)-sized stage; the device pipeline is untouched unless
+``config.refine`` is set.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.labelprop import label_propagation
+from repro.core.refine import contract_pairs, project_labels, refine_partition
+from repro.core.state import ClusterState
+from repro.graph.pipeline import PAD
+
+# Sketch defaults: dense matrix while distinct labels fit DENSE_K; hash with
+# at most MAX_PAIRS entries after that (16 B/entry -> 16 MB ceiling).
+DENSE_K = 512
+MAX_PAIRS = 1 << 20
+
+# Replay sweeps mirror the bench's LabelProp setting.
+REPLAY_SWEEPS = 3
+
+_MODE_DENSE, _MODE_HASH = 0, 1
+
+
+def parse_refine(spec: Optional[str]) -> Optional[Tuple[str, bool]]:
+    """``"louvain" | "labelprop" ["+replay"]`` -> ``(engine, replay)``."""
+    if spec is None:
+        return None
+    engine, plus, mod = spec.partition("+")
+    if engine not in ("louvain", "labelprop") or (plus and mod != "replay"):
+        raise ValueError(
+            f"refine must be 'louvain' or 'labelprop', optionally with "
+            f"'+replay', got {spec!r}"
+        )
+    return engine, bool(plus)
+
+
+class SupergraphAccumulator:
+    """Bounded-memory inter-community edge-weight sketch.
+
+    ``observe(edges, labels)`` buckets each live edge under its endpoints'
+    *current* community labels (unordered pair; equal labels accumulate as
+    internal weight).  Storage starts as a dense ``(DENSE_K, DENSE_K)``
+    int64 matrix behind a label->slot map and spills to a hash of packed
+    ``lo * n + hi`` keys once more than ``dense_k`` distinct labels appear;
+    the hash is capped at ``max_pairs`` entries — overflow evicts the
+    lightest pairs (deterministically, by ``(weight, key)``) into
+    ``dropped_weight``, so truncation is visible, never silent.
+
+    The sketch's content is a pure mapping ``{packed pair -> weight}`` plus
+    the counter: :meth:`to_leaves` serializes exactly that (key-sorted), and
+    a restored accumulator continues bit-identically — internal slot order
+    never leaks into :meth:`entries`, eviction, or spill decisions.
+    """
+
+    def __init__(
+        self, n: int, dense_k: int = DENSE_K, max_pairs: int = MAX_PAIRS
+    ):
+        self.n = int(n)
+        self.dense_k = int(dense_k)
+        self.max_pairs = int(max_pairs)
+        self.dropped_weight = 0
+        self._idx: Dict[int, int] = {}  # label -> dense slot
+        self._mat: Optional[np.ndarray] = None  # (dense_k, dense_k) int64
+        self._pairs: Optional[Dict[int, int]] = None  # packed key -> weight
+        self._peak_bytes = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def spilled(self) -> bool:
+        return self._pairs is not None
+
+    @property
+    def nbytes(self) -> int:
+        if self._pairs is not None:
+            return 16 * len(self._pairs)  # packed int64 key + int64 weight
+        return 0 if self._mat is None else int(self._mat.nbytes)
+
+    @property
+    def peak_bytes(self) -> int:
+        return max(self._peak_bytes, self.nbytes)
+
+    # ------------------------------------------------------------------
+    def observe(self, edges: np.ndarray, labels: np.ndarray) -> None:
+        """Accumulate one batch of edges under the given labelling."""
+        e = np.asarray(edges).reshape(-1, 2)
+        if e.shape[0] == 0:
+            return
+        live = (e[:, 0] != PAD) & (e[:, 1] != PAD) & (e[:, 0] != e[:, 1])
+        e = e[live]
+        if e.shape[0] == 0:
+            return
+        labels = np.asarray(labels)
+        a = labels[e[:, 0]].astype(np.int64)
+        b = labels[e[:, 1]].astype(np.int64)
+        lo, hi = np.minimum(a, b), np.maximum(a, b)
+        keys, w = np.unique(lo * self.n + hi, return_counts=True)
+        if not self.spilled:
+            fresh = np.unique(
+                np.concatenate([keys // self.n, keys % self.n])
+            )
+            new_labels = [x for x in fresh.tolist() if x not in self._idx]
+            if len(self._idx) + len(new_labels) > self.dense_k:
+                self._spill()
+            else:
+                for x in new_labels:
+                    self._idx[x] = len(self._idx)
+                self._observe_dense(keys, w)
+                return
+        self._observe_hash(keys, w)
+
+    def _observe_dense(self, keys: np.ndarray, w: np.ndarray) -> None:
+        if self._mat is None:
+            self._mat = np.zeros((self.dense_k, self.dense_k), np.int64)
+            self._peak_bytes = max(self._peak_bytes, int(self._mat.nbytes))
+        ia = np.fromiter(
+            (self._idx[int(x)] for x in keys // self.n), np.int64, len(keys)
+        )
+        ib = np.fromiter(
+            (self._idx[int(x)] for x in keys % self.n), np.int64, len(keys)
+        )
+        np.add.at(self._mat, (ia, ib), w)
+
+    def _observe_hash(self, keys: np.ndarray, w: np.ndarray) -> None:
+        pairs = self._pairs
+        for k, c in zip(keys.tolist(), w.tolist()):
+            pairs[k] = pairs.get(k, 0) + c
+        if len(pairs) > self.max_pairs:
+            self._evict()
+        self._peak_bytes = max(self._peak_bytes, self.nbytes)
+
+    def _spill(self) -> None:
+        """Dense -> hash conversion (content-preserving)."""
+        self._pairs = {}
+        if self._mat is not None:
+            back = np.empty(len(self._idx), np.int64)
+            for label, slot in self._idx.items():
+                back[slot] = label
+            ia, ib = np.nonzero(self._mat)
+            la, lb = back[ia], back[ib]
+            lo, hi = np.minimum(la, lb), np.maximum(la, lb)
+            for k, c in zip(
+                (lo * self.n + hi).tolist(), self._mat[ia, ib].tolist()
+            ):
+                self._pairs[k] = self._pairs.get(k, 0) + c
+        self._idx = {}
+        self._mat = None
+
+    def _evict(self) -> None:
+        """Drop the lightest pairs down to 3/4 of the cap; deterministic
+        (ordered by ``(weight, key)``) and counted, never silent."""
+        target = (3 * self.max_pairs) // 4
+        by_weight = sorted((w, k) for k, w in self._pairs.items())
+        for w, k in by_weight[: len(self._pairs) - target]:
+            self.dropped_weight += w
+            del self._pairs[k]
+
+    # ------------------------------------------------------------------
+    def entries(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Accumulated ``(a, b, weight)`` label pairs, key-sorted (so the
+        output is independent of internal storage mode or slot order)."""
+        if self.spilled:
+            if not self._pairs:
+                z = np.zeros(0, np.int64)
+                return z, z, z
+            keys = np.sort(np.fromiter(self._pairs, np.int64, len(self._pairs)))
+            w = np.fromiter(
+                (self._pairs[int(k)] for k in keys), np.int64, len(keys)
+            )
+        else:
+            if self._mat is None:
+                z = np.zeros(0, np.int64)
+                return z, z, z
+            back = np.empty(len(self._idx), np.int64)
+            for label, slot in self._idx.items():
+                back[slot] = label
+            ia, ib = np.nonzero(self._mat)
+            la, lb = back[ia], back[ib]
+            lo, hi = np.minimum(la, lb), np.maximum(la, lb)
+            keys = lo * self.n + hi
+            order = np.argsort(keys, kind="stable")
+            keys, w = keys[order], self._mat[ia, ib][order]
+        return keys // self.n, keys % self.n, w
+
+    # ------------------------------------------------------------------
+    def to_leaves(self) -> Dict[str, np.ndarray]:
+        """Checkpoint leaves: key-sorted ``(key, weight)`` rows + counters."""
+        a, b, w = self.entries()
+        kv = np.stack([a * self.n + b, w], axis=1) if len(a) else np.zeros(
+            (0, 2), np.int64
+        )
+        meta = np.array(
+            [
+                _MODE_HASH if self.spilled else _MODE_DENSE,
+                self.dropped_weight,
+                self.peak_bytes,
+                self.n,
+            ],
+            np.int64,
+        )
+        return {"kv": kv.astype(np.int64), "meta": meta}
+
+    @classmethod
+    def from_leaves(
+        cls,
+        leaves: Dict[str, np.ndarray],
+        dense_k: int = DENSE_K,
+        max_pairs: int = MAX_PAIRS,
+    ) -> "SupergraphAccumulator":
+        meta = np.asarray(leaves["meta"], np.int64)
+        acc = cls(int(meta[3]), dense_k=dense_k, max_pairs=max_pairs)
+        acc.dropped_weight = int(meta[1])
+        acc._peak_bytes = int(meta[2])
+        kv = np.asarray(leaves["kv"], np.int64).reshape(-1, 2)
+        if int(meta[0]) == _MODE_HASH:
+            acc._pairs = dict(zip(kv[:, 0].tolist(), kv[:, 1].tolist()))
+        elif len(kv):
+            for x in np.unique(
+                np.concatenate([kv[:, 0] // acc.n, kv[:, 0] % acc.n])
+            ).tolist():
+                acc._idx[x] = len(acc._idx)
+            acc._observe_dense(kv[:, 0], kv[:, 1])
+        return acc
+
+
+class ReplayBuffer:
+    """The most recent ``cap_rows`` live stream edges, row-exact.
+
+    Eviction is by rows, not batches, so the contents are a pure function of
+    the stream position — which is what makes a checkpointed-and-resumed
+    run's replay window bit-identical to the uninterrupted run's.
+    """
+
+    def __init__(self, cap_rows: int):
+        self.cap_rows = int(cap_rows)
+        self._chunks: deque = deque()
+        self._total = 0
+
+    def append(self, edges: np.ndarray) -> None:
+        e = np.asarray(edges).reshape(-1, 2)
+        live = (e[:, 0] != PAD) & (e[:, 1] != PAD) & (e[:, 0] != e[:, 1])
+        e = np.ascontiguousarray(e[live], dtype=np.int32)  # copy: never pin
+        if e.shape[0] == 0:  # pipeline buffers via a view
+            return
+        self._chunks.append(e)
+        self._total += e.shape[0]
+        while self._total > self.cap_rows:
+            excess = self._total - self.cap_rows
+            head = self._chunks[0]
+            if head.shape[0] <= excess:
+                self._chunks.popleft()
+                self._total -= head.shape[0]
+            else:
+                self._chunks[0] = head[excess:]
+                self._total -= excess
+
+    @property
+    def n_rows(self) -> int:
+        return self._total
+
+    def rows(self) -> np.ndarray:
+        if not self._chunks:
+            return np.zeros((0, 2), np.int32)
+        return np.concatenate(list(self._chunks), axis=0)
+
+    def to_leaf(self) -> np.ndarray:
+        return self.rows()
+
+    def load_leaf(self, leaf: np.ndarray) -> None:
+        self._chunks.clear()
+        self._total = 0
+        self.append(np.asarray(leaf, np.int32).reshape(-1, 2))
+
+
+class RefineRuntime:
+    """Per-run refinement wiring for a :class:`StreamClusterer`.
+
+    Owns the accumulator(s) (one per sweep column for the sweep kind) and
+    the optional replay buffer; dispatches observation and application on
+    the backend's state kind.
+    """
+
+    def __init__(self, config, backend):
+        parsed = parse_refine(config.refine)
+        assert parsed is not None, "RefineRuntime requires config.refine"
+        if backend.label_space != "dense":
+            raise ValueError(
+                f"refine requires a dense-label-space backend; "
+                f"{backend.name!r} labels live in the "
+                f"{backend.label_space!r} space"
+            )
+        self.engine, self.replay = parsed
+        self.rounds = (
+            10 if config.refine_rounds is None else int(config.refine_rounds)
+        )
+        max_pairs = (
+            MAX_PAIRS
+            if config.refine_max_pairs is None
+            else int(config.refine_max_pairs)
+        )
+        self._kind = backend.state_kind
+        n_accs = len(config.v_maxes) if self._kind == "sweep" else 1
+        self.accumulators: List[SupergraphAccumulator] = [
+            SupergraphAccumulator(config.n, max_pairs=max_pairs)
+            for _ in range(n_accs)
+        ]
+        self.replay_buffer: Optional[ReplayBuffer] = None
+        if self.replay:
+            from repro.cluster.api import DEFAULT_BATCH_EDGES
+
+            cap = (config.megabatch_k or 1) * (
+                config.batch_edges or DEFAULT_BATCH_EDGES
+            )
+            self.replay_buffer = ReplayBuffer(cap)
+
+    # ------------------------------------------------------------------
+    def observe(self, state, edges) -> None:
+        """Bucket one ingested (mega)batch under the post-update labels.
+
+        Observation runs at dispatch granularity: per batch in per-batch
+        mode, per fused megabatch in megabatch mode (one label fetch per
+        dispatch — the sketch, like the labels it reads, is a host-visible
+        side channel of the device run).
+        """
+        e = np.asarray(edges).reshape(-1, 2)
+        if self._kind == "sweep":
+            c = np.asarray(state.c)  # (A, n)
+            for a, acc in enumerate(self.accumulators):
+                acc.observe(e, c[a])
+        elif self._kind == "sharded":
+            # the batch just ingested went to shard (cursor - 1) % P
+            s = (int(state.cursor) - 1) % state.n_shards
+            self.accumulators[0].observe(e, np.asarray(state.c[s]))
+        else:
+            self.accumulators[0].observe(e, np.asarray(state.c))
+        if self.replay_buffer is not None:
+            self.replay_buffer.append(e)
+
+    # ------------------------------------------------------------------
+    def apply(self, labels: np.ndarray, state, info: dict, config):
+        """Refine final labels through the contracted supergraph.
+
+        ``labels``: the backend's finalized raw labels (dense space);
+        ``state``: the finalized :class:`ClusterState` view.  Returns
+        ``(labels, state, info)`` with refined labels, a rebuilt state view
+        (volumes re-derived over the refined communities), and refinement
+        diagnostics.  Consumes nothing — later ``partial_fit`` calls keep
+        accumulating into the same sketch.
+        """
+        acc = self.accumulators[
+            info["best_index"] if self._kind == "sweep" else 0
+        ]
+        labels = np.asarray(labels)
+        a, b, w = acc.entries()
+        sg = contract_pairs(a, b, w, labels)
+        sg_labels = refine_partition(
+            sg, engine=self.engine, rounds=self.rounds
+        )
+        refined = project_labels(labels, sg, sg_labels)
+        replay_rows = 0
+        if self.replay_buffer is not None:
+            window = self.replay_buffer.rows()
+            replay_rows = window.shape[0]
+            if replay_rows:
+                # The split-capable stage: supergraph moves can never break a
+                # supernode apart, and plurality votes seeded from the coarse
+                # refined labels would only ever ratify them — so nodes the
+                # window covers restart from the *fine* streamed labels and
+                # are re-played at node granularity, while out-of-window
+                # nodes keep the supergraph-refined labels (the global
+                # coarse-grained fix is all the evidence we still have for
+                # them).  Both label spaces are founder/representative node
+                # ids, so mixing them cannot collide two unrelated groups.
+                init = refined.astype(np.int64)
+                touched = np.unique(window)
+                init[touched] = np.asarray(labels, np.int64)[touched]
+                refined = label_propagation(
+                    window,
+                    len(refined),
+                    sweeps=REPLAY_SWEEPS,
+                    init_labels=init,
+                ).astype(np.int32)
+        d = np.asarray(state.d)
+        v = np.zeros(len(refined), np.int64)
+        np.add.at(v, refined, d.astype(np.int64))
+        new_state = ClusterState(
+            d=d,
+            c=refined.astype(np.int32),
+            v=np.minimum(v, np.iinfo(np.int32).max).astype(np.int32),
+            edges_seen=np.int64(state.edges_seen),
+        )
+        info = dict(info)
+        info.update(
+            refine_engine=self.engine,
+            refine_replay_rows=replay_rows,
+            refine_supernodes=sg.k,
+            refine_communities=int(np.unique(refined).shape[0]),
+            refine_sketch_bytes=acc.nbytes,
+            refine_sketch_peak_bytes=max(
+                x.peak_bytes for x in self.accumulators
+            ),
+            refine_dropped_weight=acc.dropped_weight,
+        )
+        return refined, new_state, info
+
+    # ------------------------------------------------------------------
+    # Checkpoint leaves (ride CheckpointManager with the state pytree)
+    # ------------------------------------------------------------------
+
+    def to_leaves(self) -> Dict[str, Dict[str, np.ndarray]]:
+        out: Dict[str, Dict[str, np.ndarray]] = {
+            f"acc{i}": acc.to_leaves()
+            for i, acc in enumerate(self.accumulators)
+        }
+        if self.replay_buffer is not None:
+            out["replay"] = {"rows": self.replay_buffer.to_leaf()}
+        return out
+
+    def leaves_template(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """Restore template mirroring :meth:`to_leaves` — variable-length
+        host leaves come back at their on-disk shape."""
+        out: Dict[str, Dict[str, np.ndarray]] = {
+            f"acc{i}": {
+                "kv": np.zeros((0, 2), np.int64),
+                "meta": np.zeros(4, np.int64),
+            }
+            for i in range(len(self.accumulators))
+        }
+        if self.replay_buffer is not None:
+            out["replay"] = {"rows": np.zeros((0, 2), np.int32)}
+        return out
+
+    def load_leaves(self, leaves: Dict[str, Dict[str, np.ndarray]]) -> None:
+        for i in range(len(self.accumulators)):
+            old = self.accumulators[i]
+            self.accumulators[i] = SupergraphAccumulator.from_leaves(
+                leaves[f"acc{i}"],
+                dense_k=old.dense_k,
+                max_pairs=old.max_pairs,
+            )
+        if self.replay_buffer is not None and "replay" in leaves:
+            self.replay_buffer.load_leaf(leaves["replay"]["rows"])

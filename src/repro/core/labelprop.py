@@ -4,9 +4,21 @@ Simple and fast: each sweep, every node adopts the plurality label among its
 neighbours (ties -> keep / smallest label).  Included so the quality table has
 a second non-streaming baseline that *does* scale to the larger benchmark
 graphs in-container.
+
+Two extensions feed the refinement subsystem (``repro.cluster.refine``):
+
+* ``weights`` — plurality becomes a weighted vote; a weighted edge is
+  exactly equivalent to that many duplicated unit edges (pinned by tests),
+  so the same sweeps run on a contracted supergraph's accumulated weights.
+* ``init_labels`` — start from an existing partition instead of singletons;
+  the buffered-replay refinement stage re-plays the recent edge window
+  through the projected labels this way, letting *individual nodes* move
+  (a split-capable correction the contracted supergraph alone cannot make).
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
@@ -14,11 +26,23 @@ from repro.core.louvain import _to_csr
 
 
 def label_propagation(
-    edges: np.ndarray, n: int, sweeps: int = 5, seed: int = 0
+    edges: np.ndarray,
+    n: int,
+    sweeps: int = 5,
+    seed: int = 0,
+    weights: Optional[np.ndarray] = None,
+    init_labels: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     rng = np.random.default_rng(seed)
-    indptr, indices, _ = _to_csr(edges, n)
-    labels = np.arange(n, dtype=np.int64)
+    indptr, indices, data = _to_csr(edges, n, weights)
+    if init_labels is None:
+        labels = np.arange(n, dtype=np.int64)
+    else:
+        labels = np.asarray(init_labels, dtype=np.int64).copy()
+        if labels.shape[0] != n:
+            raise ValueError(
+                f"init_labels has {labels.shape[0]} entries for n={n}"
+            )
     for _ in range(sweeps):
         changed = 0
         for u in rng.permutation(n):
@@ -26,8 +50,10 @@ def label_propagation(
             if hi == lo:
                 continue
             nbr_labels = labels[indices[lo:hi]]
-            uniq, cnt = np.unique(nbr_labels, return_counts=True)
-            best = uniq[np.argmax(cnt)]
+            uniq, inv = np.unique(nbr_labels, return_inverse=True)
+            vote = np.zeros(len(uniq))
+            np.add.at(vote, inv, data[lo:hi])
+            best = uniq[np.argmax(vote)]
             if best != labels[u]:
                 labels[u] = best
                 changed += 1

@@ -4,25 +4,51 @@ Full two-phase implementation on CSR adjacency: greedy local moves until no
 gain, then graph coarsening; repeat.  Numpy implementation sized for the
 benchmark graphs (≤ ~1e7 edges in-container).  Unlike the streaming algorithm
 it stores the whole graph — the memory benchmark reports exactly that gap.
+
+Edges may carry weights (``weights=None`` means unit weight) — a weighted
+edge is exactly equivalent to that many duplicated unit edges, which is what
+lets the refinement subsystem (``repro.cluster.refine``) run Louvain rounds
+on a *contracted supergraph* whose edges are accumulated inter-community
+weights instead of raw graph edges.  Self-loops are kept as internal weight
+(they are the contraction of intra-community edges): a self-loop of weight w
+contributes 2w to its node's strength and w to its community's internal
+weight, the standard Louvain convention.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
 
-def _to_csr(edges: np.ndarray, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Undirected weighted CSR from an edge multiset (multi-edges summed)."""
+def _to_csr(
+    edges: np.ndarray, n: int, weights: Optional[np.ndarray] = None
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Undirected weighted CSR from an edge multiset (multi-edges summed).
+
+    ``weights``: optional per-edge weights (unit when ``None``).  Self-loops
+    are dropped here (the plain-graph baselines never see them); the
+    refinement engine keeps contracted self-weight out-of-band — see
+    ``repro.core.refine.contract_graph``.
+    """
     e = np.asarray(edges)
+    w = (
+        np.ones(e.shape[0], dtype=np.float64)
+        if weights is None
+        else np.asarray(weights, dtype=np.float64)
+    )
+    if w.shape[0] != e.shape[0]:
+        raise ValueError(
+            f"weights length {w.shape[0]} != edge count {e.shape[0]}"
+        )
     live = (e[:, 0] >= 0) & (e[:, 1] >= 0) & (e[:, 0] != e[:, 1])
-    e = e[live]
+    e, w = e[live], w[live]
     src = np.concatenate([e[:, 0], e[:, 1]])
     dst = np.concatenate([e[:, 1], e[:, 0]])
+    wts = np.concatenate([w, w])
     order = np.argsort(src, kind="stable")
-    src, dst = src[order], dst[order]
-    wts = np.ones(len(src), dtype=np.float64)
+    src, dst, wts = src[order], dst[order], wts[order]
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.add.at(indptr, src + 1, 1)
     indptr = np.cumsum(indptr)
@@ -36,11 +62,20 @@ def _one_level(
     w: float,
     rng: np.random.Generator,
     max_sweeps: int = 10,
+    self_weight: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, bool]:
-    """Greedy modularity moves; returns (labels, improved)."""
+    """Greedy modularity moves; returns (labels, improved).
+
+    ``self_weight``: per-node internal weight (contracted self-loops) — it
+    adds 2w to the node's strength (degree mass it carries into whichever
+    community it joins) but never to a neighbour-community gain, since a
+    self-loop stays internal wherever the node goes.
+    """
     n = len(indptr) - 1
     deg = np.zeros(n)
     np.add.at(deg, np.repeat(np.arange(n), np.diff(indptr)), data)
+    if self_weight is not None:
+        deg += 2.0 * np.asarray(self_weight, dtype=np.float64)
     labels = np.arange(n, dtype=np.int64)
     sigma_tot = deg.copy()  # community total degree
     improved = False
@@ -100,10 +135,21 @@ def _coarsen(
     return nip, nd, wsum, new
 
 
-def louvain(edges: np.ndarray, n: int, seed: int = 0, max_levels: int = 10) -> np.ndarray:
-    """Run Louvain; returns community labels (n,)."""
+def louvain(
+    edges: np.ndarray,
+    n: int,
+    seed: int = 0,
+    max_levels: int = 10,
+    weights: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Run Louvain; returns community labels (n,).
+
+    ``weights``: optional per-edge weights — equivalent to duplicating each
+    unit edge that many times (pinned by tests), which is how the refinement
+    engine runs this on accumulated supergraph weights.
+    """
     rng = np.random.default_rng(seed)
-    indptr, indices, data = _to_csr(edges, n)
+    indptr, indices, data = _to_csr(edges, n, weights)
     w = float(data.sum())
     if w == 0:
         return np.arange(n, dtype=np.int64)

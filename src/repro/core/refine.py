@@ -1,0 +1,337 @@
+"""Supergraph refinement engines — the algorithmic core of the multi-stage
+refinement subsystem (``repro.cluster.refine``, DESIGN.md §11).
+
+The paper's one-pass algorithm buys its ``3n``-int footprint with quality:
+streamed labels are noisy (over-fragmented at small ``v_max``, over-merged at
+large).  CluStRE (arXiv 2502.06879) shows the gap closes by refining a
+*contracted* graph after the stream: communities become supernodes, the
+supergraph is O(#clusters) and fits in memory even when the edge list never
+does, and a few weighted Louvain / label-propagation rounds over it recover
+near-offline modularity.  Everything here is pure numpy over the contracted
+representation:
+
+* :func:`contract_pairs` / :func:`contract_graph` — build the weighted
+  supergraph from accumulated inter-community weights (the streaming sketch)
+  or from an explicit edge list (exact; used by tests and the equivalence
+  property).
+* :func:`refine_partition` — weighted Louvain or label-propagation rounds on
+  the supergraph, then community merge/split moves scored by the modularity
+  terms (``repro.core.metrics``).
+* :func:`project_labels` — push refined supergraph labels back through the
+  contraction map onto nodes, staying in the node-id label space so the
+  result is a valid :class:`~repro.core.state.ClusterState` labelling.
+
+Invariant (pinned by a hypothesis property): the weighted modularity of the
+projected labels on the original graph equals the weighted modularity of the
+supergraph partition on the contracted graph — so supergraph moves optimise
+exactly the objective that matters on the full graph.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core.labelprop import label_propagation
+from repro.core.louvain import _coarsen, _one_level, _to_csr
+
+
+class Supergraph(NamedTuple):
+    """A contracted weighted graph over the distinct values of a labelling.
+
+    ``edges``/``weights`` hold the *inter*-community weights in compressed
+    supernode ids (each unordered pair once, no self rows); ``self_weight``
+    holds each supernode's internal (intra-community) weight; ``node_of``
+    maps compressed supernode id back to the original label (a node id).
+    """
+
+    edges: np.ndarray  # (E, 2) int64 compressed supernode ids, a < b
+    weights: np.ndarray  # (E,) float64 inter-supernode weight
+    self_weight: np.ndarray  # (K,) float64 internal weight per supernode
+    node_of: np.ndarray  # (K,) int64 original label of each supernode
+
+    @property
+    def k(self) -> int:
+        return int(self.node_of.shape[0])
+
+
+def contract_pairs(
+    pair_a: np.ndarray,
+    pair_b: np.ndarray,
+    pair_w: np.ndarray,
+    labels: np.ndarray,
+) -> Supergraph:
+    """Contract accumulated ``(a, b, w)`` label pairs through ``labels``.
+
+    ``pair_a``/``pair_b`` are community labels *as observed mid-stream* — in
+    the node-id label space, a label is its founding node's id, so the final
+    home of community ``a``'s mass is ``labels[a]``, the founder's final
+    community.  Remapping every entry through the final labelling folds
+    stale observations into the supernodes that actually exist at the end
+    (entries whose endpoints land in the same supernode become internal
+    weight).  The supernode set is the full set of distinct final labels,
+    including communities no sketch entry mentions (isolated supernodes
+    refine as singletons).
+    """
+    labels = np.asarray(labels)
+    uniq, inv = np.unique(labels, return_inverse=True)
+    k = uniq.shape[0]
+    # Compress final labels to [0, K); map each entry endpoint through the
+    # founder's final community.
+    rank = np.zeros(int(uniq[-1]) + 1 if k else 1, dtype=np.int64)
+    rank[uniq] = np.arange(k)
+    a = rank[labels[np.asarray(pair_a, dtype=np.int64)]]
+    b = rank[labels[np.asarray(pair_b, dtype=np.int64)]]
+    w = np.asarray(pair_w, dtype=np.float64)
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    self_weight = np.zeros(k, dtype=np.float64)
+    diag = lo == hi
+    np.add.at(self_weight, lo[diag], w[diag])
+    lo, hi, w = lo[~diag], hi[~diag], w[~diag]
+    key = lo * k + hi
+    uk, pos = np.unique(key, return_inverse=True)
+    wsum = np.zeros(uk.shape[0], dtype=np.float64)
+    np.add.at(wsum, pos, w)
+    edges = np.stack([uk // k, uk % k], axis=1).astype(np.int64)
+    return Supergraph(
+        edges=edges,
+        weights=wsum,
+        self_weight=self_weight,
+        node_of=uniq.astype(np.int64),
+    )
+
+
+def contract_graph(
+    edges: np.ndarray,
+    labels: np.ndarray,
+    weights: Optional[np.ndarray] = None,
+) -> Supergraph:
+    """Exact contraction of an explicit edge list by a labelling.
+
+    The ground-truth counterpart of the streaming sketch: every live edge
+    ``(i, j)`` contributes its weight between supernodes ``labels[i]`` and
+    ``labels[j]``.  Used by the equivalence property tests and anywhere the
+    edges are actually in memory.
+    """
+    e = np.asarray(edges)
+    w = (
+        np.ones(e.shape[0], dtype=np.float64)
+        if weights is None
+        else np.asarray(weights, dtype=np.float64)
+    )
+    live = (e[:, 0] >= 0) & (e[:, 1] >= 0) & (e[:, 0] != e[:, 1])
+    e, w = e[live], w[live]
+    labels = np.asarray(labels)
+    # contract_pairs remaps entries through labels[founder]; here endpoints
+    # are nodes, so "founder" is the node itself and the identity labelling
+    # of pair keys is exactly labels[i] — reuse the same path by passing the
+    # node ids as pair keys.
+    return contract_pairs(e[:, 0], e[:, 1], w, labels)
+
+
+# ---------------------------------------------------------------------------
+# Refinement rounds on the supergraph
+# ---------------------------------------------------------------------------
+
+def _sg_strength(sg: Supergraph) -> np.ndarray:
+    """Supernode strengths: incident inter-weight + 2x internal weight."""
+    deg = 2.0 * sg.self_weight.copy()
+    np.add.at(deg, sg.edges[:, 0], sg.weights)
+    np.add.at(deg, sg.edges[:, 1], sg.weights)
+    return deg
+
+
+def _community_terms(
+    sg: Supergraph, sg_labels: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, float]:
+    """(internal weight, volume) per community + total weight W.
+
+    The modularity terms of the contracted graph: community ``c``
+    contributes ``2*in_c/W - (vol_c/W)^2`` to Q (same convention as
+    :func:`repro.core.metrics.weighted_modularity`).
+    """
+    k = int(sg_labels.max()) + 1 if sg_labels.size else 0
+    strength = _sg_strength(sg)
+    W = float(strength.sum())
+    vol = np.zeros(k, dtype=np.float64)
+    np.add.at(vol, sg_labels, strength)
+    internal = np.zeros(k, dtype=np.float64)
+    np.add.at(internal, sg_labels, sg.self_weight)
+    la, lb = sg_labels[sg.edges[:, 0]], sg_labels[sg.edges[:, 1]]
+    intra = la == lb
+    np.add.at(internal, la[intra], sg.weights[intra])
+    return internal, vol, W
+
+
+def _merge_moves(sg: Supergraph, sg_labels: np.ndarray) -> np.ndarray:
+    """Greedy community-pair merges with positive modularity gain.
+
+    Louvain moves one supernode at a time and can stall where no single
+    supernode moves but merging two whole communities pays:
+    ``dQ(c1, c2) = 2*w_between/W - 2*vol1*vol2/W^2``.  Repeatedly applies
+    the best positive merge until none remains (community count only
+    shrinks, so this terminates).
+    """
+    labels = np.asarray(sg_labels, dtype=np.int64).copy()
+    while True:
+        _, vol, W = _community_terms(sg, labels)
+        if W <= 0:
+            return labels
+        la, lb = labels[sg.edges[:, 0]], labels[sg.edges[:, 1]]
+        inter = la != lb
+        if not inter.any():
+            return labels
+        clo = np.minimum(la[inter], lb[inter])
+        chi = np.maximum(la[inter], lb[inter])
+        ncomm = vol.shape[0]
+        key = clo * ncomm + chi
+        uk, pos = np.unique(key, return_inverse=True)
+        between = np.zeros(uk.shape[0], dtype=np.float64)
+        np.add.at(between, pos, sg.weights[inter])
+        c1, c2 = uk // ncomm, uk % ncomm
+        gain = 2.0 * between / W - 2.0 * vol[c1] * vol[c2] / (W * W)
+        best = int(np.argmax(gain))
+        if gain[best] <= 1e-12:
+            return labels
+        labels[labels == c2[best]] = c1[best]
+
+
+def _split_moves(sg: Supergraph, sg_labels: np.ndarray) -> np.ndarray:
+    """Dissolve refined communities whose members score higher apart.
+
+    A community's modularity contribution is ``2*in_c/W - (vol_c/W)^2``;
+    dissolved back into its constituent supernodes (the streamed clusters —
+    the finest partition the contraction can express) the members contribute
+    ``sum_m 2*self_m/W - (vol_m/W)^2``.  Where the dissolved sum is higher,
+    the merge was a bad one — undo it.  This is the split half of the
+    merge/split pair: it cannot split a *streamed* cluster (only the
+    buffered replay can), but it reverses over-merging at zero edge I/O.
+    """
+    labels = np.asarray(sg_labels, dtype=np.int64).copy()
+    internal, vol, W = _community_terms(sg, labels)
+    if W <= 0:
+        return labels
+    strength = _sg_strength(sg)
+    k = vol.shape[0]
+    as_one = 2.0 * internal / W - (vol / W) ** 2
+    solo = 2.0 * sg.self_weight / W - (strength / W) ** 2
+    solo_sum = np.zeros(k, dtype=np.float64)
+    np.add.at(solo_sum, labels, solo)
+    members = np.bincount(labels, minlength=k)
+    dissolve = (members > 1) & (solo_sum > as_one + 1e-12)
+    if dissolve.any():
+        hit = dissolve[labels]
+        # each dissolved member becomes its own community, keyed off the
+        # supernode id shifted past the existing community id range
+        labels[hit] = k + np.flatnonzero(hit)
+    return labels
+
+
+def refine_partition(
+    sg: Supergraph,
+    engine: str = "louvain",
+    rounds: int = 10,
+    seed: int = 0,
+) -> np.ndarray:
+    """Refinement rounds on a supergraph; returns (K,) supernode labels.
+
+    ``engine="louvain"``: multi-level weighted Louvain with supernode
+    self-weights carried through coarsening, then merge/split moves.
+    ``engine="labelprop"``: weighted plurality sweeps (self-weight is inert
+    — a self-loop votes for the label the node already has), then the same
+    merge/split pass.  Labels are compressed supernode indices; singleton
+    supernodes untouched by any move keep their own index.
+    """
+    k = sg.k
+    if k == 0:
+        return np.zeros(0, dtype=np.int64)
+    if engine == "labelprop":
+        sg_labels = label_propagation(
+            sg.edges, k, sweeps=rounds, seed=seed, weights=sg.weights
+        )
+    elif engine == "louvain":
+        sg_labels = _louvain_with_self(sg, max_levels=rounds, seed=seed)
+    else:
+        raise ValueError(
+            f"unknown refine engine {engine!r}; expected 'louvain' or "
+            "'labelprop'"
+        )
+    # canonical compressed ids so merge/split bincounts stay O(K)
+    _, sg_labels = np.unique(sg_labels, return_inverse=True)
+    sg_labels = _merge_moves(sg, sg_labels)
+    _, sg_labels = np.unique(sg_labels, return_inverse=True)
+    sg_labels = _split_moves(sg, sg_labels)
+    _, sg_labels = np.unique(sg_labels, return_inverse=True)
+    return sg_labels.astype(np.int64)
+
+
+def _louvain_with_self(sg: Supergraph, max_levels: int, seed: int) -> np.ndarray:
+    """Multi-level Louvain on a supergraph with per-node self-weights.
+
+    ``core.louvain`` drops self-loops at CSR build time (raw graphs have
+    none), so internal weight rides separately: it joins each node's
+    strength in ``_one_level`` and folds into the coarse level's
+    self-weights after each contraction.
+    """
+    rng = np.random.default_rng(seed)
+    indptr, indices, data = _to_csr(sg.edges, sg.k, sg.weights)
+    self_w = sg.self_weight.astype(np.float64).copy()
+    W = float(data.sum()) + 2.0 * float(self_w.sum())
+    if W == 0:
+        return np.arange(sg.k, dtype=np.int64)
+    mapping = np.arange(sg.k, dtype=np.int64)
+    for _ in range(max_levels):
+        labels, improved = _one_level(
+            indptr, indices, data, W, rng, self_weight=self_w
+        )
+        if not improved:
+            break
+        # coarse self-weights: members' self-weights + internal CSR weight
+        # (each internal edge appears in both directions -> diag/2)
+        uniq, new = np.unique(labels, return_inverse=True)
+        coarse_self = np.zeros(uniq.shape[0], dtype=np.float64)
+        np.add.at(coarse_self, new, self_w)
+        src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+        internal = new[src] == new[indices]
+        np.add.at(coarse_self, new[src[internal]], data[internal] / 2.0)
+        indptr, indices, data, new2 = _coarsen(indptr, indices, data, labels)
+        # _coarsen keeps contracted internal edges as diagonal entries;
+        # they are already in coarse_self, so drop them from the CSR
+        indptr, indices, data = _drop_diagonal(indptr, indices, data)
+        self_w = coarse_self
+        mapping = new2[labels[mapping]]
+        if len(indptr) - 1 <= 1:
+            break
+    return mapping
+
+
+def _drop_diagonal(indptr, indices, data):
+    src = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+    keep = src != indices
+    nip = np.zeros(len(indptr), dtype=np.int64)
+    np.add.at(nip, src[keep] + 1, 1)
+    return np.cumsum(nip), indices[keep], data[keep]
+
+
+def project_labels(
+    node_labels: np.ndarray, sg: Supergraph, sg_labels: np.ndarray
+) -> np.ndarray:
+    """Push refined supergraph labels back onto nodes.
+
+    Each refined community is named by its first member's original label (a
+    node id), so projected labels remain valid in the node-id label space —
+    the representation every dense-space :class:`ClusterState` uses.
+    """
+    node_labels = np.asarray(node_labels)
+    k = sg.k
+    # representative original label per refined community: first supernode
+    n_comm = int(sg_labels.max()) + 1 if k else 0
+    rep = np.zeros(n_comm, dtype=np.int64)
+    first = np.full(n_comm, k, dtype=np.int64)
+    np.minimum.at(first, sg_labels, np.arange(k))
+    rep = sg.node_of[first]
+    # node -> supernode (compressed) -> refined community -> representative
+    rank = np.zeros(int(sg.node_of[-1]) + 1 if k else 1, dtype=np.int64)
+    rank[sg.node_of] = np.arange(k)
+    return rep[sg_labels[rank[node_labels]]].astype(np.int32)

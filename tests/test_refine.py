@@ -1,0 +1,398 @@
+"""The multi-stage refinement subsystem (ISSUE 6 acceptance).
+
+* **weighted engines** — hypothesis properties: Louvain and label
+  propagation on a weighted graph are bit-identical to the same run on the
+  graph with every edge duplicated ``w`` times (integer weights);
+* **contraction equivalence** — hypothesis property: the weighted
+  modularity of projected labels on the original graph equals the weighted
+  modularity of the supergraph partition on the contracted graph (the
+  invariant that makes supergraph moves optimise the real objective);
+* **accumulator** — dense→hash spill preserves content, eviction is
+  deterministic and counted in ``dropped_weight``, leaves round-trip
+  bit-identically mid-accumulation;
+* **checkpoint/resume** (acceptance) — a streamed-then-refined run with a
+  mid-stream suspend/resume produces labels bit-identical to the
+  uninterrupted run, sketch and replay window included;
+* **quality** — refinement lifts modularity and F1 on a planted SBM above
+  the raw streamed labels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.cluster import (
+    ClusterConfig,
+    StreamClusterer,
+    avg_f1,
+    canonical_labels,
+    cluster,
+    modularity,
+    weighted_modularity,
+)
+from repro.cluster.refine import (
+    ReplayBuffer,
+    SupergraphAccumulator,
+    parse_refine,
+)
+from repro.core.labelprop import label_propagation
+from repro.core.louvain import louvain
+from repro.core.refine import (
+    contract_graph,
+    contract_pairs,
+    project_labels,
+    refine_partition,
+)
+from repro.graph.generators import sbm_segments
+from repro.graph.sources import GeneratorSource
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2)).astype(np.int64)
+    e[:, 1] = np.where(e[:, 0] == e[:, 1], (e[:, 1] + 1) % n, e[:, 1])
+    return e
+
+
+def _sbm(n, k, avg_degree, p_intra, seed=11):
+    m = int(n * avg_degree / 2)
+    segment, truth = sbm_segments(n, k, p_intra=p_intra, seed=seed)
+    edges = GeneratorSource(segment, m, segment_edges=1 << 14).materialize()
+    return edges, truth
+
+
+# ---------------------------------------------------------------------------
+# Weighted engines ≡ duplicated-edge runs (hypothesis properties)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_weighted_louvain_equals_duplicated_edges(seed):
+    """Property: Louvain with integer weights is bit-identical to Louvain on
+    the multigraph with each edge repeated ``w`` times."""
+    n, m = 30, 80
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(n, m, seed)
+    w = rng.integers(1, 5, size=m)
+    dup = np.repeat(edges, w, axis=0)
+    a = louvain(edges, n, seed=7, weights=w.astype(np.float64))
+    b = louvain(dup, n, seed=7)
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_weighted_labelprop_equals_duplicated_edges(seed):
+    """Property: weighted label propagation ≡ duplicated-edge propagation
+    (same votes, same smallest-label tie-breaks, same sweeps)."""
+    n, m = 30, 80
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(n, m, seed)
+    w = rng.integers(1, 5, size=m)
+    dup = np.repeat(edges, w, axis=0)
+    a = label_propagation(edges, n, sweeps=4, seed=3, weights=w.astype(np.float64))
+    b = label_propagation(dup, n, sweeps=4, seed=3)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_weighted_modularity_matches_unweighted():
+    edges = _random_graph(50, 200, 0)
+    labels = np.arange(50) % 7
+    assert weighted_modularity(edges, labels) == pytest.approx(
+        modularity(edges, labels), abs=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# Contraction equivalence (the refinement invariant)
+# ---------------------------------------------------------------------------
+
+def _supergraph_modularity(sg, sg_labels):
+    """Weighted modularity of a supergraph partition, self-loops included."""
+    k = sg.k
+    loops = np.stack([np.arange(k), np.arange(k)], axis=1)
+    edges = np.concatenate([sg.edges, loops], axis=0)
+    weights = np.concatenate([sg.weights, sg.self_weight])
+    return weighted_modularity(edges, np.asarray(sg_labels), weights)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_comm=st.integers(1, 12),
+)
+def test_property_projected_modularity_equals_supergraph_modularity(
+    seed, n_comm
+):
+    """Property: for any graph, any streamed labelling, and any supergraph
+    partition, Q(projected labels, original graph) == Q(partition,
+    contracted graph).  Supergraph moves optimise the real objective."""
+    n, m = 40, 150
+    rng = np.random.default_rng(seed)
+    edges = _random_graph(n, m, seed)
+    streamed = rng.integers(0, n, size=n)  # arbitrary node-id-space labels
+    streamed = np.arange(n)[streamed]  # label = some node id
+    sg = contract_graph(edges, streamed)
+    sg_labels = rng.integers(0, n_comm, size=sg.k)
+    proj = project_labels(streamed, sg, sg_labels)
+    assert _supergraph_modularity(sg, sg_labels) == pytest.approx(
+        weighted_modularity(edges, proj), abs=1e-9
+    )
+
+
+def test_refine_partition_never_lowers_supergraph_modularity():
+    edges, _ = _sbm(400, 20, 8, 0.8)
+    streamed = np.asarray(
+        cluster(edges, ClusterConfig(n=400, v_max=16, backend="dense")).labels
+    )
+    sg = contract_graph(edges, streamed)
+    q0 = _supergraph_modularity(sg, np.arange(sg.k))
+    for engine in ("louvain", "labelprop"):
+        q1 = _supergraph_modularity(
+            sg, refine_partition(sg, engine=engine, rounds=10)
+        )
+        assert q1 >= q0 - 1e-9
+
+
+def test_accumulator_matches_exact_contraction_under_final_labels():
+    """A sketch fed under the *final* labels reproduces the exact
+    contraction (the streaming approximation is only label staleness)."""
+    n = 60
+    edges = _random_graph(n, 300, 5)
+    # idempotent node-id labelling (founders keep their own label), the
+    # structure a finalized dense-space state has: remapping final-label
+    # entries through ``labels[founder]`` is then the identity
+    rng = np.random.default_rng(5)
+    founders = rng.choice(n, size=10, replace=False)
+    labels = founders[rng.integers(0, 10, size=n)]
+    labels[founders] = founders
+    acc = SupergraphAccumulator(n)
+    for lo in range(0, 300, 64):
+        acc.observe(edges[lo:lo + 64], labels)
+    a, b, w = acc.entries()
+    sg_sketch = contract_pairs(a, b, w, labels)
+    sg_exact = contract_graph(edges, labels)
+    np.testing.assert_array_equal(sg_sketch.edges, sg_exact.edges)
+    np.testing.assert_allclose(sg_sketch.weights, sg_exact.weights)
+    np.testing.assert_allclose(sg_sketch.self_weight, sg_exact.self_weight)
+    np.testing.assert_array_equal(sg_sketch.node_of, sg_exact.node_of)
+
+
+# ---------------------------------------------------------------------------
+# Accumulator: spill, eviction, leaves
+# ---------------------------------------------------------------------------
+
+def test_accumulator_spills_dense_to_hash_preserving_content():
+    n = 1000
+    acc_small = SupergraphAccumulator(n, dense_k=8)  # forced spill
+    acc_big = SupergraphAccumulator(n, dense_k=1024)  # stays dense
+    rng = np.random.default_rng(0)
+    labels = np.arange(n)
+    for _ in range(5):
+        e = rng.integers(0, n, size=(200, 2))
+        acc_small.observe(e, labels)
+        acc_big.observe(e, labels)
+    assert acc_small.spilled and not acc_big.spilled
+    for x, y in zip(acc_small.entries(), acc_big.entries()):
+        np.testing.assert_array_equal(x, y)
+    assert acc_small.dropped_weight == 0
+
+
+def test_accumulator_eviction_is_counted_and_bounded():
+    n = 10_000
+    acc = SupergraphAccumulator(n, dense_k=4, max_pairs=64)
+    rng = np.random.default_rng(1)
+    labels = np.arange(n)
+    total = 0
+    for _ in range(20):
+        e = rng.integers(0, n, size=(500, 2))
+        live = e[:, 0] != e[:, 1]
+        total += int(np.count_nonzero(live))
+        acc.observe(e, labels)
+    _, _, w = acc.entries()
+    assert len(w) <= 64
+    assert acc.dropped_weight > 0
+    # conservation: surviving weight + dropped weight == observed weight
+    assert int(w.sum()) + acc.dropped_weight == total
+    assert acc.peak_bytes <= 16 * (64 + 500)  # cap + one batch of slack
+
+
+def test_accumulator_leaves_roundtrip_mid_accumulation():
+    """Restoring from leaves and continuing is bit-identical to never
+    having stopped — for both storage modes."""
+    n = 500
+    rng = np.random.default_rng(2)
+    labels = np.arange(n)
+    batches = [rng.integers(0, n, size=(100, 2)) for _ in range(8)]
+    for dense_k in (4, 256):  # spilled vs dense at the suspend point
+        a = SupergraphAccumulator(n, dense_k=dense_k, max_pairs=128)
+        for e in batches[:4]:
+            a.observe(e, labels)
+        b = SupergraphAccumulator.from_leaves(
+            a.to_leaves(), dense_k=dense_k, max_pairs=128
+        )
+        assert b.spilled == a.spilled
+        assert b.dropped_weight == a.dropped_weight
+        for e in batches[4:]:
+            a.observe(e, labels)
+            b.observe(e, labels)
+        for x, y in zip(a.entries(), b.entries()):
+            np.testing.assert_array_equal(x, y)
+        assert b.dropped_weight == a.dropped_weight
+
+
+def test_replay_buffer_is_row_exact():
+    """Window contents are a pure function of the stream position — the
+    same rows arrive, regardless of how they were batched."""
+    edges = _random_graph(100, 1000, 3).astype(np.int32)
+    a = ReplayBuffer(cap_rows=333)
+    b = ReplayBuffer(cap_rows=333)
+    a.append(edges)
+    for lo in range(0, 1000, 17):
+        b.append(edges[lo:lo + 17])
+    np.testing.assert_array_equal(a.rows(), b.rows())
+    assert a.n_rows == 333
+    np.testing.assert_array_equal(a.rows(), edges[-333:])
+
+
+# ---------------------------------------------------------------------------
+# Config / dispatch surface
+# ---------------------------------------------------------------------------
+
+def test_refine_config_validation():
+    assert parse_refine(None) is None
+    assert parse_refine("louvain") == ("louvain", False)
+    assert parse_refine("labelprop+replay") == ("labelprop", True)
+    for bad in ("leiden", "louvain+buffered", "replay", "louvain+"):
+        with pytest.raises(ValueError):
+            ClusterConfig(n=10, v_max=4, refine=bad)
+    with pytest.raises(ValueError):
+        ClusterConfig(n=10, v_max=4, refine_rounds=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(n=10, v_max=4, refine_max_pairs=0)
+
+
+def test_refine_rejects_oracle_label_space():
+    edges = _random_graph(50, 100, 0).astype(np.int32)
+    with pytest.raises(ValueError, match="dense-label-space"):
+        cluster(
+            edges,
+            ClusterConfig(n=50, v_max=8, backend="oracle", refine="louvain"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: every state kind refines at finalize
+# ---------------------------------------------------------------------------
+
+def _quality_regime():
+    return _sbm(600, 30, 10, 0.8)
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("chunked", dict(v_max=16)),
+    ("multiparam", dict(v_maxes=(8, 32, 128))),
+    ("distributed", dict(v_max=16, n_shards=2, chunk=512)),
+])
+def test_refine_dispatches_across_state_kinds(backend, kw):
+    edges, _ = _quality_regime()
+    base = cluster(edges, ClusterConfig(n=600, backend=backend, **kw))
+    res = cluster(
+        edges,
+        ClusterConfig(n=600, backend=backend, refine="louvain", **kw),
+    )
+    labels = np.asarray(res.labels)
+    assert labels.shape == (600,)
+    assert res.info["refine_engine"] == "louvain"
+    assert res.info["refine_supernodes"] >= res.info["refine_communities"]
+    assert res.info["refine_sketch_peak_bytes"] > 0
+    # refinement must not lose modularity vs the raw streamed labels
+    assert modularity(edges, labels) >= modularity(
+        edges, np.asarray(base.labels)
+    ) - 1e-9
+
+
+def test_refine_improves_quality_on_planted_sbm():
+    edges, truth = _quality_regime()
+    cfg = dict(n=600, backend="multiparam", v_maxes=(8, 16, 32, 64, 128),
+               criterion="density")
+    raw = cluster(edges, ClusterConfig(**cfg))
+    ref = cluster(edges, ClusterConfig(**cfg, refine="labelprop+replay"))
+    q_raw = modularity(edges, np.asarray(raw.labels))
+    q_ref = modularity(edges, np.asarray(ref.labels))
+    f_raw = avg_f1(canonical_labels(np.asarray(raw.labels)), truth)
+    f_ref = avg_f1(canonical_labels(np.asarray(ref.labels)), truth)
+    assert q_ref > q_raw + 0.1
+    assert f_ref > f_raw + 0.1
+    assert ref.info["refine_replay_rows"] > 0
+
+
+def test_refine_memory_is_cluster_bounded():
+    """Peak sketch bytes stay O(#clusters^2 | max_pairs), reported in info."""
+    edges, _ = _quality_regime()
+    res = cluster(
+        edges,
+        ClusterConfig(n=600, v_max=16, backend="chunked", refine="louvain",
+                      refine_max_pairs=4096),
+    )
+    assert res.info["refine_sketch_peak_bytes"] <= max(
+        16 * (4096 + 600), 8 * 512 * 512
+    )
+    assert res.info["refine_dropped_weight"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: mid-stream suspend/resume is bit-identical, sketch included
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["louvain", "labelprop+replay"])
+def test_refined_checkpoint_resume_bit_identical(tmp_path, spec):
+    edges, _ = _sbm(500, 25, 10, 0.8)
+    cfg = ClusterConfig(n=500, backend="multiparam", v_maxes=(16, 64),
+                        criterion="density", refine=spec, batch_edges=256)
+
+    sc = StreamClusterer(cfg)
+    sc.fit(edges)
+    ref = np.asarray(sc.finalize().labels)
+
+    sc1 = StreamClusterer(cfg)
+    b = 256
+    for lo in range(0, 4 * b, b):
+        sc1.partial_fit(edges[lo:lo + b])
+    d = str(tmp_path / "ckpt")
+    sc1.save(d)
+    sc2 = StreamClusterer.restore(d)
+
+    # the sketch (and replay window) restores bit-identically
+    for a1, a2 in zip(sc1._refine.accumulators, sc2._refine.accumulators):
+        for x, y in zip(a1.entries(), a2.entries()):
+            np.testing.assert_array_equal(x, y)
+        assert a1.dropped_weight == a2.dropped_weight
+    if sc1._refine.replay_buffer is not None:
+        np.testing.assert_array_equal(
+            sc1._refine.replay_buffer.rows(), sc2._refine.replay_buffer.rows()
+        )
+
+    for lo in range(sc2.stream_offset, edges.shape[0], b):
+        sc2.partial_fit(edges[lo:lo + b])
+    got = np.asarray(sc2.finalize().labels)
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_restore_without_refine_leaves_starts_fresh(tmp_path):
+    """A checkpoint written without refine restores under a refine config
+    with an empty sketch (only post-resume edges are observed)."""
+    edges = _random_graph(200, 800, 9).astype(np.int32)
+    cfg = ClusterConfig(n=200, v_max=16, backend="chunked", batch_edges=256)
+    sc = StreamClusterer(cfg)
+    sc.partial_fit(edges[:256])
+    d = str(tmp_path / "ckpt")
+    sc.save(d)
+    sc2 = StreamClusterer.restore(d, cfg.replace(refine="louvain"))
+    assert sc2._refine is not None
+    a, b, w = sc2._refine.accumulators[0].entries()
+    assert len(w) == 0
+    for lo in range(sc2.stream_offset, 800, 256):
+        sc2.partial_fit(edges[lo:lo + 256])
+    res = sc2.finalize()
+    assert res.info["refine_engine"] == "louvain"
