@@ -43,6 +43,22 @@ def run():
         rows.append({"name": f"cluster_chunked(B={chunk})",
                      "us_per_call": t_c * 1e6,
                      "derived": f"{m/t_c:,.0f} edges/s"})
+    # Pallas-tier fused paths (interpret mode on CPU, hence the smaller
+    # stream): the megabatch DMA kernel and the wavefront variant — visible
+    # here so kernel-level regressions surface outside the smoke suite.
+    m_pal = 50_000
+    edges_pal = chung_lu_stream(n, m_pal, seed=2)
+    mega_cfg = ClusterConfig(n=n, v_max=64, backend="pallas", chunk=1024,
+                             batch_edges=1024, megabatch_k=8)
+    t_mb = _t(lambda e: cluster(e, mega_cfg), edges_pal)
+    rows.append({"name": "cluster_pallas_megabatch(K=8,B=1024)",
+                 "us_per_call": t_mb * 1e6,
+                 "derived": f"{m_pal/t_mb:,.0f} edges/s"})
+    wave_cfg = mega_cfg.replace(wavefront=16)
+    t_wf = _t(lambda e: cluster(e, wave_cfg), edges_pal)
+    rows.append({"name": "cluster_pallas_wavefront(K=8,B=1024,W=16)",
+                 "us_per_call": t_wf * 1e6,
+                 "derived": f"{m_pal/t_wf:,.0f} edges/s"})
     lab = jnp.asarray(np.random.default_rng(0).integers(0, 1024, 65536))
     w = jnp.ones(65536, jnp.float32)
     t_ref = _t(lambda l: seg_volume_ref(l, w, 1024), lab)

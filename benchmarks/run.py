@@ -16,6 +16,9 @@ def main() -> None:
     print("# === Table 1: execution time vs graph size (paper §4.4) ===")
     from benchmarks import table1_speed
     for r in table1_speed.run():
+        if "linearity_ratio" in r:
+            print(f"{r['algo']},0,m={r['m']};ratio={r['linearity_ratio']:.3f}")
+            continue
         derived = f"m={r['m']};{r['edges_per_s']:.0f} edges/s"
         if "peak_buffer_bytes" in r:
             # the paper's memory claim, measured: resident edge buffer

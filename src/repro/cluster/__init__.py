@@ -45,6 +45,7 @@ from repro.cluster.registry import (  # noqa: F401
 )
 from repro.graph.codecs import Cursor, DeltaVarintCodec, RawCodec  # noqa: F401
 from repro.graph.pipeline import BatchPipeline, MegaBatch  # noqa: F401
+from repro.graph.wavefront import WavePlan, plan_waves  # noqa: F401
 from repro.graph.sources import (  # noqa: F401
     ArraySource,
     BinaryFileSource,
@@ -83,6 +84,7 @@ __all__ = [
     "StreamClusterer",
     "SupergraphAccumulator",
     "SweepState",
+    "WavePlan",
     "as_source",
     "available_backends",
     "avg_f1",
@@ -92,6 +94,7 @@ __all__ = [
     "get_backend",
     "modularity",
     "nmi",
+    "plan_waves",
     "register_backend",
     "weighted_modularity",
 ]

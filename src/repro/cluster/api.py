@@ -44,6 +44,7 @@ from repro.cluster.refine import RefineRuntime
 from repro.cluster.registry import Backend, BackendResult, get_backend
 from repro.graph.codecs import Cursor
 from repro.graph.pipeline import BatchPipeline
+from repro.graph.wavefront import plan_waves
 from repro.graph.sources import ArraySource, EdgeSource, as_source
 
 _CONFIG_FILE = "cluster_config.json"
@@ -356,6 +357,17 @@ class StreamClusterer:
         # the denominator of the dispatch-amortisation story: megabatch mode
         # drops this ~K-fold for the same stream_batches.
         self.stream_dispatches = 0
+        # Wavefront-mode counters (DESIGN.md §12), accumulated per planned
+        # megabatch; surfaced by finalize() as the mean-wave-width /
+        # fallback-rate / planner-overhead info entries.
+        self.wavefront_megabatches = 0
+        self.wavefront_waves = 0
+        self.wavefront_rows_in_waves = 0
+        self.wavefront_leftover_rows = 0
+        self.wavefront_plan_seconds = 0.0
+        # (2,) device array [live_waves, fallback_waves], accumulated as lazy
+        # device adds — no host sync until finalize() reads it
+        self._wavefront_stats = None
 
     # ------------------------------------------------------------------
     @property
@@ -402,7 +414,7 @@ class StreamClusterer:
         return self
 
     def partial_fit_megabatch(
-        self, edge_batches, *, raw_rows: Optional[int] = None
+        self, edge_batches, *, raw_rows: Optional[int] = None, plan=None
     ) -> "StreamClusterer":
         """Ingest ``(K, B, 2)`` stacked fixed-shape batches in *one* fused
         device dispatch; returns ``self`` for chaining.
@@ -415,15 +427,49 @@ class StreamClusterer:
         same shape.  ``raw_rows`` is the raw-source row count the megabatch
         represents (defaults to ``K * B``, the padded shape); :meth:`fit`
         passes the pre-padding count so the cursor tracks the source.
+
+        With ``config.wavefront`` set and a backend that registers a
+        ``wavefront_fn`` (``pallas``), the megabatch is dispatched through
+        the wavefront path instead (DESIGN.md §12): ``plan`` is the
+        :class:`~repro.graph.wavefront.WavePlan` staged by the pipeline's
+        prefetch thread (:meth:`fit` passes it), or is computed inline here
+        for directly pushed megabatches.  Labels stay bit-identical; the
+        plan/fallback counters accumulate on this clusterer and surface in
+        :meth:`finalize`'s info.  Backends without a wavefront path ignore
+        the knob and take the sequential fused path.
         """
         if self._backend.megabatch_fn is None:
             raise ValueError(
                 f"backend {self.config.backend!r} has no fused megabatch "
                 "path; use partial_fit per batch"
             )
-        result = self._backend.megabatch_fn(
-            edge_batches, self.config, self._state
+        use_wave = (
+            self.config.wavefront is not None
+            and self._backend.wavefront_fn is not None
         )
+        if use_wave:
+            if plan is None:
+                plan = plan_waves(
+                    np.asarray(edge_batches), self.config.wavefront
+                )
+            result = self._backend.wavefront_fn(plan, self.config, self._state)
+            stats = result.info.pop("wavefront_stats", None)
+            if stats is not None:
+                # lazy device add — host sync deferred to finalize()
+                self._wavefront_stats = (
+                    stats
+                    if self._wavefront_stats is None
+                    else self._wavefront_stats + stats
+                )
+            self.wavefront_megabatches += 1
+            self.wavefront_waves += plan.n_waves
+            self.wavefront_rows_in_waves += plan.rows_in_waves
+            self.wavefront_leftover_rows += plan.leftover_rows
+            self.wavefront_plan_seconds += plan.plan_seconds
+        else:
+            result = self._backend.megabatch_fn(
+                edge_batches, self.config, self._state
+            )
         self._state = result.state
         self._last_result = result
         if self._refine is not None:
@@ -490,12 +536,20 @@ class StreamClusterer:
         n = 0
         exhausted = False
         if use_mega and (max_batches is None or max_batches >= K):
-            megas = pipe.megabatches(K, start=self._cursor)
+            # waves are planned on the pipeline's prefetch thread while the
+            # megabatch is staged (None when the backend has no wavefront_fn
+            # or the knob is unset — partial_fit_megabatch then ignores it)
+            wf = (
+                config.wavefront
+                if self._backend.wavefront_fn is not None
+                else None
+            )
+            megas = pipe.megabatches(K, start=self._cursor, wavefront=wf)
             try:
                 exhausted = True  # flipped back if we stop for the budget
                 for mega in megas:
                     self.partial_fit_megabatch(
-                        mega.edges, raw_rows=mega.n_rows
+                        mega.edges, raw_rows=mega.n_rows, plan=mega.plan
                     )
                     # refresh the resume token (see the per-batch loop below)
                     self._cursor = source.cursor_at(self._cursor.row)
@@ -564,6 +618,24 @@ class StreamClusterer:
             info["stream_dispatches"] = self.stream_dispatches
             if self.stream_megabatches:
                 info["stream_megabatches"] = self.stream_megabatches
+        if self.wavefront_megabatches:  # §12 counters (directly pushed
+            info = dict(info)  # megabatches count too, so copy again here)
+            if self._wavefront_stats is not None:
+                live, fall = (int(x) for x in np.asarray(self._wavefront_stats))
+            else:
+                live = fall = 0
+            info["wavefront_megabatches"] = self.wavefront_megabatches
+            info["wavefront_waves"] = self.wavefront_waves
+            info["wavefront_mean_wave_width"] = (
+                self.wavefront_rows_in_waves / self.wavefront_waves
+                if self.wavefront_waves
+                else 0.0
+            )
+            info["wavefront_leftover_rows"] = self.wavefront_leftover_rows
+            info["wavefront_plan_seconds"] = self.wavefront_plan_seconds
+            info["wavefront_live_waves"] = live
+            info["wavefront_fallback_waves"] = fall
+            info["wavefront_fallback_rate"] = fall / live if live else 0.0
         # The device tiers *donate* their state buffers (chunked / pallas /
         # multiparam / sharded updates), so the live self._state — which
         # result.state/labels may alias via to_device() — is consumed by the

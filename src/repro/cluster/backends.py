@@ -37,7 +37,12 @@ from repro.core.distributed import merge_sharded_state, sharded_update
 from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import dense_update, oracle_init, oracle_update, scan_update
 from repro.cluster.registry import BackendResult, register_backend
-from repro.kernels.edge_stream.ops import pallas_update, pallas_update_megabatch
+from repro.core.wavefront import wavefront_update_megabatch
+from repro.kernels.edge_stream.ops import (
+    pallas_update,
+    pallas_update_megabatch,
+    pallas_wavefront_update,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -98,12 +103,46 @@ def _pallas_megabatch(edges, config, state) -> BackendResult:
     return BackendResult(state=state, labels=state.c, info={})
 
 
+def _pallas_wavefront(plan, config, state) -> BackendResult:
+    """Wavefront ingest of one planned megabatch (DESIGN.md §12): vectorised
+    node-disjoint waves with a runtime community-collision fallback, labels
+    bit-identical to :func:`_pallas_megabatch` over the same stream.
+
+    In interpret mode the Pallas kernel would trace every wave through the
+    emulator, so we dispatch the pure-JAX reference apply instead — same
+    wave math (``repro.core.wavefront``), real vector units; the kernel
+    launch path is reserved for ``interpret=False`` hardware runs (and is
+    pinned against the reference by the wavefront test suite)."""
+    if config.interpret:
+        state, stats = wavefront_update_megabatch(
+            state.to_device(),
+            jnp.asarray(plan.waves),
+            jnp.asarray(plan.leftover),
+            jnp.asarray(plan.meta),
+            int(config.v_max),
+        )
+    else:
+        state, stats = pallas_wavefront_update(
+            state.to_device(),
+            jnp.asarray(plan.waves),
+            jnp.asarray(plan.leftover),
+            jnp.asarray(plan.meta),
+            int(config.v_max),
+            chunk=config.chunk,
+            interpret=False,
+        )
+    return BackendResult(
+        state=state, labels=state.c, info={"wavefront_stats": stats}
+    )
+
+
 @register_backend(
     "pallas",
     resumable=True,
     bit_exact=True,
     chunk_aligned=True,
     megabatch_fn=_pallas_megabatch,
+    wavefront_fn=_pallas_wavefront,
     description="serial-in-VMEM Pallas kernel (bit-exact, TPU-native)",
 )
 def _pallas(edges, config, state, mesh=None) -> BackendResult:

@@ -46,6 +46,16 @@ class ClusterConfig:
         with a fused path (others ignore it).  Host staging memory grows to
         ``(prefetch + 1) * K * batch_edges`` rows — visible in the measured
         ``peak_buffer_bytes``.
+      wavefront: wave width ``W`` for the conflict-free wavefront path of
+        the ``pallas`` tier (DESIGN.md §12).  When set, the pipeline's
+        prefetch thread plans each staged megabatch into contiguous waves
+        of up to ``W`` node-disjoint edges and the device applies each wave
+        vectorised (gathered loads / scattered stores), with a runtime
+        community-collision check falling back to the sequential per-edge
+        loop — labels stay bit-identical to every sequential tier.
+        Requires ``megabatch_k`` (waves are planned per staged megabatch);
+        backends without a wavefront path ignore it.  ``None`` (default)
+        keeps the sequential megabatch kernel.
       prefetch: how many batches (or megabatches) the ingest pipeline
         produces ahead on its background thread (``None`` → 2, classic
         double buffering).  0 disables the prefetch thread entirely.
@@ -88,6 +98,7 @@ class ClusterConfig:
     chunk: int = 1024
     batch_edges: Optional[int] = None
     megabatch_k: Optional[int] = None
+    wavefront: Optional[int] = None
     prefetch: Optional[int] = None
     v_maxes: Optional[Tuple[int, ...]] = None
     criterion: str = "density"
@@ -118,6 +129,16 @@ class ClusterConfig:
             raise ValueError(
                 f"megabatch_k must be >= 1, got {self.megabatch_k}"
             )
+        if self.wavefront is not None:
+            if self.wavefront < 1:
+                raise ValueError(
+                    f"wavefront must be >= 1, got {self.wavefront}"
+                )
+            if self.megabatch_k is None:
+                raise ValueError(
+                    "wavefront requires megabatch_k (waves are planned per "
+                    "staged megabatch)"
+                )
         if self.prefetch is not None and self.prefetch < 0:
             raise ValueError(
                 f"prefetch must be >= 0, got {self.prefetch}"

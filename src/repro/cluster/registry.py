@@ -75,6 +75,15 @@ class Backend:
     #   bit-identical to K sequential fn calls over the same batches;
     #   trailing all-PAD batches (a ragged tail megabatch) are no-ops.  The
     #   API layer uses it when ClusterConfig.megabatch_k is set.
+    wavefront_fn: Optional[Callable[..., BackendResult]] = None
+    #   wavefront megabatch ingest (DESIGN.md §12): consumes a host
+    #   :class:`~repro.graph.wavefront.WavePlan` instead of raw stacked
+    #   batches — node-disjoint waves applied vectorised with a runtime
+    #   community-collision fallback.  Must stay bit-identical to
+    #   megabatch_fn over the planned stream.  Signature
+    #   ``wavefront_fn(plan, config, state) -> BackendResult``; the API layer
+    #   uses it when ClusterConfig.wavefront is set (and megabatch_k drives
+    #   staging as usual).
     description: str = ""
 
 
@@ -92,6 +101,7 @@ def register_backend(
     chunk_aligned: bool = False,
     finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None,
     megabatch_fn: Optional[Callable[..., BackendResult]] = None,
+    wavefront_fn: Optional[Callable[..., BackendResult]] = None,
     description: str = "",
 ):
     """Decorator: register ``fn`` as backend ``name``.  Re-registration under
@@ -116,6 +126,7 @@ def register_backend(
             chunk_aligned=chunk_aligned,
             finalize_fn=finalize_fn,
             megabatch_fn=megabatch_fn,
+            wavefront_fn=wavefront_fn,
             description=description,
         )
         return fn

@@ -1,4 +1,4 @@
-from repro.graph import codecs, generators, pipeline, sources, stream  # noqa: F401
+from repro.graph import codecs, generators, pipeline, sources, stream, wavefront  # noqa: F401
 from repro.graph.codecs import (  # noqa: F401
     Cursor,
     DeltaVarintCodec,

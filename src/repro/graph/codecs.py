@@ -189,7 +189,9 @@ class EdgeCodec:
 
     name: str = "abstract"
     suffixes: Tuple[str, ...] = ()
-    magic: bytes = b""
+    magic: bytes = b""  # the magic this codec *writes*
+    magics: Tuple[bytes, ...] = ()  # every magic it *reads* (defaults to
+    #   (magic,); versioned codecs list older formats they stay able to read)
 
     def encode(self, slices: Iterable[np.ndarray], f: BinaryIO) -> int:
         """Write the stream; returns rows written."""
@@ -257,17 +259,31 @@ class DeltaVarintCodec(EdgeCodec):
 
     File layout (all little-endian)::
 
-        header : b"DVE1" | u32 block_edges | u64 n_edges
+        header : b"DVE2" | u32 block_edges | u64 n_edges
         block  : u32 payload_nbytes | u32 n_rows | payload
         ...
 
-    Each block is self-contained: the payload is ``n_rows`` zigzag varints
-    of the source-column deltas (first delta taken from 0, so no cross-block
-    state) followed by ``n_rows`` zigzag varints of the residuals ``j - i``.
-    Sorted-by-source streams make the deltas mostly 0/1 (1 byte) and
-    community locality keeps ``|j - i|`` small — the regimes the paper's
-    stream spends its bandwidth on.  Decode is numpy-vectorized: one varint
-    sweep for the whole block, then two cumulative sums.
+    Each block is self-contained: the payload holds the source-column
+    deltas (first delta taken from 0, so no cross-block state) followed by
+    the residuals ``j - i``, both zigzagged.  Sorted-by-source streams make
+    the deltas mostly 0/1 and community locality keeps ``|j - i|`` small —
+    the regimes the paper's stream spends its bandwidth on.
+
+    In the current format (magic ``DVE2``) each of the two columns is
+    independently mode-tagged::
+
+        column : u8 mode | data
+        mode 0       : n_rows LEB128 varints (the DVE1 encoding)
+        mode 1/2/4   : n_rows fixed-width little-endian unsigned zigzag
+                       values of that byte width
+
+    The fixed-width modes are the decode fast path: when every zigzagged
+    value of a column fits the width *and* the fixed column is no larger
+    than its varint encoding, decode is a single vectorised ``frombuffer``
+    + cumsum instead of the per-byte varint scatter loop.  Ties go to
+    fixed-width (same bytes, faster decode).  ``DVE1`` files (two bare
+    varint columns, no mode bytes) remain fully readable; pass
+    ``version=1`` to *write* the old format.
 
     ``n_edges`` in the header is patched in at encode close; the sentinel
     ``2**64 - 1`` (unseekable output) degrades to a header-skipping count.
@@ -275,33 +291,57 @@ class DeltaVarintCodec(EdgeCodec):
 
     name = "dvc"
     suffixes = (".dvc",)
-    magic = b"DVE1"
+    magic = b"DVE2"
+    magics = (b"DVE2", b"DVE1")
     _HEADER = struct.Struct("<4sIQ")
     _BLOCK = struct.Struct("<II")
     _UNKNOWN = (1 << 64) - 1
+    _FIXED_WIDTHS = (1, 2, 4)
 
-    def __init__(self, block_edges: int = 1 << 16):
+    def __init__(self, block_edges: int = 1 << 16, version: int = 2):
         if block_edges < 1:
             raise ValueError(f"block_edges must be >= 1, got {block_edges}")
+        if version not in (1, 2):
+            raise ValueError(f"dvc version must be 1 or 2, got {version}")
         self.block_edges = block_edges
+        self.version = version
 
     # -- encode --------------------------------------------------------
+    def _encode_column_v2(self, zz: np.ndarray) -> bytes:
+        """One mode-tagged column: the smallest fixed width that both fits
+        every value and does not exceed the varint size, else varints."""
+        varint = encode_varints(zz)
+        n = int(zz.shape[0])
+        top = int(zz.max()) if n else 0
+        for w in self._FIXED_WIDTHS:
+            if top < 1 << (8 * w) and w * n <= varint.nbytes:
+                return bytes([w]) + zz.astype(f"<u{w}").tobytes()
+        return bytes([0]) + varint.tobytes()
+
     def _encode_block(self, rows: np.ndarray) -> bytes:
         rows = np.asarray(rows, np.int64)
         i, j = rows[:, 0], rows[:, 1]
         deltas = np.diff(i, prepend=np.int64(0))
-        vals = np.concatenate([zigzag_encode(deltas), zigzag_encode(j - i)])
-        payload = encode_varints(vals)
+        zz_i, zz_j = zigzag_encode(deltas), zigzag_encode(j - i)
+        if self.version == 1:
+            payload = encode_varints(np.concatenate([zz_i, zz_j])).tobytes()
+        else:
+            payload = self._encode_column_v2(zz_i) + self._encode_column_v2(
+                zz_j
+            )
         return (
-            self._BLOCK.pack(int(payload.nbytes), int(rows.shape[0]))
-            + payload.tobytes()
+            self._BLOCK.pack(len(payload), int(rows.shape[0])) + payload
         )
+
+    def _write_magic(self) -> bytes:
+        return b"DVE1" if self.version == 1 else b"DVE2"
 
     def encode(self, slices: Iterable[np.ndarray], f: BinaryIO) -> int:
         from repro.graph.pipeline import rechunk
 
+        magic = self._write_magic()
         header_pos = f.tell()
-        f.write(self._HEADER.pack(self.magic, self.block_edges, self._UNKNOWN))
+        f.write(self._HEADER.pack(magic, self.block_edges, self._UNKNOWN))
         rows = 0
         for block in rechunk(slices, self.block_edges):
             f.write(self._encode_block(block))
@@ -309,21 +349,25 @@ class DeltaVarintCodec(EdgeCodec):
         if f.seekable():
             end = f.tell()
             f.seek(header_pos)
-            f.write(self._HEADER.pack(self.magic, self.block_edges, rows))
+            f.write(self._HEADER.pack(magic, self.block_edges, rows))
             f.seek(end)
         return rows
 
     # -- decode --------------------------------------------------------
-    def _read_header(self, f: BinaryIO) -> Tuple[int, Optional[int]]:
+    def _read_header(self, f: BinaryIO) -> Tuple[int, Optional[int], int]:
+        """Returns ``(block_edges, n_edges, version)`` — the version of the
+        *file*, which drives block decoding regardless of this instance's
+        write version."""
         head = f.read(self._HEADER.size)
         if len(head) < self._HEADER.size:
             raise ValueError("dvc file shorter than its header")
         magic, block_edges, n_edges = self._HEADER.unpack(head)
-        if magic != self.magic:
+        if magic not in self.magics:
             raise ValueError(
                 f"bad magic {magic!r}; not a {self.name} edge file"
             )
-        return block_edges, None if n_edges == self._UNKNOWN else n_edges
+        version = 1 if magic == b"DVE1" else 2
+        return block_edges, None if n_edges == self._UNKNOWN else n_edges, version
 
     def _next_block_header(self, f: BinaryIO) -> Optional[Tuple[int, int]]:
         head = f.read(self._BLOCK.size)
@@ -333,20 +377,47 @@ class DeltaVarintCodec(EdgeCodec):
             raise ValueError("dvc file truncated inside a block header")
         return self._BLOCK.unpack(head)
 
-    def _decode_block(self, payload: bytes, n_rows: int) -> np.ndarray:
+    def _decode_column_v2(
+        self, buf: np.ndarray, off: int, n_rows: int
+    ) -> Tuple[np.ndarray, int]:
+        """Decode one mode-tagged column from ``buf[off:]``; returns the
+        zigzagged uint64 values and the offset past the column."""
+        if off >= buf.size:
+            raise ValueError("dvc block truncated before a column mode byte")
+        mode = int(buf[off])
+        off += 1
+        if mode == 0:
+            vals, consumed = decode_varints(buf[off:], n_rows)
+            return vals, off + consumed
+        if mode not in self._FIXED_WIDTHS:
+            raise ValueError(f"dvc block has unknown column mode {mode}")
+        end = off + mode * n_rows
+        if end > buf.size:
+            raise ValueError("dvc block truncated inside a fixed-width column")
+        vals = np.frombuffer(buf, dtype=f"<u{mode}", count=n_rows, offset=off)
+        return vals.astype(_U), end
+
+    def _decode_block(
+        self, payload: bytes, n_rows: int, version: int = 2
+    ) -> np.ndarray:
         buf = np.frombuffer(payload, np.uint8)
-        vals, consumed = decode_varints(buf, 2 * n_rows)
+        if version == 1:
+            vals, consumed = decode_varints(buf, 2 * n_rows)
+            zz_i, zz_j = vals[:n_rows], vals[n_rows:]
+        else:
+            zz_i, off = self._decode_column_v2(buf, 0, n_rows)
+            zz_j, consumed = self._decode_column_v2(buf, off, n_rows)
         if consumed != buf.size:
             raise ValueError(
                 f"dvc block has {buf.size - consumed} trailing bytes"
             )
-        i = np.cumsum(zigzag_decode(vals[:n_rows]))
-        j = i + zigzag_decode(vals[n_rows:])
+        i = np.cumsum(zigzag_decode(zz_i))
+        j = i + zigzag_decode(zz_j)
         return np.stack([i, j], axis=1).astype(np.int32)
 
     def n_edges(self, path: PathLike) -> int:
         with open(path, "rb") as f:
-            _, n = self._read_header(f)
+            _, n, _ = self._read_header(f)
             if n is not None:
                 return n
             # sentinel header (unseekable encode): count by skipping block
@@ -396,10 +467,12 @@ class DeltaVarintCodec(EdgeCodec):
     ) -> Iterator[Tuple[np.ndarray, Cursor]]:
         with open(path, "rb") as f:
             size = os.fstat(f.fileno()).st_size
+            # header first: the file's version (DVE1 vs DVE2) drives block
+            # decoding, so it must be known before any token fast-forward
+            _, _, version = self._read_header(f)
             block_row = self._token_seek(f, cursor)
             if block_row is None:  # bare/foreign token: header-skip from 0
-                f.seek(0)
-                self._read_header(f)
+                f.seek(self._HEADER.size)
                 block_row = 0
             while True:
                 hdr = self._next_block_header(f)
@@ -413,7 +486,7 @@ class DeltaVarintCodec(EdgeCodec):
                     payload = f.read(payload_nbytes)
                     if len(payload) < payload_nbytes:
                         raise ValueError("dvc file truncated inside a block")
-                    rows = self._decode_block(payload, n_rows)
+                    rows = self._decode_block(payload, n_rows, version)
                     if cursor.row > block_row:
                         rows = rows[cursor.row - block_row :]
                     yield rows, Cursor(
@@ -465,7 +538,8 @@ def sniff_codec(path: PathLike) -> Optional[EdgeCodec]:
         head = b""
     for cls in CODECS.values():
         codec = cls()
-        if codec.magic and head.startswith(codec.magic):
+        accepted = codec.magics or ((codec.magic,) if codec.magic else ())
+        if any(head.startswith(mg) for mg in accepted):
             return codec
     for cls in CODECS.values():
         codec = cls()

@@ -216,6 +216,9 @@ class MegaBatch(NamedTuple):
     n_rows: int  # raw source rows across the megabatch (before padding)
     offset: int  # raw rows consumed from the source before this megabatch
     n_batches: int  # real (non-padding) batches stacked (1..K)
+    plan: Optional[object] = None  # WavePlan staged on the prefetch thread
+    #   when megabatches(..., wavefront=W) is used (DESIGN.md §12); None in
+    #   sequential megabatch mode
 
 
 class BatchPipeline:
@@ -337,7 +340,9 @@ class BatchPipeline:
                 self._release(prev.edges.nbytes)
             inner.close()
 
-    def _produce_mega(self, k: int, start: Cursor) -> Iterator[MegaBatch]:
+    def _produce_mega(
+        self, k: int, start: Cursor, wavefront: Optional[int] = None
+    ) -> Iterator[MegaBatch]:
         """Raw megabatch producer: stack ``k`` consecutive batches into one
         ``(k, batch_edges, 2)`` buffer.  Runs entirely on the prefetch
         thread, so the stacking memcpy (and everything upstream of it —
@@ -345,14 +350,23 @@ class BatchPipeline:
         dispatch.  The buffer is carved PAD-filled from the shared template
         (no per-megabatch ``np.full``), and a ragged tail keeps the full
         ``k``-batch shape with all-PAD trailing batches.
+
+        With ``wavefront`` set, each staged buffer is additionally planned
+        into node-disjoint waves (``repro.graph.wavefront.plan_waves``) here
+        on the prefetch thread — the planner's host work overlaps device
+        compute exactly like parsing and codec decode do.
         """
         B = self.batch_edges
         offset = start.row
         slices = self._counted_slices(start)
         stream = rechunk(slices, B)
+        if wavefront is not None:
+            # deferred: graph.wavefront imports this module's PAD template
+            from repro.graph.wavefront import plan_waves
         try:
             while True:
                 buf = None
+                plan = None
                 rows = 0
                 n_batches = 0
                 try:
@@ -376,16 +390,25 @@ class BatchPipeline:
                         buf[n_batches:] = pad_template(
                             (k - n_batches) * B
                         ).reshape(-1, B, 2)
+                    if buf is not None and wavefront is not None:
+                        plan = plan_waves(buf, wavefront)
+                        self._acquire(plan.nbytes)
                 except BaseException:
                     # a producer error between _acquire and yield: the buffer
                     # never reaches a consumer, so unwind its accounting here
+                    if plan is not None:
+                        self._release(plan.nbytes)
                     if buf is not None:
                         self._release(buf.nbytes)
                     raise
                 if buf is None:
                     return
                 yield MegaBatch(
-                    edges=buf, n_rows=rows, offset=offset, n_batches=n_batches
+                    edges=buf,
+                    n_rows=rows,
+                    offset=offset,
+                    n_batches=n_batches,
+                    plan=plan,
                 )
                 offset += rows
                 if n_batches < k:
@@ -394,8 +417,17 @@ class BatchPipeline:
             stream.close()
             slices.close()
 
+    @staticmethod
+    def _mega_nbytes(mb: MegaBatch) -> int:
+        """Residency charged for one staged megabatch (edges + wave plan)."""
+        return mb.edges.nbytes + (mb.plan.nbytes if mb.plan is not None else 0)
+
     def megabatches(
-        self, k: int, start: Union[int, Cursor] = 0
+        self,
+        k: int,
+        start: Union[int, Cursor] = 0,
+        *,
+        wavefront: Optional[int] = None,
     ) -> Iterator[MegaBatch]:
         """Yield ``(k, batch_edges, 2)`` megabatches from a stream position.
 
@@ -404,28 +436,31 @@ class BatchPipeline:
         so a megabatch is exactly the concatenation of the next ``k``
         :meth:`batches` results — which is what makes the fused device paths
         bit-identical to per-batch ingestion.  Residency accounting counts
-        each staged ``k``-batch buffer, so ``peak_buffer_bytes`` honestly
-        reflects the larger staging footprint.
+        each staged ``k``-batch buffer — plus its wave plan when
+        ``wavefront`` is set — so ``peak_buffer_bytes`` honestly reflects
+        the larger staging footprint.
         """
         if k < 1:
             raise ValueError(f"megabatch k must be >= 1, got {k}")
+        if wavefront is not None and wavefront < 1:
+            raise ValueError(f"wavefront width must be >= 1, got {wavefront}")
         inner = _prefetch_iter(
-            self._produce_mega(k, as_cursor(start)),
+            self._produce_mega(k, as_cursor(start), wavefront),
             self.prefetch,
-            on_drop=lambda mb: self._release(mb.edges.nbytes),
+            on_drop=lambda mb: self._release(self._mega_nbytes(mb)),
         )
         prev: Optional[MegaBatch] = None
         try:
             for mega in inner:
                 if prev is not None:
-                    self._release(prev.edges.nbytes)
+                    self._release(self._mega_nbytes(prev))
                 prev = mega
                 self.megabatches_produced += 1
                 self.batches_produced += mega.n_batches
                 yield mega
         finally:
             if prev is not None:
-                self._release(prev.edges.nbytes)
+                self._release(self._mega_nbytes(prev))
             inner.close()
 
     def __iter__(self) -> Iterator[Batch]:

@@ -1,0 +1,158 @@
+"""Host-side wave planner for the conflict-free wavefront kernel path.
+
+The bit-exact tiers apply edges strictly one at a time; the wavefront
+subsystem (DESIGN.md §12) recovers vector parallelism *without* giving up
+the paper's sequential semantics.  Two edges commute iff they touch
+disjoint state cells: ``d``/``c`` are node-indexed (node-disjointness
+covers them) while ``v`` and the join decisions read *community* volumes —
+which the host cannot know, because communities are rewritten by the very
+edges being planned.  The split of responsibilities is therefore:
+
+* **planner (here, host, prefetch thread)** — segment the stream into
+  *waves*: maximal contiguous runs of node-disjoint edges.  A wave closes
+  when the next edge repeats an endpoint already stamped in the current
+  wave's scoreboard, or when the wave reaches the configured width.
+  Contiguity is what preserves bit-exactness: edges are never reordered,
+  only grouped, so "apply wave ``w`` atomically" is exactly the sequential
+  order whenever the within-wave vector step itself is exact.
+* **kernel (device, apply time)** — per wave, a runtime community-
+  disjointness check against the *live* ``(c, v)`` state decides whether
+  the vectorised apply is exact; colliding waves fall back to the
+  sequential per-edge loop (``repro.core.wavefront``).
+
+The emitted :class:`WavePlan` has fixed shapes that depend only on
+``(K * B, width)`` — one device compile per run:
+
+* ``waves``: ``(n_waves_max, width, 2)`` int32, wave ``w``'s live rows in
+  slots ``[0, counts[w])``, PAD elsewhere; unused trailing waves are
+  all-PAD (carved from the shared PAD template, no per-plan ``np.full``).
+* ``leftover``: ``(K * B, 2)`` int32 — the uncovered stream *suffix* when
+  the wave budget (``slack * ceil(M / width)`` waves) runs out; processed
+  sequentially after the waves.  A zero-copy PAD-template view in the
+  common case where every row was planned.
+* ``meta``: ``[n_waves_used, leftover_rows]`` int32 — traced loop bounds
+  for the kernel (skip trailing all-PAD waves without recompiling).
+
+Every wave holds at least one row (an edge never conflicts with itself),
+so ``slack >= 1`` guarantees forward progress and ``slack = s`` covers any
+stream whose mean wave width is at least ``width / s``.  Slack costs
+*staging memory only*: both apply paths loop over ``meta[0]`` used waves,
+never the full budget, so the default is a generous 4 — real streams close
+waves early around hub nodes, and a sequential leftover is the one thing
+that can sink the speedup.  Trailing dead rows (PAD padding, self-loops at
+the very end) are trimmed — they constrain nothing and would only spend
+wave slots.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.graph.pipeline import PAD, pad_template
+
+
+class WavePlan(NamedTuple):
+    """A fixed-shape wavefront schedule for one megabatch (host arrays)."""
+
+    waves: np.ndarray  # (n_waves_max, width, 2) int32, PAD-padded
+    counts: np.ndarray  # (n_waves_max,) int32 rows staged per wave
+    leftover: np.ndarray  # (M, 2) int32 uncovered suffix (PAD-padded)
+    meta: np.ndarray  # (2,) int32 [n_waves_used, leftover_rows]
+    n_waves: int  # waves actually used (<= waves.shape[0])
+    rows_in_waves: int  # stream rows covered by waves
+    leftover_rows: int  # stream rows in the sequential leftover suffix
+    plan_seconds: float  # host planning time (the overhead counter)
+    nbytes: int  # bytes of *owned* buffers (template views excluded)
+
+    @property
+    def mean_wave_width(self) -> float:
+        return self.rows_in_waves / self.n_waves if self.n_waves else 0.0
+
+
+def _prev_conflict(flat: np.ndarray, live: np.ndarray) -> np.ndarray:
+    """For each row ``e``: the largest row index ``p < e`` sharing an
+    endpoint with ``e`` (-1 if none, and for dead rows).  Vectorised: one
+    lexsort over the (node, row) incidence pairs, then a scatter-max of
+    each pair's same-node predecessor row."""
+    M = flat.shape[0]
+    p = np.full(M, -1, np.int64)
+    le = np.flatnonzero(live)
+    if le.size == 0:
+        return p
+    nodes = np.concatenate([flat[le, 0], flat[le, 1]]).astype(np.int64)
+    eids = np.concatenate([le, le])
+    order = np.lexsort((eids, nodes))
+    sn, se = nodes[order], eids[order]
+    same = sn[1:] == sn[:-1]
+    prev = np.where(same, se[:-1], -1)
+    np.maximum.at(p, se[1:], prev)
+    return p
+
+
+def plan_waves(edges: np.ndarray, width: int, *, slack: int = 4) -> WavePlan:
+    """Greedily color a (mega)batch into contiguous node-disjoint waves.
+
+    ``edges`` is any ``(..., 2)`` int stream (a ``(K, B, 2)`` megabatch or
+    a flat ``(m, 2)`` batch) — flattened in stream order.  ``width`` caps
+    rows per wave; ``slack`` scales the fixed wave budget.  Stateless per
+    call: planning depends only on the rows handed in, never on cluster
+    state, so checkpoints/cursors are untouched by wavefront mode.
+    """
+    if width < 1:
+        raise ValueError(f"wavefront width must be >= 1, got {width}")
+    if slack < 1:
+        raise ValueError(f"wavefront slack must be >= 1, got {slack}")
+    t0 = time.perf_counter()
+    flat = np.ascontiguousarray(np.asarray(edges, np.int32).reshape(-1, 2))
+    M = flat.shape[0]
+    n_waves_max = max(1, slack * -(-M // width))
+
+    live = (flat[:, 0] != PAD) & (flat[:, 1] != PAD) & (flat[:, 0] != flat[:, 1])
+    live_idx = np.flatnonzero(live)
+    # trailing dead rows (PAD tails, trailing self-loops) constrain nothing
+    m_eff = int(live_idx[-1]) + 1 if live_idx.size else 0
+    p = _prev_conflict(flat[:m_eff], live[:m_eff])
+
+    waves = np.empty((n_waves_max, width, 2), np.int32)
+    counts = np.zeros(n_waves_max, np.int32)
+    s = 0
+    w = 0
+    while s < m_eff and w < n_waves_max:
+        hi = min(s + width, m_eff)
+        # the wave ends at the first row conflicting with a row >= s; a row
+        # never conflicts with itself (p[e] < e), so cnt >= 1 always
+        bad = np.flatnonzero(p[s:hi] >= s)
+        cnt = int(bad[0]) if bad.size else hi - s
+        waves[w, :cnt] = flat[s : s + cnt]
+        if cnt < width:
+            waves[w, cnt:] = pad_template(width - cnt)
+        counts[w] = cnt
+        s += cnt
+        w += 1
+    if w < n_waves_max:
+        waves[w:] = pad_template((n_waves_max - w) * width).reshape(-1, width, 2)
+
+    leftover_rows = m_eff - s
+    if leftover_rows:
+        leftover = np.empty((M, 2), np.int32)
+        leftover[:leftover_rows] = flat[s:m_eff]
+        leftover[leftover_rows:] = pad_template(M - leftover_rows)
+        owned = leftover.nbytes
+    else:
+        leftover = pad_template(M)  # zero-copy: nothing was left over
+        owned = 0
+    meta = np.array([w, leftover_rows], np.int32)
+    return WavePlan(
+        waves=waves,
+        counts=counts,
+        leftover=leftover,
+        meta=meta,
+        n_waves=w,
+        rows_in_waves=s,
+        leftover_rows=leftover_rows,
+        plan_seconds=time.perf_counter() - t0,
+        nbytes=waves.nbytes + counts.nbytes + meta.nbytes + owned,
+    )

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.wavefront import wave_apply, wave_conflict, wave_live
 from repro.graph.pipeline import PAD
 
 
@@ -200,6 +201,187 @@ def edge_stream_megabatch_kernel(
         scoped,
         pltpu.VMEM((N_EDGE_SLOTS, chunk, 2), jnp.int32),
         pltpu.SemaphoreType.DMA((N_EDGE_SLOTS,)),
+    )
+
+
+def edge_stream_wavefront_kernel(
+    waves_hbm_ref,
+    left_hbm_ref,
+    meta_ref,
+    d0_ref,
+    c0_ref,
+    v0_ref,
+    d_ref,
+    c_ref,
+    v_ref,
+    stats_ref,
+    *,
+    v_max: int,
+    n: int,
+    width: int,
+    n_waves: int,
+    chunk: int,
+    n_left_chunks: int,
+):
+    """Wave-vectorised megabatch kernel (DESIGN.md §12).
+
+    ``waves_hbm_ref`` holds the planner's ``(n_waves, width, 2)`` layout in
+    HBM; waves are double-buffer DMA'd into VMEM like the sequential
+    megabatch kernel's chunks.  Each wave is applied as gathered vector
+    loads / scattered stores against the VMEM-resident (d, c, v) via the
+    shared :func:`repro.core.wavefront.wave_apply` — after a runtime
+    community-disjointness check (:func:`wave_conflict`) against the live
+    state; colliding waves fall back to the sequential per-edge
+    ``fori_loop``, so labels stay bit-identical to
+    :func:`edge_stream_megabatch_kernel` for any plan.  The uncovered
+    stream suffix (``meta_ref[1]`` rows, chunked in ``left_hbm_ref``) is
+    drained sequentially at the end.  ``meta_ref[0]`` bounds the wave loop
+    so trailing all-PAD waves cost nothing.  ``stats_ref`` returns
+    ``[live_waves, fallback_waves]``.
+    """
+    d_ref[...] = d0_ref[...]
+    c_ref[...] = c0_ref[...]
+    v_ref[...] = v0_ref[...]
+    stats_ref[...] = jnp.zeros((2,), jnp.int32)
+    nw = jnp.minimum(meta_ref[0], n_waves)
+    left_rows = meta_ref[1]
+
+    def waves_scoped(slots_ref, sems_ref):
+        def wave_dma(t):
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            return pltpu.make_async_copy(
+                waves_hbm_ref.at[t], slots_ref.at[slot], sems_ref.at[slot]
+            )
+
+        @pl.when(nw > 0)
+        def _warmup():
+            wave_dma(jnp.int32(0)).start()
+
+        def wave_body(t, carry):
+            @pl.when(t + 1 < nw)
+            def _prefetch_next():
+                wave_dma(t + 1).start()
+
+            wave_dma(t).wait()
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            wave = pl.load(
+                slots_ref, (pl.dslice(slot, 1), slice(None), slice(None))
+            )[0]
+            i_raw = wave[:, 0]
+            j_raw = wave[:, 1]
+            c_now = c_ref[...]
+            v_now = v_ref[...]
+            has_live = jnp.any(wave_live(i_raw, j_raw))
+            conflict = wave_conflict(c_now, v_now, i_raw, j_raw, v_max, n)
+
+            @pl.when(jnp.logical_not(conflict))
+            def _vector():
+                d2, c2, v2 = wave_apply(
+                    d_ref[...], c_now, v_now, i_raw, j_raw, v_max
+                )
+                d_ref[...] = d2
+                c_ref[...] = c2
+                v_ref[...] = v2
+
+            @pl.when(conflict)
+            def _sequential():
+                def body(e, cy):
+                    _apply_edge(
+                        wave[e, 0], wave[e, 1], d_ref, c_ref, v_ref,
+                        v_max=v_max,
+                    )
+                    return cy
+
+                jax.lax.fori_loop(0, width, body, None)
+
+            stats_ref[0] = stats_ref[0] + has_live.astype(jnp.int32)
+            stats_ref[1] = stats_ref[1] + (conflict & has_live).astype(
+                jnp.int32
+            )
+            return carry
+
+        jax.lax.fori_loop(0, nw, wave_body, None)
+
+    pl.run_scoped(
+        waves_scoped,
+        pltpu.VMEM((N_EDGE_SLOTS, width, 2), jnp.int32),
+        pltpu.SemaphoreType.DMA((N_EDGE_SLOTS,)),
+    )
+
+    # leftover suffix: strictly sequential, single-buffered (rare path —
+    # non-empty only when the planner's wave budget ran out)
+    n_live_chunks = jnp.minimum(
+        (left_rows + chunk - 1) // chunk, n_left_chunks
+    )
+
+    def left_scoped(slot_ref, sem_ref):
+        def chunk_body(t, carry):
+            cp = pltpu.make_async_copy(left_hbm_ref.at[t], slot_ref, sem_ref)
+            cp.start()
+            cp.wait()
+
+            def body(e, cy):
+                _apply_edge(
+                    slot_ref[e, 0], slot_ref[e, 1], d_ref, c_ref, v_ref,
+                    v_max=v_max,
+                )
+                return cy
+
+            jax.lax.fori_loop(0, chunk, body, None)
+            return carry
+
+        jax.lax.fori_loop(0, n_live_chunks, chunk_body, None)
+
+    pl.run_scoped(
+        left_scoped,
+        pltpu.VMEM((chunk, 2), jnp.int32),
+        pltpu.SemaphoreType.DMA(()),
+    )
+
+
+def build_wavefront_call(
+    n: int,
+    width: int,
+    n_waves: int,
+    chunk: int,
+    n_left_chunks: int,
+    v_max: int,
+    interpret: bool,
+):
+    """One fused dispatch over a planned megabatch: waves and the leftover
+    suffix stay in HBM and are DMA'd by the kernel; the 3n-int state is
+    seeded into VMEM once and written back once, plus a ``(2,)`` stats
+    output ``[live_waves, fallback_waves]``."""
+    kernel = functools.partial(
+        edge_stream_wavefront_kernel,
+        v_max=v_max,
+        n=n,
+        width=width,
+        n_waves=n_waves,
+        chunk=chunk,
+        n_left_chunks=n_left_chunks,
+    )
+    state_spec = pl.BlockSpec((n,), lambda: (0,))
+    stats_spec = pl.BlockSpec((2,), lambda: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            stats_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+        ],
+        out_specs=[state_spec, state_spec, state_spec, stats_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # d
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # c
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # v
+            jax.ShapeDtypeStruct((2,), jnp.int32),  # stats
+        ],
+        interpret=interpret,
     )
 
 

@@ -9,7 +9,11 @@ import jax.numpy as jnp
 
 from repro.core.state import ClusterState, count_live_edges
 from repro.graph.pipeline import PAD, pad_edges_to_chunks
-from repro.kernels.edge_stream.kernel import build_call, build_megabatch_call
+from repro.kernels.edge_stream.kernel import (
+    build_call,
+    build_megabatch_call,
+    build_wavefront_call,
+)
 
 
 @functools.partial(
@@ -81,6 +85,55 @@ def pallas_update_megabatch(
     )
     return ClusterState(
         d=d, c=c, v=v, edges_seen=state.edges_seen + count_live_edges(edges.reshape(-1, 2), PAD)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_max", "chunk", "interpret"),
+    donate_argnums=(0,),
+)
+def pallas_wavefront_update(
+    state: ClusterState,
+    waves: jax.Array,
+    leftover: jax.Array,
+    meta: jax.Array,
+    v_max: int,
+    chunk: int = 2048,
+    interpret: bool = True,
+):
+    """Wavefront Pallas tier: ingest a planned megabatch (see
+    ``repro.graph.wavefront.plan_waves``) in one kernel launch.
+
+    ``waves`` is the planner's ``(n_waves, width, 2)`` layout, ``leftover``
+    the ``(M, 2)`` uncovered suffix, ``meta`` the ``[n_waves_used,
+    leftover_rows]`` loop bounds.  Labels are bit-identical to
+    :func:`pallas_update_megabatch` over the original stream for any valid
+    plan — vectorised waves with a runtime community-collision fallback
+    (DESIGN.md §12).  Returns ``(state, stats)`` with ``stats =
+    [live_waves, fallback_waves]``.  ``state`` is donated.
+    """
+    n = state.d.shape[0]
+    n_waves, width = waves.shape[0], waves.shape[1]
+    padded, n_left_chunks = pad_edges_to_chunks(leftover, chunk)
+    call = build_wavefront_call(
+        n, width, n_waves, chunk, n_left_chunks, int(v_max), interpret
+    )
+    d, c, v, stats = call(
+        waves.astype(jnp.int32),
+        padded.reshape(n_left_chunks, chunk, 2),
+        meta.astype(jnp.int32),
+        state.d.astype(jnp.int32),
+        state.c.astype(jnp.int32),
+        state.v.astype(jnp.int32),
+    )
+    # waves + leftover hold exactly the live rows of the original megabatch
+    seen = count_live_edges(waves.reshape(-1, 2), PAD) + count_live_edges(
+        leftover, PAD
+    )
+    return (
+        ClusterState(d=d, c=c, v=v, edges_seen=state.edges_seen + seen),
+        stats,
     )
 
 

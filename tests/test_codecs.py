@@ -237,6 +237,63 @@ def test_sniffing_magic_beats_suffix(tmp_path):
     assert sniff_codec(str(tmp_path / "missing.txt")) is None
 
 
+def test_dvc_v1_v2_cross_version_read(tmp_path):
+    """One decoder, both on-disk formats: a v2-default codec reads v1 files
+    (and vice versa), values and cursor-resume identical."""
+    edges = _random_stream(300, 4000, 13)
+    p1 = str(tmp_path / "old.dvc")
+    p2 = str(tmp_path / "new.dvc")
+    CodecFileSource.write(p1, edges, DeltaVarintCodec(version=1))
+    CodecFileSource.write(p2, edges, DeltaVarintCodec(version=2))
+    with open(p1, "rb") as f:
+        assert f.read(4) == b"DVE1"
+    with open(p2, "rb") as f:
+        assert f.read(4) == b"DVE2"
+    for p in (p1, p2):
+        src = CodecFileSource(p, DeltaVarintCodec())  # default (v2) reader
+        assert src.n_edges == len(edges)
+        assert np.array_equal(src.materialize(), edges)
+        got = list(src.iter_slices(2500))
+        assert np.array_equal(np.concatenate(got), edges[2500:])
+    # sniffing dispatches on either magic
+    for p in (p1, p2):
+        assert sniff_codec(p).name == "dvc"
+
+
+def test_dvc_v2_fixed_width_and_varint_fallback_columns(tmp_path):
+    """v2 picks the narrowest winning fixed width per column and falls back
+    to varint (mode 0) when extreme deltas make fixed encoding wider —
+    both modes must round-trip exactly."""
+    # deltas with zigzag in [128, 256): u1 fixed (1 B/value) strictly beats
+    # varint (2 B/value), so the column flips to mode 1
+    small = np.stack(
+        [np.arange(500) * 100, np.arange(500) * 100 + 90], 1
+    ).astype(np.int32)
+    # alternating int32 extremes → zigzag deltas ≥ 2^32: no fixed width fits
+    wild = np.empty((500, 2), np.int32)
+    wild[0::2] = [2**31 - 1, -(2**31)]
+    wild[1::2] = [-(2**31), 2**31 - 1]
+    for name, edges in (("small", small), ("wild", wild)):
+        path = str(tmp_path / f"{name}.dvc")
+        src = CodecFileSource.write(
+            path, edges, DeltaVarintCodec(block_edges=64)
+        )
+        assert np.array_equal(src.materialize(), edges), name
+    # the u1-column file beats its v1 (pure-varint) encoding in bytes
+    v1_path = str(tmp_path / "small_v1.dvc")
+    CodecFileSource.write(
+        v1_path, small, DeltaVarintCodec(block_edges=64, version=1)
+    )
+    assert os.path.getsize(str(tmp_path / "small.dvc")) <= os.path.getsize(
+        v1_path
+    )
+
+
+def test_dvc_version_validation():
+    with pytest.raises(ValueError, match="version"):
+        DeltaVarintCodec(version=3)
+
+
 def test_convert_cli_roundtrip(tmp_path, capsys):
     edges = _sorted_local_stream(500, 20_000, 10)
     txt = str(tmp_path / "g.txt")

@@ -213,6 +213,28 @@ def test_megabatch_fit_labels_bit_identical(backend, k, batch_edges, m):
     assert r_per.info["stream_dispatches"] == r_per.info["stream_batches"]
 
 
+@pytest.mark.parametrize("k,batch_edges,m", [
+    (2, 256, 5000),    # many full megabatches + ragged tail
+    (4, 512, 2048),    # exactly one megabatch
+    (3, 256, 200),     # stream shorter than one batch
+    (2, 256, 0),       # empty stream
+])
+def test_wavefront_megabatch_fit_labels_bit_identical(k, batch_edges, m):
+    """Wavefront mode (DESIGN.md §12) on the same acceptance grid: planned
+    node-disjoint waves + runtime fallback never change labels."""
+    n = 1200
+    src = _source(n, m, seed=k + m)
+    cfg = ClusterConfig(
+        n=n, v_max=24, backend="pallas", chunk=128, batch_edges=batch_edges,
+        megabatch_k=k,
+    )
+    r_per = cluster(src, cfg.replace(megabatch_k=None))
+    r_wave = cluster(src, cfg.replace(wavefront=8))
+    np.testing.assert_array_equal(r_per.labels, r_wave.labels)
+    if m:
+        assert r_wave.info["wavefront_megabatches"] >= 1
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     k=st.integers(min_value=1, max_value=5),

@@ -1,0 +1,339 @@
+"""Wavefront scheduling tests (DESIGN.md §12).
+
+The contract under test:
+
+* **planner soundness** — ``plan_waves`` only *segments* the stream (never
+  reorders): waves ∪ leftover reconstruct the flattened megabatch exactly,
+  every wave is node-disjoint over its live rows, and the layout shapes
+  depend only on ``(M, width, slack)`` so the kernel compiles once;
+* **bit-exactness** — both wavefront apply paths (the pure-JAX reference
+  and the Pallas kernel in interpret mode) produce labels/degrees/volumes
+  bit-identical to the sequential ``dense_update`` oracle on adversarial
+  streams (hubs, repeated endpoints, self-loops, PAD tails), including a
+  forced-fallback stream where every wave after the first collides in
+  community space;
+* **plumbing** — ``ClusterConfig(wavefront=W)`` routes ``fit`` through the
+  backend's ``wavefront_fn`` with identical labels to megabatch and
+  per-batch modes, surfaces the §12 info counters, survives checkpoint
+  suspend/resume, is ignored by backends without a wavefront path, and the
+  pipeline's residency accounting charges (and fully releases) the staged
+  plan bytes.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypothesis_compat import given, settings, st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.cluster import (  # noqa: E402
+    ClusterConfig,
+    GeneratorSource,
+    StreamClusterer,
+    cluster,
+    plan_waves,
+)
+from repro.core.state import ClusterState  # noqa: E402
+from repro.core.streaming import dense_update  # noqa: E402
+from repro.core.wavefront import wavefront_update_megabatch  # noqa: E402
+from repro.graph.generators import chung_lu_segments  # noqa: E402
+from repro.graph.pipeline import PAD, BatchPipeline  # noqa: E402
+from repro.graph.sources import ArraySource  # noqa: E402
+from repro.kernels.edge_stream.ops import pallas_wavefront_update  # noqa: E402
+
+
+def _adversarial_stream(n, m, seed, m_pad):
+    """Stream with hub bias, repeated endpoints, self-loops, and interior
+    PAD rows, padded with a trailing PAD tail to ``m_pad`` rows."""
+    rng = np.random.default_rng(seed)
+    out = np.full((m_pad, 2), PAD, np.int32)
+    if m:
+        # hub bias: half the endpoints drawn from the first few node ids
+        a = np.where(rng.random(m) < 0.5, rng.integers(0, max(2, n // 8), m),
+                     rng.integers(0, n, m))
+        b = rng.integers(0, n, m)
+        e = np.stack([a, b], axis=1).astype(np.int32)
+        loops = rng.random(m) < 0.05
+        e[loops, 1] = e[loops, 0]  # self-loops
+        e[rng.random(m) < 0.03] = PAD  # interior dead rows
+        out[:m] = e
+    return out
+
+
+def _wave_rows(plan):
+    """Stream-order reconstruction: used waves' live prefixes + leftover."""
+    parts = [plan.waves[t, : plan.counts[t]] for t in range(plan.n_waves)]
+    parts.append(plan.leftover[: plan.leftover_rows])
+    return (np.concatenate(parts) if parts else
+            np.zeros((0, 2), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 4, 16])
+@pytest.mark.parametrize("m,m_pad", [(0, 64), (50, 64), (256, 256)])
+def test_plan_reconstructs_stream_in_order(width, m, m_pad):
+    """waves ∪ leftover == the flattened stream up to its last live row —
+    the planner segments, it never reorders or drops."""
+    edges = _adversarial_stream(37, m, seed=width + m, m_pad=m_pad)
+    plan = plan_waves(edges, width)
+    flat = edges.reshape(-1, 2)
+    m_eff = plan.rows_in_waves + plan.leftover_rows
+    np.testing.assert_array_equal(_wave_rows(plan), flat[:m_eff])
+    # everything past m_eff is dead (PAD or self-loop): it constrains nothing
+    tail = flat[m_eff:]
+    dead = (tail[:, 0] == PAD) | (tail[:, 1] == PAD) | (tail[:, 0] == tail[:, 1])
+    assert dead.all()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_plan_waves_node_disjoint(seed):
+    edges = _adversarial_stream(23, 300, seed=seed, m_pad=320)
+    plan = plan_waves(edges, 16)
+    assert plan.n_waves == plan.meta[0]
+    for t in range(plan.n_waves):
+        assert plan.counts[t] >= 1  # forward progress per used wave
+        rows = plan.waves[t, : plan.counts[t]]
+        live = (rows[:, 0] != PAD) & (rows[:, 1] != PAD) & (rows[:, 0] != rows[:, 1])
+        ends = rows[live].ravel()
+        assert len(np.unique(ends)) == ends.size, t
+
+
+def test_plan_shapes_depend_only_on_geometry():
+    """Fixed compile shapes: (M, width, slack) fully determine the layout,
+    regardless of stream content — one kernel compile per run."""
+    W, M, slack = 8, 96, 4
+    dense = _adversarial_stream(11, 96, seed=1, m_pad=M)  # heavy reuse
+    sparse = np.stack([np.arange(M), np.arange(M) + M], 1).astype(np.int32)
+    for edges in (dense, sparse):
+        plan = plan_waves(edges, W, slack=slack)
+        assert plan.waves.shape == (slack * -(-M // W), W, 2)
+        assert plan.counts.shape == (slack * -(-M // W),)
+        assert plan.leftover.shape == (M, 2)
+        assert plan.meta.shape == (2,)
+    # the all-disjoint stream packs perfectly: full waves, no leftover
+    full = plan_waves(sparse, W, slack=slack)
+    assert full.leftover_rows == 0 and full.mean_wave_width == W
+
+
+def test_plan_validation_and_dead_stream():
+    edges = np.zeros((8, 2), np.int32)
+    with pytest.raises(ValueError, match="width"):
+        plan_waves(edges, 0)
+    with pytest.raises(ValueError, match="slack"):
+        plan_waves(edges, 4, slack=0)
+    dead = np.full((32, 2), PAD, np.int32)
+    plan = plan_waves(dead, 4)
+    assert plan.n_waves == 0 == plan.rows_in_waves == plan.leftover_rows
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness vs the sequential oracle (hypothesis, fixed shapes)
+# ---------------------------------------------------------------------------
+
+_M, _W = 128, 8  # fixed layout → a handful of compiles for the whole sweep
+
+
+def _assert_matches_oracle(apply_fn, edges, n, v_max):
+    plan = plan_waves(edges, _W)
+    ref = dense_update(ClusterState.init(n, numpy=True), edges, v_max)
+    state, stats = apply_fn(
+        ClusterState.init(n).to_device(),
+        jnp.asarray(plan.waves),
+        jnp.asarray(plan.leftover),
+        jnp.asarray(plan.meta),
+        v_max,
+    )
+    got = state.to_numpy()
+    np.testing.assert_array_equal(got.c, ref.c)
+    np.testing.assert_array_equal(got.d, ref.d)
+    np.testing.assert_array_equal(got.v, ref.v)
+    assert int(got.edges_seen) == int(ref.edges_seen)
+    live, fall = (int(x) for x in np.asarray(stats))
+    assert 0 <= fall <= live <= plan.n_waves
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(4, 60),
+    m=st.integers(0, _M),
+    v_max=st.sampled_from([1, 2, 8, 64]),
+)
+def test_property_wavefront_reference_bit_identical(seed, n, m, v_max):
+    """Reference path vs dense oracle on adversarial streams."""
+    edges = _adversarial_stream(n, m, seed=seed, m_pad=_M)
+    _assert_matches_oracle(wavefront_update_megabatch, edges, n, v_max)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(4, 60),
+    m=st.integers(0, _M),
+    v_max=st.sampled_from([2, 8, 64]),
+)
+def test_property_wavefront_kernel_bit_identical(seed, n, m, v_max):
+    """Pallas wavefront kernel (interpret mode) vs dense oracle."""
+    edges = _adversarial_stream(n, m, seed=seed, m_pad=_M)
+
+    def kernel(state, waves, leftover, meta, vm):
+        return pallas_wavefront_update(
+            state, waves, leftover, meta, vm, chunk=64, interpret=True
+        )
+
+    _assert_matches_oracle(kernel, edges, n, v_max)
+
+
+@pytest.mark.parametrize("seed,n,m,v_max", [
+    (0, 6, _M, 2),     # tiny graph: heavy endpoint reuse, short waves
+    (1, 40, 100, 8),   # PAD tail after row 100
+    (2, 12, _M, 1),    # v_max=1: everything saturates immediately
+    (3, 60, 64, 64),   # sparse reuse: wide waves, no saturation
+    (4, 4, _M, 8),     # 4 nodes, 128 rows: maximal collision pressure
+])
+def test_wavefront_paths_bit_identical_grid(seed, n, m, v_max):
+    """Deterministic analogue of the hypothesis sweeps (runs even without
+    hypothesis installed): both apply paths vs the dense oracle."""
+    edges = _adversarial_stream(n, m, seed=seed, m_pad=_M)
+    _assert_matches_oracle(wavefront_update_megabatch, edges, n, v_max)
+    _assert_matches_oracle(
+        lambda *a: pallas_wavefront_update(*a, chunk=64, interpret=True),
+        edges, n, v_max,
+    )
+
+
+def test_forced_fallback_is_exact_and_counted():
+    """After the first wave merges {0,2} and {1,3}, every later wave's two
+    node-disjoint edges share both (unsaturated) communities — the runtime
+    check must fire and the sequential fallback must keep bit-exactness."""
+    n, v_max = 8, 1 << 20  # never saturates: every collision is live
+    edges = np.tile(
+        np.array([[0, 2], [1, 3], [0, 3], [1, 2]], np.int32), (10, 1)
+    )
+    plan = plan_waves(edges, 2)
+    assert plan.leftover_rows == 0  # width-2 waves always pack here
+    ref = dense_update(ClusterState.init(n, numpy=True), edges, v_max)
+    for apply_fn in (
+        wavefront_update_megabatch,
+        lambda *a: pallas_wavefront_update(*a, chunk=16, interpret=True),
+    ):
+        state, stats = apply_fn(
+            ClusterState.init(n).to_device(),
+            jnp.asarray(plan.waves),
+            jnp.asarray(plan.leftover),
+            jnp.asarray(plan.meta),
+            v_max,
+        )
+        got = state.to_numpy()
+        np.testing.assert_array_equal(got.c, ref.c)
+        np.testing.assert_array_equal(got.v, ref.v)
+        live, fall = (int(x) for x in np.asarray(stats))
+        assert fall >= 1  # the collision pattern actually exercised fallback
+        assert live == plan.n_waves
+
+
+# ---------------------------------------------------------------------------
+# API plumbing: fit / info counters / checkpoints / pipeline residency
+# ---------------------------------------------------------------------------
+
+def _source(n, m, seed, segment=700):
+    return GeneratorSource(
+        chung_lu_segments(n, seed=seed), m, segment_edges=segment
+    )
+
+
+@pytest.mark.parametrize("m", [200, 2048, 5000])
+def test_wavefront_fit_bit_identical_with_counters(m):
+    n, B, K, W = 900, 256, 4, 8
+    src = _source(n, m, seed=m)
+    cfg = ClusterConfig(
+        n=n, v_max=24, backend="pallas", chunk=128, batch_edges=B,
+        megabatch_k=K,
+    )
+    r_wave = cluster(src, cfg.replace(wavefront=W))
+    r_mega = cluster(src, cfg)
+    r_per = cluster(src, cfg.replace(megabatch_k=None))
+    np.testing.assert_array_equal(r_wave.labels, r_mega.labels)
+    np.testing.assert_array_equal(r_wave.labels, r_per.labels)
+    info = r_wave.info
+    assert info["wavefront_megabatches"] == info["stream_megabatches"]
+    assert info["wavefront_waves"] >= 1
+    assert 1.0 <= info["wavefront_mean_wave_width"] <= W
+    assert 0.0 <= info["wavefront_fallback_rate"] <= 1.0
+    assert info["wavefront_fallback_waves"] <= info["wavefront_live_waves"]
+    assert info["wavefront_plan_seconds"] >= 0.0
+    # every live row went through a wave or the leftover tail
+    assert "wavefront_megabatches" not in r_mega.info
+
+
+def test_wavefront_checkpoint_resume_bit_identical(tmp_path):
+    """Suspend per-batch mid-megabatch, restore, finish in wavefront mode —
+    plans are stateless per megabatch, so checkpoints are untouched."""
+    n, m, B, K = 700, 5000, 256, 4
+    src = _source(n, m, seed=5)
+    cfg = ClusterConfig(
+        n=n, v_max=24, backend="pallas", chunk=128, batch_edges=B,
+        megabatch_k=K, wavefront=8,
+    )
+    sc = StreamClusterer(cfg)
+    sc.fit(src, max_batches=3)
+    ckpt = str(tmp_path / "ck-wave")
+    sc.save(ckpt)
+    res = StreamClusterer.restore(ckpt).fit(src).finalize()
+    ref = cluster(src, cfg.replace(wavefront=None, megabatch_k=None))
+    np.testing.assert_array_equal(res.labels, ref.labels)
+    assert res.info["wavefront_megabatches"] >= 1
+
+
+def test_wavefront_requires_megabatch_k():
+    with pytest.raises(ValueError, match="megabatch_k"):
+        ClusterConfig(n=10, v_max=4, backend="pallas", wavefront=8)
+    with pytest.raises(ValueError, match="wavefront"):
+        ClusterConfig(
+            n=10, v_max=4, backend="pallas", megabatch_k=2, wavefront=0
+        )
+
+
+def test_wavefront_knob_ignored_without_wavefront_fn():
+    """Backends with a megabatch path but no wavefront path silently use
+    sequential megabatch dispatch (mirrors the megabatch_k fallback rule)."""
+    n, m = 400, 1500
+    src = _source(n, m, seed=3)
+    cfg = ClusterConfig(
+        n=n, v_max=16, backend="chunked", chunk=128, batch_edges=256,
+        megabatch_k=4, wavefront=8,
+    )
+    r = cluster(src, cfg)
+    ref = cluster(src, cfg.replace(wavefront=None, megabatch_k=None))
+    np.testing.assert_array_equal(r.labels, ref.labels)
+    assert "wavefront_megabatches" not in r.info
+
+
+def test_pipeline_stages_plans_and_releases_residency():
+    """megabatches(wavefront=W) attaches a plan to every staged buffer and
+    charges its bytes; after consumption the in-flight account drains to
+    zero (no leaked plan residency)."""
+    n, m, B, K, W = 200, 4000, 256, 4, 8
+    rng = np.random.default_rng(0)
+    edges = rng.integers(0, n, (m, 2)).astype(np.int32)
+    pipe = BatchPipeline(ArraySource(edges), B)
+    seen = 0
+    for mb in pipe.megabatches(K, wavefront=W):
+        assert mb.plan is not None
+        assert mb.plan.waves.shape[1] == W
+        seen += mb.n_rows
+        # plan bytes are part of the residency account while staged
+        assert pipe.peak_buffer_bytes >= mb.edges.nbytes + mb.plan.nbytes
+    assert seen == m
+    assert pipe._inflight_bytes == 0
+    with pytest.raises(ValueError, match="wavefront"):
+        next(iter(BatchPipeline(ArraySource(edges), B).megabatches(
+            K, wavefront=0)))
