@@ -26,11 +26,21 @@ from repro.core.metrics import (  # noqa: F401
     nmi,
     weighted_modularity,
 )
-from repro.core.state import ClusterState, ShardedState, SweepState  # noqa: F401
+from repro.core.state import (  # noqa: F401
+    ClusterState,
+    FleetState,
+    ShardedState,
+    SweepState,
+)
 from repro.core.streaming import canonical_labels  # noqa: F401
 from repro.graph.pipeline import PAD  # noqa: F401
 from repro.cluster.api import Clustering, StreamClusterer, cluster  # noqa: F401
 from repro.cluster.config import ClusterConfig  # noqa: F401
+from repro.cluster.fleet import (  # noqa: F401
+    FleetClusterer,
+    FleetClustering,
+    cluster_fleet,
+)
 from repro.cluster.refine import (  # noqa: F401
     RefineRuntime,
     ReplayBuffer,
@@ -45,6 +55,7 @@ from repro.cluster.registry import (  # noqa: F401
 )
 from repro.graph.codecs import Cursor, DeltaVarintCodec, RawCodec  # noqa: F401
 from repro.graph.pipeline import BatchPipeline, MegaBatch  # noqa: F401
+from repro.graph.tenants import FleetSlab, TenantRouter  # noqa: F401
 from repro.graph.wavefront import WavePlan, plan_waves  # noqa: F401
 from repro.graph.sources import (  # noqa: F401
     ArraySource,
@@ -73,6 +84,10 @@ __all__ = [
     "DeltaVarintCodec",
     "EdgeListFileSource",
     "EdgeSource",
+    "FleetClusterer",
+    "FleetClustering",
+    "FleetSlab",
+    "FleetState",
     "GeneratorSource",
     "MegaBatch",
     "MergedSource",
@@ -84,12 +99,14 @@ __all__ = [
     "StreamClusterer",
     "SupergraphAccumulator",
     "SweepState",
+    "TenantRouter",
     "WavePlan",
     "as_source",
     "available_backends",
     "avg_f1",
     "canonical_labels",
     "cluster",
+    "cluster_fleet",
     "community_stats",
     "get_backend",
     "modularity",

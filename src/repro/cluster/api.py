@@ -364,6 +364,7 @@ class StreamClusterer:
         self.wavefront_waves = 0
         self.wavefront_rows_in_waves = 0
         self.wavefront_leftover_rows = 0
+        self.wavefront_dead_rows_skipped = 0
         self.wavefront_plan_seconds = 0.0
         # (2,) device array [live_waves, fallback_waves], accumulated as lazy
         # device adds — no host sync until finalize() reads it
@@ -450,7 +451,9 @@ class StreamClusterer:
         if use_wave:
             if plan is None:
                 plan = plan_waves(
-                    np.asarray(edge_batches), self.config.wavefront
+                    np.asarray(edge_batches),
+                    self.config.wavefront,
+                    gap=self.config.wavefront_gap,
                 )
             result = self._backend.wavefront_fn(plan, self.config, self._state)
             stats = result.info.pop("wavefront_stats", None)
@@ -465,6 +468,7 @@ class StreamClusterer:
             self.wavefront_waves += plan.n_waves
             self.wavefront_rows_in_waves += plan.rows_in_waves
             self.wavefront_leftover_rows += plan.leftover_rows
+            self.wavefront_dead_rows_skipped += plan.dead_rows_skipped
             self.wavefront_plan_seconds += plan.plan_seconds
         else:
             result = self._backend.megabatch_fn(
@@ -544,7 +548,14 @@ class StreamClusterer:
                 if self._backend.wavefront_fn is not None
                 else None
             )
-            megas = pipe.megabatches(K, start=self._cursor, wavefront=wf)
+            megas = pipe.megabatches(
+                K,
+                start=self._cursor,
+                wavefront=wf,
+                wavefront_gap=(
+                    config.wavefront_gap if wf is not None else None
+                ),
+            )
             try:
                 exhausted = True  # flipped back if we stop for the budget
                 for mega in megas:
@@ -632,6 +643,9 @@ class StreamClusterer:
                 else 0.0
             )
             info["wavefront_leftover_rows"] = self.wavefront_leftover_rows
+            info["wavefront_dead_rows_skipped"] = (
+                self.wavefront_dead_rows_skipped
+            )
             info["wavefront_plan_seconds"] = self.wavefront_plan_seconds
             info["wavefront_live_waves"] = live
             info["wavefront_fallback_waves"] = fall

@@ -34,11 +34,13 @@ import numpy as np
 from repro.core import multiparam as _multiparam
 from repro.core.chunked import chunked_update, chunked_update_megabatch
 from repro.core.distributed import merge_sharded_state, sharded_update
+from repro.core.fleet import fleet_update_chunked, fleet_update_scan
 from repro.core.state import ClusterState, ShardedState, SweepState
 from repro.core.streaming import dense_update, oracle_init, oracle_update, scan_update
 from repro.cluster.registry import BackendResult, register_backend
 from repro.core.wavefront import wavefront_update_megabatch
 from repro.kernels.edge_stream.ops import (
+    pallas_fleet_update,
     pallas_update,
     pallas_update_megabatch,
     pallas_wavefront_update,
@@ -77,10 +79,20 @@ def _dense(edges, config, state, mesh=None) -> BackendResult:
     return BackendResult(state=state, labels=state.c, info={})
 
 
+def _scan_fleet(edges, config, state) -> BackendResult:
+    """Vmapped fleet ingest of one (T, B, 2) slab: per-tenant rows bit-exact
+    with single-stream :func:`scan_update` over each tenant's own slabs."""
+    state = fleet_update_scan(
+        state.to_device(), jnp.asarray(edges), jnp.int32(config.v_max)
+    )
+    return BackendResult(state=state, labels=None, info={})
+
+
 @register_backend(
     "scan",
     resumable=True,
     bit_exact=True,
+    fleet_fn=_scan_fleet,
     description="jax.lax.scan port, one edge per step (on-device oracle)",
 )
 def _scan(edges, config, state, mesh=None) -> BackendResult:
@@ -136,6 +148,19 @@ def _pallas_wavefront(plan, config, state) -> BackendResult:
     )
 
 
+def _pallas_fleet(edges, config, state) -> BackendResult:
+    """Tenant-major fleet kernel: one launch ingests the whole (T, B, 2)
+    slab, per-tenant state tiles pipelined HBM→VMEM→HBM (DESIGN.md §13);
+    every tenant row bit-exact with the sequential single-stream tiers."""
+    state = pallas_fleet_update(
+        state.to_device(),
+        jnp.asarray(edges),
+        int(config.v_max),
+        interpret=config.interpret,
+    )
+    return BackendResult(state=state, labels=None, info={})
+
+
 @register_backend(
     "pallas",
     resumable=True,
@@ -143,6 +168,7 @@ def _pallas_wavefront(plan, config, state) -> BackendResult:
     chunk_aligned=True,
     megabatch_fn=_pallas_megabatch,
     wavefront_fn=_pallas_wavefront,
+    fleet_fn=_pallas_fleet,
     description="serial-in-VMEM Pallas kernel (bit-exact, TPU-native)",
 )
 def _pallas(edges, config, state, mesh=None) -> BackendResult:
@@ -174,12 +200,27 @@ def _chunked_megabatch(edges, config, state) -> BackendResult:
     return BackendResult(state=state, labels=state.c, info={})
 
 
+def _chunked_fleet(edges, config, state) -> BackendResult:
+    """Vmapped fleet ingest of one (T, B, 2) slab: the Jacobi chunk scan
+    batched over the tenant axis — per-tenant rows bit-identical to
+    single-stream :func:`chunked_update` over each tenant's own slabs
+    (chunk grouping restarts per slab, exactly as it restarts per batch)."""
+    state = fleet_update_chunked(
+        state.to_device(),
+        jnp.asarray(edges),
+        jnp.int32(config.v_max),
+        chunk=config.chunk,
+    )
+    return BackendResult(state=state, labels=None, info={})
+
+
 @register_backend(
     "chunked",
     resumable=True,
     bit_exact=False,
     chunk_aligned=True,
     megabatch_fn=_chunked_megabatch,
+    fleet_fn=_chunked_fleet,
     description="Jacobi chunked tier (vectorised decisions, scatter conflict "
     "resolution)",
 )

@@ -88,6 +88,24 @@ class ClusterConfig:
         2**20, a 16 MB ceiling at 16 B/entry).  Overflow evicts the
         lightest pairs into the sketch's ``dropped_weight`` counter —
         bounded memory, never silent truncation.
+      wavefront_gap: dead-gap run-merging budget for the wavefront planner
+        (DESIGN.md §12/§13).  When set, ``plan_waves`` packs only *live*
+        rows into waves, merging contiguous live runs across interior dead
+        gaps (PAD / self-loop rows) of up to this many rows — a gap longer
+        than the budget closes the wave.  Dead rows are no-ops in every
+        tier, so skipping them never reorders live work; occupancy rises on
+        PAD-interleaved streams (ragged megabatch tails, fleet-style
+        staging).  The plan's ``dead_rows_skipped`` counter surfaces as
+        ``wavefront_dead_rows_skipped`` in the finalize info.  ``None``
+        (default) keeps the historical plans: dead rows occupy wave slots.
+        Requires ``wavefront``.
+      tenants: fleet size ``T`` for the multi-tenant fleet engine
+        (``repro.cluster.fleet``, DESIGN.md §13) — the whole fleet's state
+        is one ``(T, n)`` :class:`~repro.core.state.FleetState` advanced by
+        a single donated dispatch per fleet step.  Only consumed by
+        :class:`~repro.cluster.fleet.FleetClusterer` (single-stream entry
+        points ignore it); requires a backend with a fleet path
+        (``chunked`` / ``scan`` / ``pallas``).
       interpret: run Pallas kernels in interpret mode (True on CPU; set
         False on real TPUs).
     """
@@ -107,6 +125,8 @@ class ClusterConfig:
     refine: Optional[str] = None
     refine_rounds: Optional[int] = None
     refine_max_pairs: Optional[int] = None
+    wavefront_gap: Optional[int] = None
+    tenants: Optional[int] = None
     interpret: bool = True
 
     def __post_init__(self):
@@ -177,6 +197,17 @@ class ClusterConfig:
             raise ValueError(
                 f"refine_max_pairs must be >= 1, got {self.refine_max_pairs}"
             )
+        if self.wavefront_gap is not None:
+            if self.wavefront_gap < 0:
+                raise ValueError(
+                    f"wavefront_gap must be >= 0, got {self.wavefront_gap}"
+                )
+            if self.wavefront is None:
+                raise ValueError(
+                    "wavefront_gap requires wavefront (it is a planner knob)"
+                )
+        if self.tenants is not None and self.tenants < 1:
+            raise ValueError(f"tenants must be >= 1, got {self.tenants}")
 
     # ------------------------------------------------------------------
     def replace(self, **changes: Any) -> "ClusterConfig":

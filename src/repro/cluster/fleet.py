@@ -1,0 +1,312 @@
+"""The multi-tenant fleet engine: thousands of tenant streams per dispatch.
+
+``repro.cluster.fleet`` (DESIGN.md §13) turns "millions of users" from
+millions of dispatches into one: ``T`` independent tenant streams — each a
+small graph with the paper's 3n-int state — are stacked into one
+:class:`~repro.core.state.FleetState` ``(T, n)`` pytree and advanced with
+**one** donated device dispatch per fleet step.
+
+* Ingest: :class:`~repro.graph.tenants.TenantRouter` demuxes the per-tenant
+  sources under a deterministic arrival schedule and stages each fleet
+  step's ``(T, B, 2)`` slab on its prefetch thread.
+* Update: the backend's registered ``fleet_fn`` — the vmapped chunked /
+  scan tiers (``repro.core.fleet``) or the tenant-major Pallas kernel
+  (``repro.kernels.edge_stream``).
+* Suspend/resume: one checkpoint carries the whole fleet — the stacked
+  state plus the per-tenant dispatched-row vector (``tenant_rows``), from
+  which the router's schedule replays deterministically.
+
+Per-tenant labels are bit-identical to ``T`` independent single-stream
+:class:`~repro.cluster.api.StreamClusterer` runs of the same backend and
+batch geometry — the router guarantees identical per-tenant batch
+boundaries, the update paths guarantee tenant isolation (see the module
+docstrings for each half of the argument).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.state import FleetState
+from repro.core.streaming import canonical_labels
+from repro.cluster.api import _CONFIG_FILE, DEFAULT_BATCH_EDGES, Clustering
+from repro.cluster.config import ClusterConfig
+from repro.cluster.registry import Backend, get_backend
+from repro.graph.tenants import TenantRouter
+
+
+class FleetClustering:
+    """A fleet clustering result: per-tenant labels + run counters.
+
+    ``state`` is a host (numpy) :class:`FleetState` snapshot — row ``t`` is
+    tenant ``t``'s 3n-int result.  :meth:`tenant` views one tenant as a
+    plain single-stream :class:`~repro.cluster.api.Clustering` so the
+    edge-free metrics (entropy, density, community stats) work unchanged.
+    """
+
+    def __init__(
+        self,
+        state: FleetState,
+        config: ClusterConfig,
+        info: Optional[Dict[str, Any]] = None,
+    ):
+        self.state = state
+        self.config = config
+        self.info = dict(info or {})
+        self._labels: Optional[np.ndarray] = None
+
+    @property
+    def tenants(self) -> int:
+        return self.state.tenants
+
+    @property
+    def raw_labels(self) -> np.ndarray:
+        """(T, n) per-tenant raw labels (node-id space)."""
+        return np.asarray(self.state.c)
+
+    @property
+    def labels(self) -> np.ndarray:
+        """(T, n) canonical labels, each tenant row canonicalised
+        independently (comparable against its standalone run)."""
+        if self._labels is None:
+            self._labels = np.stack(
+                [canonical_labels(row) for row in self.raw_labels]
+            )
+        return self._labels
+
+    def tenant(self, t: int) -> Clustering:
+        return Clustering(
+            state=self.state.entry(t),
+            config=self.config,
+            raw_labels=self.raw_labels[t],
+            info={"tenant": t},
+        )
+
+    def __repr__(self) -> str:
+        return (
+            f"FleetClustering(backend={self.config.backend!r}, "
+            f"tenants={self.tenants}, n={self.config.n})"
+        )
+
+
+class FleetClusterer:
+    """Incremental multi-tenant ingestion: one dispatch per fleet step.
+
+    Mirrors :class:`~repro.cluster.api.StreamClusterer` for fleets:
+    :meth:`partial_fit_fleet` per staged ``(T, B, 2)`` slab, :meth:`fit` to
+    drain per-tenant sources through a :class:`TenantRouter`,
+    :meth:`finalize` for the result, :meth:`save`/:meth:`restore` for
+    one-checkpoint suspend/resume of the entire fleet.
+    """
+
+    def __init__(self, config: ClusterConfig, state: Optional[FleetState] = None):
+        if config.tenants is None:
+            raise ValueError(
+                "FleetClusterer requires config.tenants (the fleet size T)"
+            )
+        self._backend: Backend = get_backend(config.backend)
+        if self._backend.fleet_fn is None:
+            raise ValueError(
+                f"backend {config.backend!r} has no fleet path; fleet-capable "
+                "backends register a fleet_fn (chunked / scan / pallas)"
+            )
+        self.config = config
+        if state is None:
+            state = FleetState.init(config.n, config.tenants)
+        if not isinstance(state, FleetState):
+            raise ValueError(
+                f"FleetClusterer threads a FleetState, got {type(state).__name__}"
+            )
+        if state.n != config.n or state.tenants != config.tenants:
+            raise ValueError(
+                f"state has (tenants, n)=({state.tenants}, {state.n}) but "
+                f"config has ({config.tenants}, {config.n}); a carried fleet "
+                "state must match the config's shape"
+            )
+        self._state = state
+        # Per-tenant dispatched-row cursor: the single extra checkpoint leaf
+        # from which the router's arrival schedule resumes deterministically.
+        self._rows = np.zeros(config.tenants, np.int64)
+        self.fleet_steps = 0
+        self.stream_dispatches = 0
+        self.peak_staging_bytes = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> FleetState:
+        return self._state
+
+    @property
+    def tenant_rows(self) -> np.ndarray:
+        """(T,) raw rows dispatched per tenant (the fleet's stream cursor)."""
+        return self._rows.copy()
+
+    @property
+    def edges_seen(self) -> np.ndarray:
+        """(T,) live edges ingested per tenant."""
+        return np.asarray(self._state.edges_seen)
+
+    def partial_fit_fleet(
+        self, slab, *, n_rows: Optional[Sequence[int]] = None
+    ) -> "FleetClusterer":
+        """Ingest one ``(T, B, 2)`` staged slab in a single donated
+        dispatch; returns ``self`` for chaining.
+
+        ``n_rows``: raw rows per tenant this slab represents (defaults to
+        the full ``B`` per tenant); :meth:`fit` passes the router's
+        pre-padding counts so :attr:`tenant_rows` tracks the sources.
+        """
+        T, B = int(np.shape(slab)[0]), int(np.shape(slab)[1])
+        if T != self.config.tenants:
+            raise ValueError(
+                f"slab has {T} tenant rows but config.tenants="
+                f"{self.config.tenants}"
+            )
+        result = self._backend.fleet_fn(slab, self.config, self._state)
+        self._state = result.state
+        if n_rows is None:
+            self._rows += B
+        else:
+            self._rows += np.asarray(n_rows, np.int64)
+        self.fleet_steps += 1
+        self.stream_dispatches += 1
+        return self
+
+    def fit(
+        self,
+        sources: Sequence,
+        *,
+        rates: Optional[Sequence[int]] = None,
+        granule: Optional[int] = None,
+        max_steps: Optional[int] = None,
+    ) -> "FleetClusterer":
+        """Drain ``T`` per-tenant sources from :attr:`tenant_rows`.
+
+        ``sources`` must have exactly ``config.tenants`` entries (arrays,
+        paths, or :class:`~repro.graph.sources.EdgeSource`\\ s).  Ingestion
+        starts at the current per-tenant rows, so ``fit`` after
+        :meth:`restore` resumes every tenant mid-stream.  ``max_steps``
+        bounds this call (a cooperative suspend point); returns ``self``.
+        """
+        if len(sources) != self.config.tenants:
+            raise ValueError(
+                f"{len(sources)} sources for config.tenants="
+                f"{self.config.tenants}"
+            )
+        router = TenantRouter(
+            sources,
+            self.config.batch_edges or DEFAULT_BATCH_EDGES,
+            rates=rates,
+            granule=granule,
+            pad_multiple=(
+                self.config.chunk if self._backend.chunk_aligned else 1
+            ),
+            **(
+                {}
+                if self.config.prefetch is None
+                else {"prefetch": self.config.prefetch}
+            ),
+        )
+        slabs = router.fleet_slabs(self._rows)
+        n = 0
+        try:
+            for slab in slabs:
+                self.partial_fit_fleet(slab.edges, n_rows=slab.n_rows)
+                n += 1
+                if max_steps is not None and n >= max_steps:
+                    break
+        finally:
+            slabs.close()
+        self.peak_staging_bytes = max(
+            self.peak_staging_bytes, router.peak_staging_bytes
+        )
+        return self
+
+    def finalize(self) -> FleetClustering:
+        """The fleet clustering of everything ingested so far.  Snapshots
+        the stacked state to host (the fleet updates donate their buffers),
+        so the result outlives further ingestion."""
+        info: Dict[str, Any] = {
+            "tenants": self.config.tenants,
+            "fleet_steps": self.fleet_steps,
+            "stream_dispatches": self.stream_dispatches,
+            "dispatches_per_fleet_step": (
+                self.stream_dispatches / self.fleet_steps
+                if self.fleet_steps
+                else 0.0
+            ),
+            "peak_staging_bytes": self.peak_staging_bytes,
+            "tenant_rows": self.tenant_rows,
+        }
+        return FleetClustering(
+            state=self._state.to_numpy(), config=self.config, info=info
+        )
+
+    # ------------------------------------------------------------------
+    # Suspend / resume: ONE checkpoint for the whole fleet
+    # ------------------------------------------------------------------
+
+    def save(self, directory: str) -> str:
+        """Checkpoint the entire fleet atomically: the stacked state plus
+        the per-tenant dispatched-row vector, as one pytree (plus the config
+        sidecar) — state and every tenant's stream position can never tear
+        apart.  Step = total live edges across the fleet."""
+        mgr = CheckpointManager(directory)
+        tmp = os.path.join(directory, _CONFIG_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            f.write(self.config.to_json())
+        os.replace(tmp, os.path.join(directory, _CONFIG_FILE))
+        tree = {
+            "fleet_state": self._state,
+            "tenant_rows": self._rows.copy(),
+        }
+        return mgr.save(int(np.sum(self.edges_seen)), tree)
+
+    @classmethod
+    def restore(
+        cls, directory: str, config: Optional[ClusterConfig] = None
+    ) -> "FleetClusterer":
+        """Resume a fleet from :meth:`save`; ``config`` overrides the saved
+        one (same fleet shape and a fleet-capable backend required — the
+        shape checks in ``__init__`` enforce it)."""
+        with open(os.path.join(directory, _CONFIG_FILE)) as f:
+            saved = ClusterConfig.from_json(f.read())
+        if config is None:
+            config = saved
+        elif config.tenants is None and saved.tenants is not None:
+            config = config.replace(tenants=saved.tenants)
+        mgr = CheckpointManager(directory)
+        leaves = mgr.leaf_names()
+        if "tenant_rows" not in leaves:
+            raise ValueError(
+                f"{directory!r} holds a single-stream checkpoint "
+                "(no tenant_rows leaf); use StreamClusterer.restore"
+            )
+        template = {
+            "fleet_state": FleetState.init(
+                config.n, config.tenants, numpy=True
+            ),
+            "tenant_rows": np.zeros(config.tenants, np.int64),
+        }
+        restored = mgr.restore(template)
+        fc = cls(config, state=restored["fleet_state"])
+        fc._rows = np.asarray(restored["tenant_rows"], np.int64)
+        return fc
+
+
+def cluster_fleet(
+    sources: Sequence,
+    config: ClusterConfig,
+    *,
+    rates: Optional[Sequence[int]] = None,
+) -> FleetClustering:
+    """One-call fleet clustering: drain ``T`` per-tenant sources and return
+    the :class:`FleetClustering` (``config.tenants`` defaults to
+    ``len(sources)`` when unset)."""
+    if config.tenants is None:
+        config = config.replace(tenants=len(sources))
+    return FleetClusterer(config).fit(sources, rates=rates).finalize()

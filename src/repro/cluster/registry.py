@@ -84,6 +84,15 @@ class Backend:
     #   ``wavefront_fn(plan, config, state) -> BackendResult``; the API layer
     #   uses it when ClusterConfig.wavefront is set (and megabatch_k drives
     #   staging as usual).
+    fleet_fn: Optional[Callable[..., BackendResult]] = None
+    #   multi-tenant fleet ingest (DESIGN.md §13): one donated dispatch over
+    #   a ``(T, B, 2)`` staged slab threading a
+    #   :class:`~repro.core.state.FleetState` — tenant ``t``'s row must be
+    #   bit-identical to this backend's single-stream ``fn`` applied to
+    #   tenant ``t``'s slab alone (all-PAD rows are no-ops).  Signature
+    #   ``fleet_fn(edges, config, state) -> BackendResult``; used by
+    #   :class:`repro.cluster.fleet.FleetClusterer` when
+    #   ``ClusterConfig.tenants`` is set.
     description: str = ""
 
 
@@ -102,6 +111,7 @@ def register_backend(
     finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None,
     megabatch_fn: Optional[Callable[..., BackendResult]] = None,
     wavefront_fn: Optional[Callable[..., BackendResult]] = None,
+    fleet_fn: Optional[Callable[..., BackendResult]] = None,
     description: str = "",
 ):
     """Decorator: register ``fn`` as backend ``name``.  Re-registration under
@@ -127,6 +137,7 @@ def register_backend(
             finalize_fn=finalize_fn,
             megabatch_fn=megabatch_fn,
             wavefront_fn=wavefront_fn,
+            fleet_fn=fleet_fn,
             description=description,
         )
         return fn

@@ -1,0 +1,104 @@
+"""Vmapped fleet tier: advance ``T`` independent tenant streams per dispatch.
+
+The fleet engine (DESIGN.md §13) stacks ``T`` per-tenant Algorithm-1 states
+into one :class:`repro.core.state.FleetState` pytree and ingests a
+``(T, B, 2)`` staged slab — one fixed-shape batch per tenant, carved by
+``repro.graph.tenants.TenantRouter`` — with **one** donated dispatch.
+
+Why ``vmap`` preserves per-tenant bit-exactness: the update for tenant ``t``
+reads and writes only tenant ``t``'s state slab and edge slab — there is no
+cross-tenant data flow — and the per-tenant math is integer arithmetic plus
+integer scatter/gather, which XLA batching does not reassociate.  So row
+``t`` of the fleet result equals the corresponding single-stream update
+applied to tenant ``t``'s slab alone, for any fleet composition.  The other
+half of the bit-identity contract lives in the router: each tenant's slab
+sequence must equal the batch sequence a standalone single-stream run would
+see (full ``B``-row batches, plus one final short batch when the tenant's
+stream ends).
+
+Two portable paths share this module (the tenant-major Pallas kernel lives
+in ``repro.kernels.edge_stream``):
+
+* :func:`fleet_update_chunked` — vmapped Jacobi chunked tier; per-tenant
+  results bit-identical to single-stream ``chunked_update`` with the same
+  batch/chunk geometry.
+* :func:`fleet_update_scan` — vmapped per-edge ``lax.scan``; per-tenant
+  results bit-identical to ``dense_update`` / the sequential Pallas kernel.
+
+All-PAD tenant rows (idle tenants in a ragged fleet step) are true no-ops in
+both paths: every masked write lands in the sink slot (chunked) or is an
+identity write (scan), so an idle tenant's state is unchanged bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunked import _scan_chunks
+from repro.core.state import ClusterState, FleetState
+from repro.core.streaming import scan_update
+from repro.graph.pipeline import PAD, round_up
+
+Array = jax.Array
+
+
+def _cluster_view(state: FleetState) -> ClusterState:
+    """The fleet pytree reinterpreted as a tenant-batched ClusterState —
+    the in/out carrier for ``jax.vmap`` over the single-stream updates."""
+    return ClusterState(
+        d=state.d, c=state.c, v=state.v, edges_seen=state.edges_seen
+    )
+
+
+def _fleet_view(state: ClusterState) -> FleetState:
+    return FleetState(
+        d=state.d, c=state.c, v=state.v, edges_seen=state.edges_seen
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",), donate_argnums=(0,))
+def fleet_update_chunked(
+    state: FleetState, edges: Array, v_max: Array, chunk: int = 1024
+) -> FleetState:
+    """Ingest one ``(T, B, 2)`` fleet slab with the vmapped chunked tier.
+
+    Each tenant's ``(B, 2)`` slab is padded up to a multiple of ``chunk``
+    and scanned with the same Jacobi ``_chunk_update`` the single-stream
+    chunked tier uses; ``vmap`` batches the scan over the tenant axis so the
+    whole fleet is one dispatch.  Chunk grouping restarts at every slab —
+    exactly as single-stream ``chunked_update`` restarts it at every batch —
+    so per-tenant labels are bit-identical to a standalone chunked run fed
+    the same batch sequence.  ``state`` is donated.
+    """
+    n = state.d.shape[1]
+    T, B = edges.shape[0], edges.shape[1]
+    b_pad = round_up(max(B, 1), chunk)
+    padded = jnp.full((T, b_pad, 2), PAD, jnp.int32).at[:, :B, :].set(
+        edges.astype(jnp.int32)
+    )
+    chunks = padded.reshape(T, b_pad // chunk, chunk, 2)
+    out = jax.vmap(
+        functools.partial(_scan_chunks, v_max=jnp.int32(v_max), n=n),
+        in_axes=(0, 0),
+    )(_cluster_view(state), chunks)
+    return _fleet_view(out)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def fleet_update_scan(
+    state: FleetState, edges: Array, v_max: Array
+) -> FleetState:
+    """Ingest one ``(T, B, 2)`` fleet slab with the vmapped per-edge scan.
+
+    Strict stream order *within* each tenant (the paper's semantics) — each
+    tenant's row is bit-exact with ``dense_update`` / the sequential Pallas
+    kernel over its own stream, independent of how slabs were grouped into
+    fleet steps.  ``state`` is donated.
+    """
+    out = jax.vmap(
+        lambda s, e: scan_update(s, e, jnp.int32(v_max)), in_axes=(0, 0)
+    )(_cluster_view(state), edges.astype(jnp.int32))
+    return _fleet_view(out)

@@ -5,8 +5,8 @@ degree ``d``, community label ``c``, community volume ``v`` (all size ``n``,
 int32, dense node-id label space) plus an ``edges_seen`` counter of live
 edges ingested so far.
 
-Two wider siblings make *every* tier resumable and out-of-core rather than
-just the single-parameter ones:
+Three wider siblings make *every* tier resumable and out-of-core rather
+than just the single-parameter ones:
 
 * :class:`SweepState` — the §2.5 multi-``v_max`` sweep: one shared ``d`` of
   size ``n`` plus ``(A, n)`` ``c``/``v`` (degrees are parameter-independent;
@@ -14,6 +14,10 @@ just the single-parameter ones:
 * :class:`ShardedState` — the distributed tier: ``P`` per-shard
   ``ClusterState``s stacked on a leading shard axis, plus a batch cursor so
   arriving batches deal onto shards deterministically.
+* :class:`FleetState` — the multi-tenant fleet engine (DESIGN.md §13):
+  ``T`` *independent* per-tenant ``ClusterState``s stacked on a leading
+  tenant axis, advanced together by one vmapped / tenant-major-kernel
+  dispatch per fleet step (``repro.core.fleet``).
 
 All three are registered JAX pytrees, so they flow through ``jit``/``scan``
 and are serializable as-is by
@@ -253,6 +257,90 @@ class ShardedState:
         )
 
     def block_until_ready(self) -> "ShardedState":
+        for leaf in (self.d, self.c, self.v):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return self
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FleetState:
+    """Fleet-tier state: ``T`` independent per-tenant Algorithm-1 states
+    stacked on a leading tenant axis (DESIGN.md §13).
+
+    Unlike :class:`ShardedState` (one logical graph dealt across shards),
+    the tenants are *disjoint* streams over disjoint logical graphs — the
+    stack exists purely so the whole fleet advances with **one** donated
+    device dispatch per fleet step instead of ``T`` single-stream
+    dispatches.  Row ``t`` is bit-identical to what a standalone
+    single-stream run of tenant ``t`` would hold, which is what makes the
+    fleet suspend/resume and the per-tenant bit-identity tests exact.
+
+    ``edges_seen`` is per-tenant (a ``(T,)`` vector, not a scalar): each
+    tenant's live-edge count matches its standalone run.
+    """
+
+    d: Array  # (T, n) int32 per-tenant node degrees
+    c: Array  # (T, n) int32 per-tenant community labels (node-id space)
+    v: Array  # (T, n) int32 per-tenant community volumes
+    edges_seen: Array  # (T,) live edges ingested per tenant
+
+    @classmethod
+    def init(cls, n: int, tenants: int, *, numpy: bool = False) -> "FleetState":
+        if numpy:
+            return cls(
+                d=np.zeros((tenants, n), np.int32),
+                c=np.broadcast_to(
+                    np.arange(n, dtype=np.int32), (tenants, n)
+                ).copy(),
+                v=np.zeros((tenants, n), np.int32),
+                edges_seen=np.zeros(tenants, np.int64),
+            )
+        return cls(
+            d=jnp.zeros((tenants, n), jnp.int32),
+            c=jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (tenants, n)),
+            v=jnp.zeros((tenants, n), jnp.int32),
+            edges_seen=jnp.zeros(tenants, jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return int(self.d.shape[1])
+
+    @property
+    def tenants(self) -> int:
+        return int(self.d.shape[0])
+
+    def entry(self, tenant: int) -> ClusterState:
+        """Tenant ``tenant``'s slab as a plain :class:`ClusterState` — the
+        representation the single-stream API (finalize, refine, metrics)
+        understands."""
+        return ClusterState(
+            d=self.d[tenant],
+            c=self.c[tenant],
+            v=self.v[tenant],
+            edges_seen=self.edges_seen[tenant],
+        )
+
+    def to_numpy(self) -> "FleetState":
+        return FleetState(
+            d=np.asarray(self.d),
+            c=np.asarray(self.c),
+            v=np.asarray(self.v),
+            edges_seen=np.asarray(self.edges_seen, np.int64),
+        )
+
+    def to_device(self) -> "FleetState":
+        return FleetState(
+            d=jnp.asarray(self.d, jnp.int32),
+            c=jnp.asarray(self.c, jnp.int32),
+            v=jnp.asarray(self.v, jnp.int32),
+            edges_seen=jnp.asarray(self.edges_seen, jnp.int32),
+        )
+
+    def block_until_ready(self) -> "FleetState":
         for leaf in (self.d, self.c, self.v):
             if hasattr(leaf, "block_until_ready"):
                 leaf.block_until_ready()

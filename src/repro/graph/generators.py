@@ -95,7 +95,9 @@ def chung_lu_stream(
     return np.stack([perm[u], perm[v]], axis=1).astype(np.int32)
 
 
-def chung_lu_segments(n: int, gamma: float = 2.5, seed: int = 0):
+def chung_lu_segments(
+    n: int, gamma: float = 2.5, seed: int = 0, seed_offset: int = 0
+):
     """Segment generator for a power-law stream (``GeneratorSource`` form).
 
     Returns ``segment(start, length) -> (length, 2) int32`` where the RNG is
@@ -104,6 +106,12 @@ def chung_lu_segments(n: int, gamma: float = 2.5, seed: int = 0):
     with O(segment) edge memory, and a suspended run resumes mid-stream
     without replaying.  (A different realization than :func:`chung_lu_stream`,
     which draws the full stream from one RNG; same distribution.)
+
+    ``seed_offset`` folds a tenant index into the per-segment seed, so a
+    fleet of ``T`` sources (``seed_offset=t``) draws ``T`` independent
+    streams from one base ``seed`` without O(T) seed bookkeeping.  The
+    default ``0`` reproduces the historical single-stream realization
+    exactly (same seed sequence, same rows).
 
     The O(n) weight CDF and id permutation are computed once per source —
     node-space memory, like the clustering state itself.
@@ -114,9 +122,10 @@ def chung_lu_segments(n: int, gamma: float = 2.5, seed: int = 0):
     cdf[-1] = 1.0  # float cumsum undershoots 1.0; a draw past it would
     #               searchsorted to index n, off the end of `perm`
     perm = rng.permutation(n)
+    key = [seed] if seed_offset == 0 else [seed, 2, seed_offset]
 
     def segment(start: int, length: int) -> np.ndarray:
-        r = np.random.default_rng([seed, start])
+        r = np.random.default_rng(key + [start])
         u = np.searchsorted(cdf, r.random(length))
         v = np.searchsorted(cdf, r.random(length))
         v = np.where(u == v, (v + 1) % n, v)
@@ -130,14 +139,23 @@ def sbm_segments(
     n_communities: int,
     p_intra: float = 0.8,
     seed: int = 0,
+    seed_offset: int = 0,
 ):
     """Segment generator for a planted-partition stream + its ground truth.
 
     Returns ``(segment_fn, labels)``; like :func:`chung_lu_segments`, each
     segment is regenerable from its absolute offset alone.  The community
     assignment (O(n), node-space memory) is fixed by ``seed``.
+
+    ``seed_offset`` folds a tenant index into both the partition and the
+    per-segment seeds — a fleet of ``T`` sources (``seed_offset=t``) gets
+    ``T`` independent planted partitions and streams from one base
+    ``seed``.  The default ``0`` reproduces the historical realization
+    exactly.
     """
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(
+        seed if seed_offset == 0 else [seed, 3, seed_offset]
+    )
     labels = rng.integers(0, n_communities, size=n).astype(np.int32)
     order = np.argsort(labels, kind="stable")
     sorted_labels = labels[order]
@@ -146,9 +164,10 @@ def sbm_segments(
     sizes = ends - starts
     # See sbm_stream: empty communities must not be drawn for intra edges.
     nonempty = np.flatnonzero(sizes > 0)
+    key = [seed, 1] if seed_offset == 0 else [seed, 3, seed_offset]
 
     def segment(start: int, length: int) -> np.ndarray:
-        r = np.random.default_rng([seed, 1, start])
+        r = np.random.default_rng(key + [start])
         intra = r.random(length) < p_intra
         comm = nonempty[r.integers(0, len(nonempty), size=length)]
         ss = sizes[comm]

@@ -341,7 +341,11 @@ class BatchPipeline:
             inner.close()
 
     def _produce_mega(
-        self, k: int, start: Cursor, wavefront: Optional[int] = None
+        self,
+        k: int,
+        start: Cursor,
+        wavefront: Optional[int] = None,
+        wavefront_gap: Optional[int] = None,
     ) -> Iterator[MegaBatch]:
         """Raw megabatch producer: stack ``k`` consecutive batches into one
         ``(k, batch_edges, 2)`` buffer.  Runs entirely on the prefetch
@@ -391,7 +395,7 @@ class BatchPipeline:
                             (k - n_batches) * B
                         ).reshape(-1, B, 2)
                     if buf is not None and wavefront is not None:
-                        plan = plan_waves(buf, wavefront)
+                        plan = plan_waves(buf, wavefront, gap=wavefront_gap)
                         self._acquire(plan.nbytes)
                 except BaseException:
                     # a producer error between _acquire and yield: the buffer
@@ -428,6 +432,7 @@ class BatchPipeline:
         start: Union[int, Cursor] = 0,
         *,
         wavefront: Optional[int] = None,
+        wavefront_gap: Optional[int] = None,
     ) -> Iterator[MegaBatch]:
         """Yield ``(k, batch_edges, 2)`` megabatches from a stream position.
 
@@ -445,7 +450,7 @@ class BatchPipeline:
         if wavefront is not None and wavefront < 1:
             raise ValueError(f"wavefront width must be >= 1, got {wavefront}")
         inner = _prefetch_iter(
-            self._produce_mega(k, as_cursor(start), wavefront),
+            self._produce_mega(k, as_cursor(start), wavefront, wavefront_gap),
             self.prefetch,
             on_drop=lambda mb: self._release(self._mega_nbytes(mb)),
         )

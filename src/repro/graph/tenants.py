@@ -1,0 +1,261 @@
+"""Tenant-keyed demux: many per-tenant edge streams → one fleet slab.
+
+The fleet engine (DESIGN.md §13) advances ``T`` independent tenant streams
+with one device dispatch per fleet step.  :class:`TenantRouter` is the
+ingest half: it drains ``T`` per-tenant :class:`~repro.graph.sources
+.EdgeSource`\\ s under a :class:`~repro.graph.sources.MergedSource`-style
+deterministic arrival schedule and carves their rows, *per tenant*, into a
+``(T, B, 2)`` PAD-template staging buffer (:class:`FleetSlab`) on the
+prefetch thread.
+
+The batch-boundary contract — the router's half of the fleet bit-identity
+guarantee (``repro.core.fleet``) — is:
+
+* tenant ``t``'s dispatched slabs, concatenated, are exactly its stream;
+* every dispatched slab holds a *full* ``B``-row batch, except the final
+  slab once tenant ``t``'s source is exhausted, which may be short.
+
+That is precisely the batch sequence a standalone single-stream
+``BatchPipeline(source_t, B)`` yields, so each tenant's labels are
+bit-identical to its standalone run no matter how slabs were grouped into
+fleet steps.  Tenants with no full batch pending in a step get an all-PAD
+row (a true no-op in every fleet update path) — the ragged-fleet case.
+
+Arrival schedule: tenant ``t``'s ``r``-th row arrives at virtual time
+``r / rates[t]`` and rows are pulled in ``granule``-row turns, the schedule
+:class:`MergedSource` uses.  A fleet step is emitted once every unfinished
+tenant either has a full batch pending or is exhausted, and a tenant with a
+full batch pending is never pulled further (bounded pending memory).  That
+skip rule makes each tenant's pre-emit need *independent* — the set of
+turns pulled before an emit is the same whatever order the schedule visits
+tenants in — so slab content is rate-independent and the router pulls in
+tenant index order with a vectorised needy-tenant scan (an O(T) argmin per
+turn would cost O(T²) per fleet step and sink thousand-tenant fleets;
+``rates`` stay as pacing metadata for future partial-batch emission).  The
+producer is a pure function of the per-tenant *dispatched-row* vector: the
+whole fleet suspends/resumes from just that ``(T,)`` vector (one checkpoint
+leaf — rows pulled but not yet dispatched are simply re-pulled on resume;
+the per-tenant slab sequences, and therefore all labels, are unchanged).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.graph.pipeline import _prefetch_iter, pad_template, round_up
+from repro.graph.sources import EdgeSource, _SlicePuller, as_source
+
+
+class FleetSlab(NamedTuple):
+    """One fleet step's staged ingest: a fixed-shape ``(T, B, 2)`` buffer.
+
+    Row ``t`` holds tenant ``t``'s next batch (PAD tail for a short final
+    batch) or all-PAD if the tenant has nothing to dispatch this step.
+    """
+
+    edges: np.ndarray  # (T, B, 2) int32, PAD-padded
+    n_rows: np.ndarray  # (T,) int64 raw rows dispatched per tenant
+    offsets: np.ndarray  # (T,) int64 rows dispatched per tenant before this
+    active: int  # tenants with >= 1 real row in this slab
+
+
+class TenantRouter:
+    """Demux ``T`` per-tenant sources into fixed-shape fleet slabs.
+
+    ``batch_edges`` is rounded up to ``pad_multiple`` (the Jacobi/DMA chunk
+    of chunk-aligned fleet backends), exactly like ``BatchPipeline``.
+    Staging runs on a background prefetch thread (``prefetch`` slabs ahead)
+    so per-tenant parsing/generation/decoding overlaps the device's fleet
+    dispatch; ``peak_staging_bytes`` tracks staged buffers plus pulled-but-
+    undispatched pending rows.
+    """
+
+    def __init__(
+        self,
+        sources: Sequence,
+        batch_edges: int,
+        *,
+        rates: Optional[Sequence[int]] = None,
+        granule: Optional[int] = None,
+        pad_multiple: int = 1,
+        prefetch: int = 2,
+    ):
+        if not sources:
+            raise ValueError("TenantRouter needs at least one tenant source")
+        if batch_edges < 1:
+            raise ValueError(f"batch_edges must be >= 1, got {batch_edges}")
+        if pad_multiple < 1:
+            raise ValueError(f"pad_multiple must be >= 1, got {pad_multiple}")
+        self.sources: List[EdgeSource] = [as_source(s) for s in sources]
+        self.batch_edges = round_up(batch_edges, pad_multiple)
+        if rates is None:
+            rates = [1] * len(self.sources)
+        if len(rates) != len(self.sources):
+            raise ValueError(
+                f"{len(rates)} rates for {len(self.sources)} tenants"
+            )
+        self.rates = [int(w) for w in rates]
+        if any(w < 1 for w in self.rates):
+            raise ValueError(f"rates must be positive ints, got {rates}")
+        if granule is None:
+            granule = self.batch_edges
+        if granule < 1:
+            raise ValueError(f"granule must be >= 1, got {granule}")
+        self.granule = int(granule)
+        self.prefetch = max(0, int(prefetch))
+        self._ms = [int(s.count_edges()) for s in self.sources]
+        self.peak_staging_bytes = 0
+        self.slabs_produced = 0
+        self._inflight_bytes = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def tenants(self) -> int:
+        return len(self.sources)
+
+    def count_edges(self) -> List[int]:
+        """Per-tenant stream lengths (rows)."""
+        return list(self._ms)
+
+    def _acquire(self, nbytes: int) -> None:
+        self._inflight_bytes += nbytes
+        if self._inflight_bytes > self.peak_staging_bytes:
+            self.peak_staging_bytes = self._inflight_bytes
+
+    def _release(self, nbytes: int) -> None:
+        self._inflight_bytes -= nbytes
+
+    def _turn_remainder(self, a, t: int) -> int:
+        """Rows left in tenant ``t``'s current ``granule`` turn (a partial
+        turn is only possible immediately after a mid-turn resume)."""
+        turn_start = (a[t] // self.granule) * self.granule
+        take = min(self.granule, self._ms[t] - turn_start)
+        return turn_start + take - a[t]
+
+    # ------------------------------------------------------------------
+    def _produce(self, start_rows: np.ndarray) -> Iterator[FleetSlab]:
+        """Raw slab producer — runs entirely on the prefetch thread."""
+        T = len(self.sources)
+        B = self.batch_edges
+        r = np.asarray(start_rows, np.int64).copy()  # dispatched per tenant
+        ms = np.asarray(self._ms, np.int64)
+        for t in range(T):
+            if r[t] < 0 or r[t] > ms[t]:
+                raise ValueError(
+                    f"tenant {t} resume row {r[t]} outside [0, {ms[t]}]"
+                )
+        a = r.copy()  # arrived rows per tenant (dispatched + pending)
+        pending: List[List[np.ndarray]] = [[] for _ in range(T)]
+        have = np.zeros(T, np.int64)
+        pullers: List[Optional[_SlicePuller]] = [None] * T
+        try:
+            while True:
+                # Pull turns until every unfinished tenant has a full batch
+                # pending (or its stream ended).  Index order, not schedule
+                # order: the ready-skip rule makes the pulled turn set
+                # order-independent (module docstring), and the vectorised
+                # needy scan keeps the step O(T), not O(T^2).
+                while True:
+                    need = np.flatnonzero((have < B) & (a < ms))
+                    if need.size == 0:
+                        break
+                    for t in need:
+                        t = int(t)
+                        while have[t] < B and a[t] < ms[t]:
+                            take = self._turn_remainder(a, t)
+                            if pullers[t] is None:
+                                pullers[t] = _SlicePuller(
+                                    self.sources[t], int(a[t])
+                                )
+                            sl = np.asarray(pullers[t].take(take))
+                            self._acquire(int(sl.nbytes))
+                            pending[t].append(sl)
+                            have[t] += take
+                            a[t] += take
+
+                # Emit one fleet step: a full batch from every ready
+                # tenant, the short final batch from exhausted tenants,
+                # all-PAD rows for the rest.
+                takes = [0] * T
+                for t in range(T):
+                    if have[t] >= B:
+                        takes[t] = B
+                    elif a[t] >= ms[t] and have[t] > 0:
+                        takes[t] = int(have[t])  # t's final short batch
+                if not any(takes):
+                    return  # every tenant exhausted and drained
+                buf = np.empty((T, B, 2), np.int32)
+                self._acquire(buf.nbytes)
+                for t in range(T):
+                    k = takes[t]
+                    if k < B:
+                        buf[t, k:] = pad_template(B - k)
+                    if k == 0:
+                        continue
+                    pos = 0
+                    rest: List[np.ndarray] = []
+                    for sl in pending[t]:
+                        if pos >= k:
+                            rest.append(sl)
+                            continue
+                        use = min(k - pos, sl.shape[0])
+                        buf[t, pos : pos + use] = sl[:use]
+                        pos += use
+                        if use < sl.shape[0]:
+                            tail = sl[use:]
+                            rest.append(tail)
+                            # release only the consumed prefix; the tail view
+                            # stays counted until it is dispatched
+                            self._release(int(sl.nbytes) - int(tail.nbytes))
+                        else:
+                            self._release(int(sl.nbytes))
+                    pending[t] = rest
+                    have[t] -= k
+                yield FleetSlab(
+                    edges=buf,
+                    n_rows=np.asarray(takes, np.int64),
+                    offsets=r.copy(),
+                    active=sum(1 for k in takes if k),
+                )
+                r += np.asarray(takes, np.int64)
+        finally:
+            for sl_list in pending:
+                for sl in sl_list:
+                    self._release(int(sl.nbytes))
+            for p in pullers:
+                if p is not None:
+                    p.close()
+
+    def fleet_slabs(
+        self, start_rows: Optional[Sequence[int]] = None
+    ) -> Iterator[FleetSlab]:
+        """Yield fleet slabs from a per-tenant dispatched-row vector
+        (all-zeros for a fresh run; a restored checkpoint's ``tenant_rows``
+        leaf to resume)."""
+        if start_rows is None:
+            start_rows = np.zeros(len(self.sources), np.int64)
+        start_rows = np.asarray(start_rows, np.int64)
+        if start_rows.shape != (len(self.sources),):
+            raise ValueError(
+                f"start_rows must have shape ({len(self.sources)},), "
+                f"got {start_rows.shape}"
+            )
+        inner = _prefetch_iter(
+            self._produce(start_rows),
+            self.prefetch,
+            on_drop=lambda s: self._release(s.edges.nbytes),
+        )
+        prev: Optional[FleetSlab] = None
+        try:
+            for slab in inner:
+                if prev is not None:
+                    self._release(prev.edges.nbytes)
+                prev = slab
+                self.slabs_produced += 1
+                yield slab
+        finally:
+            if prev is not None:
+                self._release(prev.edges.nbytes)
+            inner.close()

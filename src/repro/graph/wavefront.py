@@ -42,12 +42,26 @@ waves early around hub nodes, and a sequential leftover is the one thing
 that can sink the speedup.  Trailing dead rows (PAD padding, self-loops at
 the very end) are trimmed — they constrain nothing and would only spend
 wave slots.
+
+Dead-gap merging (``gap``): historically *interior* dead rows (PAD rows,
+self-loops) occupied wave slots — harmless for bit-exactness (they are
+no-ops in every apply path) but ruinous for occupancy on PAD-interleaved
+streams such as ragged megabatch tails or fleet-style staging, where a
+mostly-dead batch burns a full wave per ``width`` dead rows.  With ``gap``
+set, waves pack only *live* rows: contiguous live runs are merged across
+interior dead gaps of up to ``gap`` rows, a longer gap closes the wave,
+and the skipped dead rows are dropped from staging entirely (counted in
+``dead_rows_skipped``).  Correctness is unchanged — dead rows commute with
+everything, so removing them never reorders live work — and the leftover
+suffix is still carved from the raw stream, so the sequential fallback
+path needs no new logic.  ``gap=None`` (the default) preserves the
+historical plans bit-for-bit.
 """
 
 from __future__ import annotations
 
 import time
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -62,10 +76,12 @@ class WavePlan(NamedTuple):
     leftover: np.ndarray  # (M, 2) int32 uncovered suffix (PAD-padded)
     meta: np.ndarray  # (2,) int32 [n_waves_used, leftover_rows]
     n_waves: int  # waves actually used (<= waves.shape[0])
-    rows_in_waves: int  # stream rows covered by waves
+    rows_in_waves: int  # stream rows staged into waves
     leftover_rows: int  # stream rows in the sequential leftover suffix
     plan_seconds: float  # host planning time (the overhead counter)
     nbytes: int  # bytes of *owned* buffers (template views excluded)
+    dead_rows_skipped: int = 0  # interior dead rows dropped from staging
+    #   (gap mode only; 0 for gap=None historical plans)
 
     @property
     def mean_wave_width(self) -> float:
@@ -92,19 +108,29 @@ def _prev_conflict(flat: np.ndarray, live: np.ndarray) -> np.ndarray:
     return p
 
 
-def plan_waves(edges: np.ndarray, width: int, *, slack: int = 4) -> WavePlan:
+def plan_waves(
+    edges: np.ndarray,
+    width: int,
+    *,
+    slack: int = 4,
+    gap: Optional[int] = None,
+) -> WavePlan:
     """Greedily color a (mega)batch into contiguous node-disjoint waves.
 
     ``edges`` is any ``(..., 2)`` int stream (a ``(K, B, 2)`` megabatch or
     a flat ``(m, 2)`` batch) — flattened in stream order.  ``width`` caps
-    rows per wave; ``slack`` scales the fixed wave budget.  Stateless per
-    call: planning depends only on the rows handed in, never on cluster
-    state, so checkpoints/cursors are untouched by wavefront mode.
+    rows per wave; ``slack`` scales the fixed wave budget; ``gap`` (module
+    docstring) packs only live rows, merging runs across interior dead
+    gaps of at most ``gap`` rows.  Stateless per call: planning depends
+    only on the rows handed in, never on cluster state, so
+    checkpoints/cursors are untouched by wavefront mode.
     """
     if width < 1:
         raise ValueError(f"wavefront width must be >= 1, got {width}")
     if slack < 1:
         raise ValueError(f"wavefront slack must be >= 1, got {slack}")
+    if gap is not None and gap < 0:
+        raise ValueError(f"wavefront gap must be >= 0, got {gap}")
     t0 = time.perf_counter()
     flat = np.ascontiguousarray(np.asarray(edges, np.int32).reshape(-1, 2))
     M = flat.shape[0]
@@ -118,20 +144,48 @@ def plan_waves(edges: np.ndarray, width: int, *, slack: int = 4) -> WavePlan:
 
     waves = np.empty((n_waves_max, width, 2), np.int32)
     counts = np.zeros(n_waves_max, np.int32)
-    s = 0
+    s = 0  # stream rows covered (waves + skipped interior dead rows)
     w = 0
-    while s < m_eff and w < n_waves_max:
-        hi = min(s + width, m_eff)
-        # the wave ends at the first row conflicting with a row >= s; a row
-        # never conflicts with itself (p[e] < e), so cnt >= 1 always
-        bad = np.flatnonzero(p[s:hi] >= s)
-        cnt = int(bad[0]) if bad.size else hi - s
-        waves[w, :cnt] = flat[s : s + cnt]
-        if cnt < width:
-            waves[w, cnt:] = pad_template(width - cnt)
-        counts[w] = cnt
-        s += cnt
-        w += 1
+    dead_rows_skipped = 0
+    rows_in_waves = 0
+    if gap is None:
+        # historical contiguous planning: dead rows occupy wave slots
+        while s < m_eff and w < n_waves_max:
+            hi = min(s + width, m_eff)
+            # the wave ends at the first row conflicting with a row >= s; a
+            # row never conflicts with itself (p[e] < e), so cnt >= 1 always
+            bad = np.flatnonzero(p[s:hi] >= s)
+            cnt = int(bad[0]) if bad.size else hi - s
+            waves[w, :cnt] = flat[s : s + cnt]
+            if cnt < width:
+                waves[w, cnt:] = pad_template(width - cnt)
+            counts[w] = cnt
+            s += cnt
+            w += 1
+        rows_in_waves = s
+    else:
+        # gap mode: waves take *consecutive live rows*, so the in-wave
+        # conflict test is unchanged — every live row in [seg[0], e) is in
+        # the wave, dead rows between them constrain nothing
+        li = 0
+        L = live_idx.size
+        while li < L and w < n_waves_max:
+            seg = live_idx[li : li + width]
+            # close at the first live row whose dead gap from its
+            # predecessor exceeds the budget, or that conflicts in-wave
+            brk = np.flatnonzero(
+                (np.diff(seg) - 1 > gap) | (p[seg[1:]] >= seg[0])
+            )
+            cnt = int(brk[0]) + 1 if brk.size else int(seg.size)
+            waves[w, :cnt] = flat[seg[:cnt]]
+            if cnt < width:
+                waves[w, cnt:] = pad_template(width - cnt)
+            counts[w] = cnt
+            li += cnt
+            w += 1
+        s = m_eff if li >= L else int(live_idx[li])
+        rows_in_waves = li
+        dead_rows_skipped = s - li
     if w < n_waves_max:
         waves[w:] = pad_template((n_waves_max - w) * width).reshape(-1, width, 2)
 
@@ -151,8 +205,9 @@ def plan_waves(edges: np.ndarray, width: int, *, slack: int = 4) -> WavePlan:
         leftover=leftover,
         meta=meta,
         n_waves=w,
-        rows_in_waves=s,
+        rows_in_waves=rows_in_waves,
         leftover_rows=leftover_rows,
         plan_seconds=time.perf_counter() - t0,
         nbytes=waves.nbytes + counts.nbytes + meta.nbytes + owned,
+        dead_rows_skipped=dead_rows_skipped,
     )

@@ -1,1 +1,4 @@
-from repro.kernels.edge_stream.ops import edge_stream_cluster  # noqa: F401
+from repro.kernels.edge_stream.ops import (  # noqa: F401
+    edge_stream_cluster,
+    pallas_fleet_update,
+)

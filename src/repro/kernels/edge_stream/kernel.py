@@ -339,6 +339,68 @@ def edge_stream_wavefront_kernel(
     )
 
 
+def edge_stream_fleet_kernel(
+    edges_ref, d0_ref, c0_ref, v0_ref, d_ref, c_ref, v_ref, *, v_max: int,
+    batch: int,
+):
+    """Tenant-major fleet kernel: grid step ``t`` ingests tenant ``t``.
+
+    The fleet's ``(T, B, 2)`` staged slab and ``(T, n)`` state arrays live
+    in HBM; the Pallas pipeline DMAs tenant ``t``'s ``(1, B, 2)`` edge slab
+    and ``(1, n)`` d/c/v slabs into VMEM per grid step (tenant ``t+1``'s
+    tiles stream in while tenant ``t``'s sequential edge loop runs — same
+    double buffering the grid-pipelined single-stream kernel gets for
+    chunks).  Per-tenant semantics are the strict-stream-order
+    :func:`_apply_edge` loop, so row ``t`` is bit-exact with a standalone
+    sequential run of tenant ``t`` — tenants never share state, so the
+    grid order is irrelevant.  All-PAD slabs (idle tenants) are no-ops.
+    """
+    d_ref[...] = d0_ref[...]
+    c_ref[...] = c0_ref[...]
+    v_ref[...] = v0_ref[...]
+    # Squeeze the leading tenant-block axis so the shared per-edge update
+    # sees plain (n,) refs.
+    dr, cr, vr = d_ref.at[0], c_ref.at[0], v_ref.at[0]
+
+    def body(e, carry):
+        _apply_edge(
+            edges_ref[0, e, 0], edges_ref[0, e, 1], dr, cr, vr, v_max=v_max
+        )
+        return carry
+
+    jax.lax.fori_loop(0, batch, body, None)
+
+
+def build_fleet_call(
+    n: int, tenants: int, batch: int, v_max: int, interpret: bool
+):
+    """One fused dispatch over a ``(T, B, 2)`` fleet slab: the tenant axis
+    is the grid, per-tenant state tiles are DMA'd HBM→VMEM→HBM by the
+    Pallas pipeline (``3n`` ints per tenant — only one tenant's slabs are
+    VMEM-resident at a time, so fleet size is bounded by HBM, not VMEM)."""
+    kernel = functools.partial(
+        edge_stream_fleet_kernel, v_max=v_max, batch=batch
+    )
+    state_spec = pl.BlockSpec((1, n), lambda t: (t, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(tenants,),
+        in_specs=[
+            pl.BlockSpec((1, batch, 2), lambda t: (t, 0, 0)),
+            state_spec,
+            state_spec,
+            state_spec,
+        ],
+        out_specs=[state_spec, state_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((tenants, n), jnp.int32),  # d
+            jax.ShapeDtypeStruct((tenants, n), jnp.int32),  # c
+            jax.ShapeDtypeStruct((tenants, n), jnp.int32),  # v
+        ],
+        interpret=interpret,
+    )
+
+
 def build_wavefront_call(
     n: int,
     width: int,

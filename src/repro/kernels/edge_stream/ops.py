@@ -7,10 +7,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.state import ClusterState, count_live_edges
+from repro.core.state import ClusterState, FleetState, count_live_edges
 from repro.graph.pipeline import PAD, pad_edges_to_chunks
 from repro.kernels.edge_stream.kernel import (
     build_call,
+    build_fleet_call,
     build_megabatch_call,
     build_wavefront_call,
 )
@@ -134,6 +135,48 @@ def pallas_wavefront_update(
     return (
         ClusterState(d=d, c=c, v=v, edges_seen=state.edges_seen + seen),
         stats,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_max", "interpret"),
+    donate_argnums=(0,),
+)
+def pallas_fleet_update(
+    state: FleetState,
+    edges: jax.Array,
+    v_max: int,
+    interpret: bool = True,
+) -> FleetState:
+    """Tenant-major fleet Pallas tier: ingest a ``(T, B, 2)`` staged slab
+    into a ``(T, n)`` :class:`FleetState` in one kernel launch.
+
+    The tenant axis is the Pallas grid — per-tenant d/c/v tiles are
+    pipelined HBM→VMEM→HBM while each tenant's slab runs the sequential
+    per-edge loop (``kernel.edge_stream_fleet_kernel``), so every tenant
+    row is bit-exact with ``core.streaming.dense_update`` over its own
+    stream regardless of how the router grouped slabs into fleet steps.
+    ``state`` is donated (the ``partial_fit_fleet`` contract).
+    """
+    tenants, n = state.d.shape[0], state.d.shape[1]
+    B = edges.shape[1]
+    e = edges.astype(jnp.int32)
+    call = build_fleet_call(n, tenants, B, int(v_max), interpret)
+    d, c, v = call(
+        e,
+        state.d.astype(jnp.int32),
+        state.c.astype(jnp.int32),
+        state.v.astype(jnp.int32),
+    )
+    live = (e[:, :, 0] != PAD) & (e[:, :, 1] != PAD) & (
+        e[:, :, 0] != e[:, :, 1]
+    )
+    return FleetState(
+        d=d,
+        c=c,
+        v=v,
+        edges_seen=state.edges_seen + jnp.sum(live, axis=1, dtype=jnp.int32),
     )
 
 

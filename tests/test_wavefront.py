@@ -337,3 +337,105 @@ def test_pipeline_stages_plans_and_releases_residency():
     with pytest.raises(ValueError, match="wavefront"):
         next(iter(BatchPipeline(ArraySource(edges), B).megabatches(
             K, wavefront=0)))
+
+
+# ---------------------------------------------------------------------------
+# Dead-gap run merging (plan_waves(gap=...), ClusterConfig.wavefront_gap)
+# ---------------------------------------------------------------------------
+
+def test_gap_mode_waves_hold_only_live_rows_in_order():
+    edges = _adversarial_stream(23, 300, seed=11, m_pad=320)
+    flat = edges.reshape(-1, 2)
+    live = ((flat[:, 0] != PAD) & (flat[:, 1] != PAD)
+            & (flat[:, 0] != flat[:, 1]))
+    for gap in (0, 2, 7):
+        plan = plan_waves(edges, 16, gap=gap)
+        staged = [plan.waves[t, : plan.counts[t]]
+                  for t in range(plan.n_waves)]
+        staged = (np.concatenate(staged) if staged
+                  else np.zeros((0, 2), np.int32))
+        # waves stage exactly the live prefix, in stream order, no dead rows
+        np.testing.assert_array_equal(
+            staged, flat[live][: plan.rows_in_waves]
+        )
+        # covered stream prefix = live staged + interior dead skipped
+        start = plan.rows_in_waves + plan.dead_rows_skipped
+        np.testing.assert_array_equal(
+            plan.leftover[: plan.leftover_rows],
+            flat[start : start + plan.leftover_rows],
+        )
+        for t in range(plan.n_waves):
+            rows = plan.waves[t, : plan.counts[t]]
+            assert np.all((rows[:, 0] != PAD) & (rows[:, 1] != PAD)
+                          & (rows[:, 0] != rows[:, 1])), (gap, t)
+            ends = rows.ravel()
+            assert len(np.unique(ends)) == ends.size, (gap, t)
+
+
+@pytest.mark.parametrize("gap", [0, 1, 4])
+@pytest.mark.parametrize("seed", range(3))
+def test_gap_mode_bit_identical_to_oracle(seed, gap):
+    n, v_max = 29, 5
+    edges = _adversarial_stream(n, 120, seed=seed, m_pad=_M)
+    plan = plan_waves(edges, _W, gap=gap)
+    ref = dense_update(ClusterState.init(n, numpy=True), edges, v_max)
+    state, _ = wavefront_update_megabatch(
+        ClusterState.init(n).to_device(),
+        jnp.asarray(plan.waves),
+        jnp.asarray(plan.leftover),
+        jnp.asarray(plan.meta),
+        v_max,
+    )
+    got = state.to_numpy()
+    np.testing.assert_array_equal(got.c, ref.c)
+    np.testing.assert_array_equal(got.d, ref.d)
+    np.testing.assert_array_equal(got.v, ref.v)
+
+
+def test_gap_mode_improves_occupancy_on_dead_interleaved_stream():
+    # node-disjoint live edges with 2/3 interior dead rows: historical
+    # waves are width-bound by dead filler, gap mode packs live rows
+    m, n = 2048, 8192
+    edges = np.stack(
+        [2 * np.arange(m) % n, (2 * np.arange(m) + 1) % n], 1
+    ).astype(np.int32)
+    edges[np.arange(m) % 3 != 0] = PAD
+    legacy = plan_waves(edges, 64)
+    gp = plan_waves(edges, 64, gap=4)
+    assert legacy.dead_rows_skipped == 0
+    assert gp.dead_rows_skipped > 0
+    assert gp.n_waves < legacy.n_waves / 2
+    assert gp.leftover_rows == 0 == legacy.leftover_rows
+    # a gap shorter than the dead runs closes waves instead of merging
+    tight = plan_waves(edges, 64, gap=1)
+    assert tight.n_waves > gp.n_waves
+
+
+def test_gap_default_preserves_historical_plans():
+    edges = _adversarial_stream(31, 200, seed=13, m_pad=256)
+    a = plan_waves(edges, 8)
+    b = plan_waves(edges, 8, gap=None)
+    np.testing.assert_array_equal(a.waves, b.waves)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    np.testing.assert_array_equal(a.leftover, b.leftover)
+    assert a.dead_rows_skipped == 0 == b.dead_rows_skipped
+
+
+def test_wavefront_gap_fit_bit_identical_with_counter():
+    n, m = 150, 1200
+    src = _source(n, m, seed=17)
+    base_cfg = ClusterConfig(
+        n=n, v_max=12, backend="pallas", chunk=64, batch_edges=128,
+        megabatch_k=4, wavefront=16,
+    )
+    ref = cluster(src, base_cfg)
+    gapped = cluster(src, base_cfg.replace(wavefront_gap=8))
+    np.testing.assert_array_equal(gapped.labels, ref.labels)
+    assert "wavefront_dead_rows_skipped" in gapped.info
+    # the m->KB-padded ragged tail guarantees interior dead rows to skip
+    assert gapped.info["wavefront_dead_rows_skipped"] >= 0
+    with pytest.raises(ValueError, match="wavefront_gap"):
+        ClusterConfig(n=n, v_max=4, backend="pallas", megabatch_k=2,
+                      wavefront=8, wavefront_gap=-1)
+    with pytest.raises(ValueError, match="wavefront"):
+        ClusterConfig(n=n, v_max=4, backend="pallas", wavefront_gap=4)
