@@ -368,21 +368,39 @@ def compressed_stream():
     rows = []
     with tempfile.TemporaryDirectory() as d:
         # dvc-v1 rides along so the decode-fast-path win (DVE2 fixed-width
-        # columns vs the per-byte varint loop) stays visible per commit
+        # columns vs the per-byte varint loop) stays visible per commit;
+        # dvc-v3 is the device-decodable lane layout (DESIGN.md §14)
         for name, codec in (
             ("raw", RawCodec()),
             ("dvc", DeltaVarintCodec()),
             ("dvc-v1", DeltaVarintCodec(version=1)),
+            ("dvc-v3", DeltaVarintCodec(version=3)),
         ):
             path = os.path.join(d, f"s.{name}")
             t0 = time.time()
             src = CodecFileSource.write(path, edges, codec)
             enc_s = time.time() - t0
+            # Corrected decode measurement: stage every slice into a
+            # preallocated int32 buffer — the copy-out cost pipeline
+            # staging actually pays.  The legacy sum-reduction fields below
+            # let raw memmap slices ride lazy page faults + a cheap
+            # reduction instead of a real materialization, flattering the
+            # raw row; both field sets are kept for one release so baseline
+            # trajectories can cross over.
+            stage = np.empty((m, 2), np.int32)
+            t0 = time.time()
+            pos = 0
+            for sl in src.iter_slices(0):
+                k = len(sl)
+                stage[pos : pos + k] = sl
+                pos += k
+            copy_s = time.time() - t0
+            assert pos == m and np.array_equal(stage, edges)
             t0 = time.time()
             sink = 0
             for sl in src.iter_slices(0):
-                # reduce every row: raw slices are lazy memmap views, so the
-                # timed loop must fault the pages or it measures nothing
+                # legacy loop (deprecated, one-release overlap): reduces
+                # every row but never materializes the staging buffer
                 sink += int(np.asarray(sl, np.int64).sum())
             dec_s = time.time() - t0
             assert sink == int(edges.astype(np.int64).sum())
@@ -391,10 +409,170 @@ def compressed_stream():
                 "codec": name, "m": m,
                 "bytes_per_edge": nbytes / m,
                 "ratio_vs_raw": nbytes / (8 * m),
-                "encode_s": enc_s, "decode_s": dec_s,
-                # raw-equivalent stream bandwidth the decode sustains
-                "decode_mb_per_s": 8 * m / dec_s / 1e6,
+                "encode_s": enc_s,
+                # raw-equivalent stream bandwidth the encoder sustains
+                "encode_mb_per_s": 8 * m / enc_s / 1e6,
+                "decode_s": dec_s,  # deprecated: sum-reduction loop
+                "decode_mb_per_s": 8 * m / dec_s / 1e6,  # deprecated
+                "decode_copyout_s": copy_s,
+                # raw-equivalent bandwidth of a real copy-out decode
+                "decode_copyout_mb_per_s": 8 * m / copy_s / 1e6,
             })
+    return rows
+
+
+def device_ingest():
+    """Device-resident compressed ingest rows (DESIGN.md §14).
+
+    Two row families.  *Staging* rows time the host-side cost of the
+    ingest leg — what the producer thread pays per edge to hand the device
+    a ready buffer (``prefetch=0`` so both paths pay their producer on the
+    timed thread).  The host-decode path pays codec block decode plus the
+    stacking memcpy into the ``(K * B, 2)`` slab; the compressed path pays
+    only the block memcpy into the payload slab plus descriptor assembly.
+    That host-cost ratio is ``speedup_vs_host`` and carries the >= 3x
+    floor in the baseline diff: in steady state device decode overlaps
+    staging of the next megabatch (DESIGN.md §14), so the host-side cost
+    *is* the sustained ingest rate wherever the accelerator decodes at
+    device bandwidth.  On this CPU-only runner the decode kernel runs as
+    the jitted pure-JAX reference; its wall time is reported separately as
+    ``emulated_decode_rows_per_s`` (an emulation artifact, not a device
+    number, and not part of the gated ratio).
+
+    *End-to-end* rows run the same ``.dvc`` stream through
+    ``StreamClusterer.fit`` with ``device_decode`` off/on; labels are
+    asserted bit-identical and the dispatch counts equal in-suite (the §14
+    contract).  The fallback-segment rate (varint/u8 blocks the device
+    cannot decode) is structural in the baseline diff.
+    """
+    import os
+    import tempfile
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.cluster import ClusterConfig, StreamClusterer
+    from repro.core.decode import decode_megabatch
+    from repro.graph.codecs import DeltaVarintCodec
+    from repro.graph.pipeline import BatchPipeline
+    from repro.graph.sources import CodecFileSource
+
+    # adjacency-ordered local stream (small positive j deltas — the shape
+    # DVE3 fixed blocks are built for) with one far-edge burst so exactly
+    # one codec block exercises the raw-fallback staging path
+    n, m = 20_000, 400_000
+    rng = np.random.default_rng(23)
+    i = np.sort(rng.integers(0, n - 65, m).astype(np.int64))
+    edges = np.stack([i, i + rng.integers(1, 65, m)], 1).astype(np.int32)
+    edges[m // 2 : m // 2 + 128, 1] = rng.integers(0, n, 128)
+    B, K = 1 << 13, 16
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "s.dvc3")
+        CodecFileSource.write(
+            path, edges, DeltaVarintCodec(block_edges=B, version=3))
+
+        def drain_host():
+            pipe = BatchPipeline(CodecFileSource(path), B, prefetch=0)
+            t0 = time.time()
+            staged = 0
+            for mb in pipe.megabatches(K):
+                staged += mb.n_rows
+            return staged / (time.time() - t0)
+
+        def drain_device():
+            # host-side cost only: compressed staging to a device-ready
+            # payload + descriptor table (the decode itself rides the
+            # device, overlapped with staging the next megabatch)
+            pipe = BatchPipeline(CodecFileSource(path), B, prefetch=0)
+            t0 = time.time()
+            staged = fb_segs = segs = 0
+            cmegas = []
+            for cm in pipe.compressed_megabatches(K):
+                staged += cm.n_rows
+                segs += cm.n_desc
+                fb_segs += int(np.count_nonzero(
+                    cm.desc[: cm.n_desc, 0] == 2))  # D_KIND == DESC_RAW
+                cmegas.append(cm)
+            return staged / (time.time() - t0), fb_segs, segs, cmegas
+
+        def emulate_decode(cmegas):
+            # CPU-only stand-in for the device kernel: jitted reference
+            # decode over the staged slabs (reported, never gated)
+            staged = [(jnp.asarray(cm.payload), jnp.asarray(cm.desc),
+                       cm.window, cm.out_rows, cm.n_rows) for cm in cmegas]
+            for pay, de, w, o, _ in staged:  # warmup/compile
+                decode_megabatch(pay, de, w, o).block_until_ready()
+            t0 = time.time()
+            out, rows_done = None, 0
+            for pay, de, w, o, nr in staged:
+                out = decode_megabatch(pay, de, w, o)
+                rows_done += nr
+            out.block_until_ready()
+            return rows_done / (time.time() - t0)
+
+        drain_host()  # warmup (page cache)
+        drain_device()  # warmup
+        host_eps = max(drain_host(), drain_host())
+        (dev_eps, fb_segs, segs, cmegas) = max(
+            drain_device(), drain_device(), key=lambda r: r[0])
+        emu_rps = emulate_decode(cmegas)
+        rows.append({
+            "mode": "staging-host-decode", "m": m, "batch_edges": B,
+            "megabatch_k": K, "edges_per_s": host_eps,
+            "decode_mb_per_s": 8 * host_eps / 1e6,
+        })
+        rows.append({
+            "mode": "staging-device-decode", "m": m, "batch_edges": B,
+            "megabatch_k": K, "edges_per_s": dev_eps,
+            "decode_mb_per_s": 8 * dev_eps / 1e6,
+            "speedup_vs_host": dev_eps / host_eps,
+            "emulated_decode_rows_per_s": emu_rps,
+            "fallback_segments": fb_segs,
+            "fallback_segment_rate": fb_segs / segs if segs else 0.0,
+        })
+
+        # end-to-end fit(): same stream, device_decode off vs on
+        base = ClusterConfig(n=n, v_max=64, backend="chunked", chunk=B,
+                             batch_edges=B, megabatch_k=K)
+        dd = base.replace(device_decode=True)
+        for cfg in (base, dd):  # warmup/compile
+            StreamClusterer(cfg).fit(CodecFileSource(path))
+        results = {}
+        for mode, cfg in (("host", base), ("device", dd)):
+            sc = StreamClusterer(cfg)
+            t0 = time.time()
+            sc.fit(CodecFileSource(path))
+            sc.state.block_until_ready()
+            dt = time.time() - t0
+            results[mode] = (sc.finalize(), dt)
+        res_h, t_h = results["host"]
+        res_d, t_d = results["device"]
+        if not np.array_equal(res_h.labels, res_d.labels):
+            raise RuntimeError(
+                "device_decode labels diverged from the host-decode path")
+        if res_h.info["stream_dispatches"] != res_d.info["stream_dispatches"]:
+            raise RuntimeError(
+                f"device_decode changed the dispatch count: "
+                f"{res_h.info['stream_dispatches']} -> "
+                f"{res_d.info['stream_dispatches']}")
+        rows.append({
+            "mode": "fit-host-decode", "m": m, "batch_edges": B,
+            "megabatch_k": K, "seconds": t_h, "edges_per_s": m / t_h,
+            "dispatches": res_h.info["stream_dispatches"],
+        })
+        rows.append({
+            "mode": "fit-device-decode", "m": m, "batch_edges": B,
+            "megabatch_k": K, "seconds": t_d, "edges_per_s": m / t_d,
+            "dispatches": res_d.info["stream_dispatches"],
+            "speedup_vs_host": t_h / t_d,
+            "decoded_megabatches":
+                res_d.info["device_decoded_megabatches"],
+            "fallback_rows": res_d.info["device_fallback_rows"],
+            "fallback_segment_rate":
+                res_d.info["device_fallback_segment_rate"],
+        })
     return rows
 
 
@@ -422,6 +600,7 @@ def run():
         "device_pipeline": device_pipeline(),
         "kernel_wavefront": kernel_wavefront(),
         "compressed_stream": compressed_stream(),
+        "device_ingest": device_ingest(),
         "fleet": fleet(),
         "memory": memory_footprint.run(),
     }
@@ -433,7 +612,7 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
     problems = []
     for key in ("table1_speed", "table2_quality", "streaming_tiers",
                 "device_pipeline", "kernel_wavefront", "compressed_stream",
-                "fleet", "memory"):
+                "device_ingest", "fleet", "memory"):
         if (key in baseline) != (key in report):
             problems.append(f"suite {key!r} appeared/disappeared")
 
@@ -550,6 +729,38 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
             if fr is not None and not 0.0 <= fr <= 1.0:
                 problems.append(
                     f"kernel_wavefront fallback_rate {fr} out of range")
+    if "device_ingest" in baseline and "device_ingest" in report:
+        got, want = ids(report["device_ingest"], "mode"), ids(
+            baseline["device_ingest"], "mode")
+        if got != want:
+            problems.append(f"device_ingest modes changed: {want} -> {got}")
+        for row in report.get("device_ingest", []):
+            if row.get("mode") == "staging-device-decode":
+                for field in ("edges_per_s", "decode_mb_per_s",
+                              "speedup_vs_host", "fallback_segment_rate",
+                              "emulated_decode_rows_per_s"):
+                    if field not in row:
+                        problems.append(f"device_ingest lost {field!r}")
+                # the §14 perf claim itself: a same-runner host-side cost
+                # ratio over the identical compressed stream, so it travels
+                # across machines — compressed staging must keep the host
+                # at least 3x cheaper per edge than host-decode staging
+                speedup = row.get("speedup_vs_host")
+                if speedup is not None and speedup < 3.0:
+                    problems.append(
+                        f"device_ingest speedup_vs_host {speedup:.2f} < 3.0 "
+                        "— compressed-ingest throughput claim regressed")
+                fr = row.get("fallback_segment_rate")
+                if fr is not None and not 0.0 <= fr <= 1.0:
+                    problems.append(
+                        f"device_ingest fallback_segment_rate {fr} out of "
+                        "range")
+            if row.get("mode") == "fit-device-decode":
+                for field in ("edges_per_s", "dispatches",
+                              "decoded_megabatches", "fallback_rows",
+                              "fallback_segment_rate"):
+                    if field not in row:
+                        problems.append(f"device_ingest lost {field!r}")
     if "fleet" in baseline and "fleet" in report:
         got, want = ids(report["fleet"], "mode"), ids(baseline["fleet"],
                                                       "mode")
@@ -585,7 +796,8 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
             problems.append(f"codecs changed: {want} -> {got}")
         for row in report.get("compressed_stream", []):
             for field in ("bytes_per_edge", "ratio_vs_raw",
-                          "decode_mb_per_s"):
+                          "decode_mb_per_s", "decode_copyout_mb_per_s",
+                          "encode_mb_per_s"):
                 if field not in row:
                     problems.append(
                         f"codec {row.get('codec')!r} lost {field!r}")
@@ -637,7 +849,14 @@ def main(argv=None):
               f"edges/s{extra}")
     for r in report["compressed_stream"]:
         print(f"smoke/codec-{r['codec']},{r['bytes_per_edge']:.2f} B/edge,"
-              f"{r['decode_mb_per_s']:.0f} MB/s decode")
+              f"{r['decode_copyout_mb_per_s']:.0f} MB/s decode,"
+              f"{r['encode_mb_per_s']:.0f} MB/s encode")
+    for r in report["device_ingest"]:
+        extra = (f",x{r['speedup_vs_host']:.2f}"
+                 f",fallback={r['fallback_segment_rate']:.3f}"
+                 if "speedup_vs_host" in r else "")
+        print(f"smoke/ingest-{r['mode']},{r['edges_per_s']:.0f} edges/s"
+              f"{extra}")
     for r in report["fleet"]:
         extra = (f",x{r['speedup_vs_looped']:.2f}"
                  f",staging={r['peak_staging_bytes']}"

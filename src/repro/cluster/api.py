@@ -43,7 +43,7 @@ from repro.cluster.config import ClusterConfig
 from repro.cluster.refine import RefineRuntime
 from repro.cluster.registry import Backend, BackendResult, get_backend
 from repro.graph.codecs import Cursor
-from repro.graph.pipeline import BatchPipeline
+from repro.graph.pipeline import D_KIND, DESC_RAW, BatchPipeline
 from repro.graph.wavefront import plan_waves
 from repro.graph.sources import ArraySource, EdgeSource, as_source
 
@@ -366,9 +366,19 @@ class StreamClusterer:
         self.wavefront_leftover_rows = 0
         self.wavefront_dead_rows_skipped = 0
         self.wavefront_plan_seconds = 0.0
+        # adaptive widths chosen per planned megabatch (wavefront="auto";
+        # fixed-W runs record the fixed width) — surfaced as the
+        # ``wavefront_widths`` info counter
+        self.wavefront_widths: list = []
         # (2,) device array [live_waves, fallback_waves], accumulated as lazy
         # device adds — no host sync until finalize() reads it
         self._wavefront_stats = None
+        # Device-decode counters (DESIGN.md §14), accumulated per compressed
+        # megabatch dispatched through the backend's decode_fn
+        self.device_decoded_megabatches = 0
+        self.device_fallback_rows = 0
+        self.device_fallback_segments = 0
+        self.device_total_segments = 0
 
     # ------------------------------------------------------------------
     @property
@@ -470,6 +480,7 @@ class StreamClusterer:
             self.wavefront_leftover_rows += plan.leftover_rows
             self.wavefront_dead_rows_skipped += plan.dead_rows_skipped
             self.wavefront_plan_seconds += plan.plan_seconds
+            self.wavefront_widths.append(int(plan.width))
         else:
             result = self._backend.megabatch_fn(
                 edge_batches, self.config, self._state
@@ -487,6 +498,39 @@ class StreamClusterer:
         self._cursor = Cursor(self._cursor.row + rows)
         self.stream_dispatches += 1
         self.stream_megabatches += 1
+        return self
+
+    def partial_fit_cmegabatch(self, cmega) -> "StreamClusterer":
+        """Ingest one :class:`~repro.graph.pipeline.CompressedMegaBatch` —
+        DVE3 payload bytes plus a descriptor table — through the backend's
+        device decode path (DESIGN.md §14); returns ``self`` for chaining.
+
+        One fused decode→update dispatch per call, exactly like
+        :meth:`partial_fit_megabatch` dispatches once per staged megabatch;
+        labels are bit-identical to host-decoding the same rows, and the
+        cursor advances by the same raw row count, so checkpoints taken on
+        either path resume cleanly into the other.
+        """
+        if self._backend.decode_fn is None:
+            raise ValueError(
+                f"backend {self.config.backend!r} has no device decode "
+                "path; use partial_fit_megabatch with host-decoded edges"
+            )
+        result = self._backend.decode_fn(
+            cmega.validate(), self.config, self._state
+        )
+        self._state = result.state
+        self._last_result = result
+        self._cursor = Cursor(self._cursor.row + int(cmega.n_rows))
+        self.stream_dispatches += 1
+        self.stream_megabatches += 1
+        self.device_decoded_megabatches += 1
+        self.device_fallback_rows += int(cmega.fallback_rows)
+        kinds = np.asarray(cmega.desc[: cmega.n_desc, D_KIND])
+        self.device_fallback_segments += int(
+            np.count_nonzero(kinds == DESC_RAW)
+        )
+        self.device_total_segments += int(cmega.n_desc)
         return self
 
     def fit(
@@ -537,9 +581,37 @@ class StreamClusterer:
             and K > 1
             and self._backend.megabatch_fn is not None
         )
+        # Device-resident compressed ingest (DESIGN.md §14): stage payload
+        # bytes + descriptor tables and let the backend's decode_fn unpack
+        # them on device.  Requires a block-codec source — anything else
+        # (arrays, text files) falls through to host-decoded staging, so
+        # device_decode=True is safe to set unconditionally.
+        use_cmega = (
+            use_mega
+            and config.device_decode
+            and self._backend.decode_fn is not None
+            and getattr(source, "block_rows", None) is not None
+            and hasattr(source, "scan_blocks")
+        )
         n = 0
         exhausted = False
-        if use_mega and (max_batches is None or max_batches >= K):
+        if use_cmega and (max_batches is None or max_batches >= K):
+            cmegas = pipe.compressed_megabatches(K, start=self._cursor)
+            try:
+                exhausted = True  # flipped back if we stop for the budget
+                for cm in cmegas:
+                    self.partial_fit_cmegabatch(cm)
+                    # refresh the resume token (see the per-batch loop below)
+                    self._cursor = source.cursor_at(self._cursor.row)
+                    n += cm.n_batches
+                    if cm.n_batches < K:
+                        break  # ragged tail: the stream is exhausted
+                    if max_batches is not None and max_batches - n < K:
+                        exhausted = False
+                        break
+            finally:
+                cmegas.close()
+        elif use_mega and (max_batches is None or max_batches >= K):
             # waves are planned on the pipeline's prefetch thread while the
             # megabatch is staged (None when the backend has no wavefront_fn
             # or the knob is unset — partial_fit_megabatch then ignores it)
@@ -650,6 +722,18 @@ class StreamClusterer:
             info["wavefront_live_waves"] = live
             info["wavefront_fallback_waves"] = fall
             info["wavefront_fallback_rate"] = fall / live if live else 0.0
+            info["wavefront_widths"] = list(self.wavefront_widths)
+        if self.device_decoded_megabatches:  # §14 counters
+            info = dict(info)
+            info["device_decoded_megabatches"] = self.device_decoded_megabatches
+            info["device_fallback_rows"] = self.device_fallback_rows
+            info["device_fallback_segments"] = self.device_fallback_segments
+            info["device_total_segments"] = self.device_total_segments
+            info["device_fallback_segment_rate"] = (
+                self.device_fallback_segments / self.device_total_segments
+                if self.device_total_segments
+                else 0.0
+            )
         # The device tiers *donate* their state buffers (chunked / pallas /
         # multiparam / sharded updates), so the live self._state — which
         # result.state/labels may alias via to_device() — is consumed by the

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import multiparam as _multiparam
 from repro.core.chunked import chunked_update, chunked_update_megabatch
+from repro.core.decode import chunked_decode_update_megabatch
 from repro.core.distributed import merge_sharded_state, sharded_update
 from repro.core.fleet import fleet_update_chunked, fleet_update_scan
 from repro.core.state import ClusterState, ShardedState, SweepState
@@ -40,6 +41,7 @@ from repro.core.streaming import dense_update, oracle_init, oracle_update, scan_
 from repro.cluster.registry import BackendResult, register_backend
 from repro.core.wavefront import wavefront_update_megabatch
 from repro.kernels.edge_stream.ops import (
+    pallas_decode_update_megabatch,
     pallas_fleet_update,
     pallas_update,
     pallas_update_megabatch,
@@ -148,6 +150,28 @@ def _pallas_wavefront(plan, config, state) -> BackendResult:
     )
 
 
+def _pallas_decode(cmega, config, state) -> BackendResult:
+    """Device-resident compressed ingest (DESIGN.md §14): one fused
+    decode→update dispatch per :class:`~repro.graph.pipeline
+    .CompressedMegaBatch` — on hardware the DVE3 lanes never leave the
+    chip (``kernel.edge_stream_decode_update_kernel`` unpacks descriptor
+    ``t+1``'s byte span while ``t``'s decoded window runs the per-edge
+    loop); in interpret mode the pure-JAX reference decode composes with
+    the megabatch kernel under the same jit.  Labels bit-identical to
+    host-decoding the same rows through :func:`_pallas_megabatch`."""
+    state = pallas_decode_update_megabatch(
+        state.to_device(),
+        jnp.asarray(cmega.payload),
+        jnp.asarray(cmega.desc),
+        int(config.v_max),
+        cmega.window,
+        cmega.out_rows,
+        chunk=config.chunk,
+        interpret=config.interpret,
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
 def _pallas_fleet(edges, config, state) -> BackendResult:
     """Tenant-major fleet kernel: one launch ingests the whole (T, B, 2)
     slab, per-tenant state tiles pipelined HBM→VMEM→HBM (DESIGN.md §13);
@@ -168,6 +192,7 @@ def _pallas_fleet(edges, config, state) -> BackendResult:
     chunk_aligned=True,
     megabatch_fn=_pallas_megabatch,
     wavefront_fn=_pallas_wavefront,
+    decode_fn=_pallas_decode,
     fleet_fn=_pallas_fleet,
     description="serial-in-VMEM Pallas kernel (bit-exact, TPU-native)",
 )
@@ -200,6 +225,25 @@ def _chunked_megabatch(edges, config, state) -> BackendResult:
     return BackendResult(state=state, labels=state.c, info={})
 
 
+def _chunked_decode(cmega, config, state) -> BackendResult:
+    """Compressed ingest for the Jacobi tier: reference decode + the fused
+    chunk scan under one jit (``repro.core.decode``) — one dispatch per
+    megabatch, bit-identical to host-decoding the same rows through
+    :func:`_chunked_megabatch` (the decoded slab is *defined* to equal the
+    host-staged one, and B is a chunk multiple for this chunk-aligned
+    backend, so chunk grouping is unchanged)."""
+    state = chunked_decode_update_megabatch(
+        state.to_device(),
+        jnp.asarray(cmega.payload),
+        jnp.asarray(cmega.desc),
+        int(config.v_max),
+        cmega.window,
+        cmega.out_rows,
+        chunk=config.chunk,
+    )
+    return BackendResult(state=state, labels=state.c, info={})
+
+
 def _chunked_fleet(edges, config, state) -> BackendResult:
     """Vmapped fleet ingest of one (T, B, 2) slab: the Jacobi chunk scan
     batched over the tenant axis — per-tenant rows bit-identical to
@@ -220,6 +264,7 @@ def _chunked_fleet(edges, config, state) -> BackendResult:
     bit_exact=False,
     chunk_aligned=True,
     megabatch_fn=_chunked_megabatch,
+    decode_fn=_chunked_decode,
     fleet_fn=_chunked_fleet,
     description="Jacobi chunked tier (vectorised decisions, scatter conflict "
     "resolution)",

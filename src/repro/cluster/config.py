@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +55,12 @@ class ClusterConfig:
         loop — labels stay bit-identical to every sequential tier.
         Requires ``megabatch_k`` (waves are planned per staged megabatch);
         backends without a wavefront path ignore it.  ``None`` (default)
-        keeps the sequential megabatch kernel.
+        keeps the sequential megabatch kernel.  ``"auto"`` lets the planner
+        pick ``W`` per megabatch from the observed node-disjoint run-length
+        histogram (the width a fixed-``W`` sweep would have chosen for that
+        megabatch's structure); the chosen widths surface as the
+        ``wavefront_widths`` info counter.  Fixed integer widths plan
+        bit-for-bit as before.
       prefetch: how many batches (or megabatches) the ingest pipeline
         produces ahead on its background thread (``None`` → 2, classic
         double buffering).  0 disables the prefetch thread entirely.
@@ -99,6 +104,21 @@ class ClusterConfig:
         ``wavefront_dead_rows_skipped`` in the finalize info.  ``None``
         (default) keeps the historical plans: dead rows occupy wave slots.
         Requires ``wavefront``.
+      device_decode: device-resident compressed ingest (DESIGN.md §14).
+        When True and the source is a block-codec file
+        (:class:`~repro.graph.sources.CodecFileSource` over a ``.dvc``),
+        :meth:`StreamClusterer.fit` stages *compressed payload bytes* plus
+        a descriptor table per megabatch instead of decoded edges, and the
+        backend's ``decode_fn`` unpacks the DVE3 lanes on device — fused
+        with the state update, one dispatch per megabatch, labels
+        bit-identical to host decode.  Blocks the device cannot decode
+        (varint/u8 fallback, mid-block resume remainders) are host-decoded
+        and staged raw; the split surfaces as the ``device_decode_*`` info
+        counters.  Requires ``megabatch_k`` and a backend with a
+        ``decode_fn`` (``chunked`` / ``pallas``); sources without codec
+        blocks (arrays, text files) fall back to host staging.
+        Incompatible with ``wavefront`` and ``refine`` (both need
+        host-visible decoded edges per megabatch).
       tenants: fleet size ``T`` for the multi-tenant fleet engine
         (``repro.cluster.fleet``, DESIGN.md §13) — the whole fleet's state
         is one ``(T, n)`` :class:`~repro.core.state.FleetState` advanced by
@@ -116,7 +136,7 @@ class ClusterConfig:
     chunk: int = 1024
     batch_edges: Optional[int] = None
     megabatch_k: Optional[int] = None
-    wavefront: Optional[int] = None
+    wavefront: Union[int, str, None] = None
     prefetch: Optional[int] = None
     v_maxes: Optional[Tuple[int, ...]] = None
     criterion: str = "density"
@@ -127,6 +147,7 @@ class ClusterConfig:
     refine_max_pairs: Optional[int] = None
     wavefront_gap: Optional[int] = None
     tenants: Optional[int] = None
+    device_decode: bool = False
     interpret: bool = True
 
     def __post_init__(self):
@@ -150,7 +171,13 @@ class ClusterConfig:
                 f"megabatch_k must be >= 1, got {self.megabatch_k}"
             )
         if self.wavefront is not None:
-            if self.wavefront < 1:
+            if isinstance(self.wavefront, str):
+                if self.wavefront != "auto":
+                    raise ValueError(
+                        f"wavefront must be an int width or 'auto', got "
+                        f"{self.wavefront!r}"
+                    )
+            elif self.wavefront < 1:
                 raise ValueError(
                     f"wavefront must be >= 1, got {self.wavefront}"
                 )
@@ -208,6 +235,22 @@ class ClusterConfig:
                 )
         if self.tenants is not None and self.tenants < 1:
             raise ValueError(f"tenants must be >= 1, got {self.tenants}")
+        if self.device_decode:
+            if self.megabatch_k is None:
+                raise ValueError(
+                    "device_decode requires megabatch_k (compressed slabs "
+                    "are staged per megabatch)"
+                )
+            if self.wavefront is not None:
+                raise ValueError(
+                    "device_decode is incompatible with wavefront (waves "
+                    "are planned from host-decoded edges)"
+                )
+            if self.refine is not None:
+                raise ValueError(
+                    "device_decode is incompatible with refine (the "
+                    "supergraph sketch observes host-decoded edges)"
+                )
 
     # ------------------------------------------------------------------
     def replace(self, **changes: Any) -> "ClusterConfig":

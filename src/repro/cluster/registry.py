@@ -84,6 +84,17 @@ class Backend:
     #   ``wavefront_fn(plan, config, state) -> BackendResult``; the API layer
     #   uses it when ClusterConfig.wavefront is set (and megabatch_k drives
     #   staging as usual).
+    decode_fn: Optional[Callable[..., BackendResult]] = None
+    #   device-resident compressed ingest (DESIGN.md §14): consumes a
+    #   :class:`~repro.graph.pipeline.CompressedMegaBatch` — DVE3 payload
+    #   bytes plus a descriptor table — and decodes it *on device* before
+    #   (or fused with) the state update.  Must be bit-identical to
+    #   host-decoding the same rows and feeding them through
+    #   ``megabatch_fn``, and must keep the one-dispatch-per-megabatch
+    #   contract (decode and update under one jit / one kernel launch).
+    #   Signature ``decode_fn(cmega, config, state) -> BackendResult``; the
+    #   API layer uses it when ``ClusterConfig.device_decode`` is set and
+    #   the source exposes codec blocks.
     fleet_fn: Optional[Callable[..., BackendResult]] = None
     #   multi-tenant fleet ingest (DESIGN.md §13): one donated dispatch over
     #   a ``(T, B, 2)`` staged slab threading a
@@ -111,6 +122,7 @@ def register_backend(
     finalize_fn: Optional[Callable[[Any, Any], BackendResult]] = None,
     megabatch_fn: Optional[Callable[..., BackendResult]] = None,
     wavefront_fn: Optional[Callable[..., BackendResult]] = None,
+    decode_fn: Optional[Callable[..., BackendResult]] = None,
     fleet_fn: Optional[Callable[..., BackendResult]] = None,
     description: str = "",
 ):
@@ -137,6 +149,7 @@ def register_backend(
             finalize_fn=finalize_fn,
             megabatch_fn=megabatch_fn,
             wavefront_fn=wavefront_fn,
+            decode_fn=decode_fn,
             fleet_fn=fleet_fn,
             description=description,
         )

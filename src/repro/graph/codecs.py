@@ -122,6 +122,27 @@ def zigzag_decode(z: np.ndarray) -> np.ndarray:
     )
 
 
+def varint_nbytes(values: np.ndarray) -> int:
+    """Total LEB128-encoded size of a uint64 vector *without* encoding it.
+
+    The encoder's column-mode chooser only needs the varint size to compare
+    against fixed-width candidates; materializing the actual byte stream
+    (cumsum + up to 10 scatter passes) just to measure it was the encode
+    hot spot.  This is ≤ 10 vectorized compare-sums and no allocation
+    proportional to the output.
+    """
+    v = np.asarray(values, _U)
+    if v.size == 0:
+        return 0
+    total = v.size
+    for k in range(1, _MAX_VARINT_BYTES):
+        above = int(np.count_nonzero(v >= _U(1) << _U(7 * k)))
+        if not above:
+            break
+        total += above
+    return total
+
+
 def encode_varints(values: np.ndarray) -> np.ndarray:
     """LEB128-encode a uint64 vector into one uint8 stream (vectorized).
 
@@ -133,7 +154,10 @@ def encode_varints(values: np.ndarray) -> np.ndarray:
         return np.zeros(0, np.uint8)
     nbytes = np.ones(v.shape, np.int64)
     for k in range(1, _MAX_VARINT_BYTES):
-        nbytes += v >= _U(1) << _U(7 * k)
+        above = v >= _U(1) << _U(7 * k)
+        if not above.any():
+            break
+        nbytes += above
     ends = np.cumsum(nbytes)
     starts = ends - nbytes
     out = np.zeros(int(ends[-1]), np.uint8)
@@ -254,6 +278,38 @@ class RawCodec(EdgeCodec):
             yield mm[pos:nxt], Cursor(nxt)
 
 
+class FixedBlockMeta(NamedTuple):
+    """Where a device-decodable DVE3 block's column lanes live.
+
+    Offsets are relative to the block *payload* start; widths are bytes
+    per zigzag value.  ``base_i`` seeds the source-column delta chain.
+    Only minted when both columns are fixed-width ≤ 4 bytes (exact under
+    int32 device arithmetic); every other block host-decodes.
+    """
+
+    off_i: int
+    w_i: int
+    off_j: int
+    w_j: int
+    base_i: int
+
+
+class CodecBlock(NamedTuple):
+    """One self-contained sync block, as seen by the compressed staging
+    path: absolute row coordinates, the raw payload bytes, and — iff the
+    block can be decoded on device — its :class:`FixedBlockMeta`.
+    ``next_cursor`` names the sync point after the block (same token the
+    decode path would mint), so staging records resume positions exactly
+    like host decoding does."""
+
+    first_row: int
+    n_rows: int
+    payload: bytes
+    version: int
+    fixed: Optional[FixedBlockMeta]
+    next_cursor: Cursor
+
+
 class DeltaVarintCodec(EdgeCodec):
     """Delta + zigzag-varint block compression with seekable sync points.
 
@@ -285,6 +341,24 @@ class DeltaVarintCodec(EdgeCodec):
     varint columns, no mode bytes) remain fully readable; pass
     ``version=1`` to *write* the old format.
 
+    ``DVE3`` (``version=3``) is the *device-decodable* block mode
+    (DESIGN.md §14).  Same file/block framing, but the payload leads with
+    the block's first source value so the delta chain is base-relative::
+
+        payload : i64 first_i | u8 mode_i | data_i | u8 mode_j | data_j
+        mode 0       : varints (host-only fallback)
+        mode 1/2/4/8 : fixed-width little-endian unsigned zigzag values
+
+    Base-relative deltas remove the one huge leading delta that forced
+    whole DVE2 columns into varints or u4 on sorted streams — a DVE3
+    source column is u1 whenever consecutive gaps fit a byte.  Width 4 is
+    only chosen when every zigzag value stays below ``2**31`` so int32
+    zigzag arithmetic is exact on device; wider values take u8 or varint
+    and the block is host-decoded.  A block is **device-decodable** iff
+    both columns are fixed-width ≤ 4 — :meth:`scan_blocks` surfaces the
+    raw column bytes plus offsets/widths/base for the compressed-slab
+    staging path, everything else falls back to host ``_decode_block``.
+
     ``n_edges`` in the header is patched in at encode close; the sentinel
     ``2**64 - 1`` (unseekable output) degrades to a header-skipping count.
     """
@@ -292,17 +366,22 @@ class DeltaVarintCodec(EdgeCodec):
     name = "dvc"
     suffixes = (".dvc",)
     magic = b"DVE2"
-    magics = (b"DVE2", b"DVE1")
+    magics = (b"DVE3", b"DVE2", b"DVE1")
     _HEADER = struct.Struct("<4sIQ")
     _BLOCK = struct.Struct("<II")
+    _V3_BASE = struct.Struct("<q")
     _UNKNOWN = (1 << 64) - 1
     _FIXED_WIDTHS = (1, 2, 4)
+    _FIXED_WIDTHS_V3 = (1, 2, 4, 8)
+    # widths int32 zigzag math handles exactly on device (u4 capped below)
+    _DEVICE_WIDTHS = (1, 2, 4)
+    _U4_DEVICE_TOP = 1 << 31  # u4 chosen only when every zz value is below
 
     def __init__(self, block_edges: int = 1 << 16, version: int = 2):
         if block_edges < 1:
             raise ValueError(f"block_edges must be >= 1, got {block_edges}")
-        if version not in (1, 2):
-            raise ValueError(f"dvc version must be 1 or 2, got {version}")
+        if version not in (1, 2, 3):
+            raise ValueError(f"dvc version must be 1, 2 or 3, got {version}")
         self.block_edges = block_edges
         self.version = version
 
@@ -310,31 +389,54 @@ class DeltaVarintCodec(EdgeCodec):
     def _encode_column_v2(self, zz: np.ndarray) -> bytes:
         """One mode-tagged column: the smallest fixed width that both fits
         every value and does not exceed the varint size, else varints."""
-        varint = encode_varints(zz)
+        vsize = varint_nbytes(zz)
         n = int(zz.shape[0])
         top = int(zz.max()) if n else 0
         for w in self._FIXED_WIDTHS:
-            if top < 1 << (8 * w) and w * n <= varint.nbytes:
+            if top < 1 << (8 * w) and w * n <= vsize:
                 return bytes([w]) + zz.astype(f"<u{w}").tobytes()
-        return bytes([0]) + varint.tobytes()
+        return bytes([0]) + encode_varints(zz).tobytes()
+
+    def _encode_column_v3(self, zz: np.ndarray) -> bytes:
+        """DVE3 column: widths 1/2/4/8, with u4 additionally capped at
+        ``2**31`` so device int32 zigzag decode is exact; varints only when
+        every fixed width loses on size (the host-decoded fallback)."""
+        vsize = varint_nbytes(zz)
+        n = int(zz.shape[0])
+        top = int(zz.max()) if n else 0
+        for w in self._FIXED_WIDTHS_V3:
+            cap = self._U4_DEVICE_TOP if w == 4 else 1 << (8 * w)
+            if top < cap and w * n <= vsize:
+                return bytes([w]) + zz.astype(f"<u{w}").tobytes()
+        return bytes([0]) + encode_varints(zz).tobytes()
 
     def _encode_block(self, rows: np.ndarray) -> bytes:
         rows = np.asarray(rows, np.int64)
         i, j = rows[:, 0], rows[:, 1]
-        deltas = np.diff(i, prepend=np.int64(0))
+        if self.version == 3:
+            base = int(i[0]) if i.shape[0] else 0
+            deltas = np.diff(i, prepend=np.int64(base))
+        else:
+            deltas = np.diff(i, prepend=np.int64(0))
         zz_i, zz_j = zigzag_encode(deltas), zigzag_encode(j - i)
         if self.version == 1:
             payload = encode_varints(np.concatenate([zz_i, zz_j])).tobytes()
-        else:
+        elif self.version == 2:
             payload = self._encode_column_v2(zz_i) + self._encode_column_v2(
                 zz_j
+            )
+        else:
+            payload = (
+                self._V3_BASE.pack(int(i[0]) if i.shape[0] else 0)
+                + self._encode_column_v3(zz_i)
+                + self._encode_column_v3(zz_j)
             )
         return (
             self._BLOCK.pack(len(payload), int(rows.shape[0])) + payload
         )
 
     def _write_magic(self) -> bytes:
-        return b"DVE1" if self.version == 1 else b"DVE2"
+        return {1: b"DVE1", 2: b"DVE2", 3: b"DVE3"}[self.version]
 
     def encode(self, slices: Iterable[np.ndarray], f: BinaryIO) -> int:
         from repro.graph.pipeline import rechunk
@@ -366,7 +468,7 @@ class DeltaVarintCodec(EdgeCodec):
             raise ValueError(
                 f"bad magic {magic!r}; not a {self.name} edge file"
             )
-        version = 1 if magic == b"DVE1" else 2
+        version = {b"DVE1": 1, b"DVE2": 2, b"DVE3": 3}[magic]
         return block_edges, None if n_edges == self._UNKNOWN else n_edges, version
 
     def _next_block_header(self, f: BinaryIO) -> Optional[Tuple[int, int]]:
@@ -397,23 +499,64 @@ class DeltaVarintCodec(EdgeCodec):
         vals = np.frombuffer(buf, dtype=f"<u{mode}", count=n_rows, offset=off)
         return vals.astype(_U), end
 
+    def _decode_column_v3(
+        self, buf: np.ndarray, off: int, n_rows: int
+    ) -> Tuple[np.ndarray, int]:
+        """Like v2 but accepts the u8 width."""
+        if off >= buf.size:
+            raise ValueError("dvc block truncated before a column mode byte")
+        mode = int(buf[off])
+        off += 1
+        if mode == 0:
+            vals, consumed = decode_varints(buf[off:], n_rows)
+            return vals, off + consumed
+        if mode not in self._FIXED_WIDTHS_V3:
+            raise ValueError(f"dvc block has unknown column mode {mode}")
+        end = off + mode * n_rows
+        if end > buf.size:
+            raise ValueError("dvc block truncated inside a fixed-width column")
+        vals = np.frombuffer(buf, dtype=f"<u{mode}", count=n_rows, offset=off)
+        return vals.astype(_U), end
+
     def _decode_block(
         self, payload: bytes, n_rows: int, version: int = 2
     ) -> np.ndarray:
         buf = np.frombuffer(payload, np.uint8)
+        base = np.int64(0)
         if version == 1:
             vals, consumed = decode_varints(buf, 2 * n_rows)
             zz_i, zz_j = vals[:n_rows], vals[n_rows:]
-        else:
+        elif version == 2:
             zz_i, off = self._decode_column_v2(buf, 0, n_rows)
             zz_j, consumed = self._decode_column_v2(buf, off, n_rows)
+        else:
+            if buf.size < self._V3_BASE.size:
+                raise ValueError("dvc v3 block truncated before its base")
+            (base,) = self._V3_BASE.unpack_from(payload, 0)
+            base = np.int64(base)
+            zz_i, off = self._decode_column_v3(buf, self._V3_BASE.size, n_rows)
+            zz_j, consumed = self._decode_column_v3(buf, off, n_rows)
         if consumed != buf.size:
             raise ValueError(
                 f"dvc block has {buf.size - consumed} trailing bytes"
             )
-        i = np.cumsum(zigzag_decode(zz_i))
+        i = base + np.cumsum(zigzag_decode(zz_i))
         j = i + zigzag_decode(zz_j)
         return np.stack([i, j], axis=1).astype(np.int32)
+
+    def decode_block(
+        self, payload: bytes, n_rows: int, version: int = 2
+    ) -> np.ndarray:
+        """Public host decode of one block payload — the fallback path the
+        compressed staging layer uses for varint/u8/partial blocks."""
+        return self._decode_block(payload, n_rows, version)
+
+    def file_block_edges(self, path: PathLike) -> int:
+        """The ``block_edges`` the *file* header declares (the sync-block
+        granularity staging sizes its descriptor windows from)."""
+        with open(path, "rb") as f:
+            block_edges, _, _ = self._read_header(f)
+        return block_edges
 
     def n_edges(self, path: PathLike) -> int:
         with open(path, "rb") as f:
@@ -491,6 +634,82 @@ class DeltaVarintCodec(EdgeCodec):
                         rows = rows[cursor.row - block_row :]
                     yield rows, Cursor(
                         next_row, (DVC_TOKEN_TAG, size, f.tell(), next_row)
+                    )
+                block_row = next_row
+
+    # -- block scan (compressed-slab staging) --------------------------
+    def _parse_v3_meta(self, payload: bytes, n_rows: int) -> Optional[FixedBlockMeta]:
+        """Fixed-lane metadata of a v3 payload, or ``None`` when either
+        column needs the host (varint mode or u8 width)."""
+        buf = np.frombuffer(payload, np.uint8)
+        if buf.size < self._V3_BASE.size + 1:
+            raise ValueError("dvc v3 block truncated before its base")
+        (base,) = self._V3_BASE.unpack_from(payload, 0)
+        off = self._V3_BASE.size
+        w_i = int(buf[off])
+        off_i = off + 1
+        if w_i not in self._DEVICE_WIDTHS:
+            return None
+        off = off_i + w_i * n_rows
+        if off >= buf.size:
+            raise ValueError("dvc v3 block truncated inside a column")
+        w_j = int(buf[off])
+        off_j = off + 1
+        if w_j not in self._DEVICE_WIDTHS:
+            return None
+        if off_j + w_j * n_rows != buf.size:
+            raise ValueError("dvc v3 block has trailing bytes")
+        return FixedBlockMeta(off_i, w_i, off_j, w_j, int(base))
+
+    def scan_blocks(
+        self, path: PathLike, cursor: Cursor
+    ) -> Iterator[CodecBlock]:
+        """Yield every sync block that contains rows at/after ``cursor``,
+        *without* decoding them.
+
+        This is the compressed staging path's read primitive: payload
+        bytes move from file to slab untouched, and :class:`FixedBlockMeta`
+        tells the device decoder where the lanes are.  Blocks are yielded
+        whole — a cursor landing mid-block yields the *containing* block
+        (``first_row < cursor.row``); the caller host-decodes and slices
+        that one (DESIGN.md §14).  The cursor token fast-forward and file
+        framing checks are identical to :meth:`decode_from`, so resume
+        positions name the same blocks bit-for-bit.
+        """
+        with open(path, "rb") as f:
+            size = os.fstat(f.fileno()).st_size
+            _, _, version = self._read_header(f)
+            block_row = self._token_seek(f, cursor)
+            if block_row is None:
+                f.seek(self._HEADER.size)
+                block_row = 0
+            while True:
+                hdr = self._next_block_header(f)
+                if hdr is None:
+                    return
+                payload_nbytes, n_rows = hdr
+                next_row = block_row + n_rows
+                if cursor.row >= next_row:
+                    f.seek(payload_nbytes, io.SEEK_CUR)
+                else:
+                    payload = f.read(payload_nbytes)
+                    if len(payload) < payload_nbytes:
+                        raise ValueError("dvc file truncated inside a block")
+                    fixed = (
+                        self._parse_v3_meta(payload, n_rows)
+                        if version == 3
+                        else None
+                    )
+                    yield CodecBlock(
+                        block_row,
+                        n_rows,
+                        payload,
+                        version,
+                        fixed,
+                        Cursor(
+                            next_row,
+                            (DVC_TOKEN_TAG, size, f.tell(), next_row),
+                        ),
                     )
                 block_row = next_row
 

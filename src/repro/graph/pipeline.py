@@ -202,6 +202,41 @@ class Batch(NamedTuple):
     offset: int  # raw rows consumed from the source before this batch
 
 
+# ---------------------------------------------------------------------------
+# Compressed-slab descriptor table (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+# One descriptor row per staged segment of a compressed megabatch.  The
+# decoder (Pallas kernel or pure-JAX reference) walks rows in order; dest
+# windows may overlap the previous segment's PAD tail, so ascending-order
+# full-window writes reconstruct exactly the slab the host-decode path
+# stages.  Kinds:
+#   DESC_EMPTY — unused row (table is fixed-shape), a no-op
+#   DESC_FIXED — lane-packed DVE3 block: zigzag cols at off_i/off_j with
+#                byte widths w_i/w_j, source column cumsum seeded by base
+#   DESC_RAW   — host-decoded int32 (n, 2) rows at off_i (fallback blocks,
+#                partial blocks at resume/megabatch boundaries)
+DESC_COLS = 8
+DESC_EMPTY, DESC_FIXED, DESC_RAW = 0, 1, 2
+(
+    D_KIND,
+    D_ROW,
+    D_NROWS,
+    D_OFF_I,
+    D_OFF_J,
+    D_W_I,
+    D_W_J,
+    D_BASE,
+) = range(DESC_COLS)
+
+# Payload slab capacity per staged row.  Fixed lanes cost w_i + w_j <= 8
+# bytes/row and raw fallback rows cost exactly 8, so 8 bytes/row (plus the
+# per-segment alignment slack added in the producer) can never overflow —
+# the compressed path trades *host decode compute* and disk bandwidth, not
+# slab bytes, and never needs a mid-stream shape change.
+_PAYLOAD_BYTES_PER_ROW = 8
+_SEGMENT_ALIGN = 8  # every lane/raw segment starts 8-byte aligned
+
+
 class MegaBatch(NamedTuple):
     """``K`` stacked pipeline batches staged as one fixed-shape host buffer.
 
@@ -219,6 +254,94 @@ class MegaBatch(NamedTuple):
     plan: Optional[object] = None  # WavePlan staged on the prefetch thread
     #   when megabatches(..., wavefront=W) is used (DESIGN.md §12); None in
     #   sequential megabatch mode
+
+
+class CompressedMegaBatch(NamedTuple):
+    """``K`` batches' worth of stream staged as *compressed bytes* plus a
+    descriptor table, instead of decoded edges (DESIGN.md §14).
+
+    Decoding the slab (device kernel or pure-JAX reference) must
+    reconstruct exactly the ``(K, batch_edges, 2)`` PAD-carved buffer the
+    plain :class:`MegaBatch` producer would have staged for the same rows
+    — that invariant is what keeps labels bit-identical and cursors
+    interchangeable between ``device_decode`` on and off.
+    """
+
+    payload: np.ndarray  # (P,) uint8 — lane segments + raw fallback rows
+    desc: np.ndarray  # (D_max, DESC_COLS) int32 descriptor table
+    n_rows: int  # raw source rows staged (before PAD padding)
+    offset: int  # raw rows consumed from the source before this megabatch
+    n_batches: int  # real (non-padding) batches covered (1..K)
+    n_desc: int  # live descriptor rows (the rest are DESC_EMPTY)
+    window: int  # max rows any one descriptor covers (static per run)
+    fallback_rows: int  # rows staged as DESC_RAW (host-decoded)
+    out_rows: int  # decoded slab rows = k * batch_edges (static per run)
+
+    def validate(self) -> "CompressedMegaBatch":
+        """Reject a torn descriptor table before it reaches a decode
+        dispatch.  Live descriptors must tile ``[0, n_rows)`` contiguously
+        in order, stay inside the payload, and carry device-decodable
+        widths — anything else means the slab was corrupted in transit
+        (truncated payload, spliced table, bad checkpoint) and decoding it
+        would silently produce wrong edges rather than fail.  Returns
+        ``self`` so call sites can chain.  O(n_desc), host-side.
+        """
+        desc = np.asarray(self.desc)
+        if not (0 <= self.n_desc <= desc.shape[0]):
+            raise ValueError(
+                f"torn descriptor table: n_desc {self.n_desc} outside "
+                f"table of {desc.shape[0]} rows"
+            )
+        live, tail = desc[: self.n_desc], desc[self.n_desc :]
+        if tail.size and (tail[:, D_KIND] != DESC_EMPTY).any():
+            raise ValueError(
+                "torn descriptor table: live descriptor past n_desc"
+            )
+        kind, nrows = live[:, D_KIND], live[:, D_NROWS]
+        if not np.isin(kind, (DESC_FIXED, DESC_RAW)).all():
+            raise ValueError(
+                "torn descriptor table: unknown descriptor kind"
+            )
+        if ((nrows < 1) | (nrows > self.window)).any():
+            raise ValueError(
+                "torn descriptor table: segment rows outside (0, window]"
+            )
+        expect = np.concatenate(([0], np.cumsum(nrows[:-1], dtype=np.int64)))
+        if (live[:, D_ROW].astype(np.int64) != expect).any() or (
+            int(nrows.sum()) != self.n_rows
+        ):
+            raise ValueError(
+                "torn descriptor table: segments do not tile "
+                f"[0, {self.n_rows}) contiguously"
+            )
+        P = np.int64(self.payload.shape[0])
+        fixed = kind == DESC_FIXED
+        w_i, w_j = live[:, D_W_I], live[:, D_W_J]
+        if not np.isin(w_i[fixed], (1, 2, 4)).all() or not np.isin(
+            w_j[fixed], (1, 2, 4)
+        ).all():
+            raise ValueError(
+                "torn descriptor table: fixed width not in {1, 2, 4}"
+            )
+        end_i = live[:, D_OFF_I].astype(np.int64) + np.where(
+            fixed, w_i.astype(np.int64) * nrows, 8 * nrows.astype(np.int64)
+        )
+        end_j = np.where(
+            fixed,
+            live[:, D_OFF_J].astype(np.int64)
+            + w_j.astype(np.int64) * nrows,
+            0,
+        )
+        if (
+            (live[:, D_OFF_I] < 0).any()
+            or (live[:, D_OFF_J][fixed] < 0).any()
+            or (end_i > P).any()
+            or (end_j > P).any()
+        ):
+            raise ValueError(
+                "torn descriptor table: segment span outside the payload"
+            )
+        return self
 
 
 class BatchPipeline:
@@ -344,7 +467,7 @@ class BatchPipeline:
         self,
         k: int,
         start: Cursor,
-        wavefront: Optional[int] = None,
+        wavefront: Union[int, str, None] = None,
         wavefront_gap: Optional[int] = None,
     ) -> Iterator[MegaBatch]:
         """Raw megabatch producer: stack ``k`` consecutive batches into one
@@ -421,6 +544,198 @@ class BatchPipeline:
             stream.close()
             slices.close()
 
+    def _produce_cmega(
+        self, k: int, start: Cursor
+    ) -> Iterator[CompressedMegaBatch]:
+        """Raw compressed-slab producer (DESIGN.md §14): walk the source's
+        sync blocks and stage *payload bytes* plus a descriptor table
+        instead of decoded edges.
+
+        Device-decodable blocks (DVE3 fixed lanes) are memcpy'd into the
+        slab untouched — the host never runs their zigzag/cumsum.  Varint
+        or u8 blocks, a partial first block after a mid-block resume, and
+        blocks straddling the megabatch boundary are host-decoded into a
+        ``carry`` buffer and staged as ``DESC_RAW`` int32 segments, split
+        to the descriptor window so every segment fits one decode window.
+        Decoded, the slab reproduces exactly what :meth:`_produce_mega`
+        would have staged for the same rows.
+        """
+        B = self.batch_edges
+        KB = k * B
+        codec = self.source.codec
+        N_win = max(1, min(int(self.source.block_rows), KB))
+        D_max = KB // N_win + 3
+        # capacity: 8 bytes/staged row + per-segment alignment slack, plus
+        # one full decode-window span of tail slack so the kernel's
+        # fixed-size descriptor DMA (payload[off : off + 8 * window + 8])
+        # stays in bounds even for the last segment
+        P = round_up(
+            KB * _PAYLOAD_BYTES_PER_ROW
+            + 2 * _SEGMENT_ALIGN * D_max
+            + _PAYLOAD_BYTES_PER_ROW * N_win
+            + _SEGMENT_ALIGN,
+            _SEGMENT_ALIGN,
+        )
+        offset = start.row
+        consumed = start.row  # absolute row index of the next unstaged row
+        blocks = self.source.scan_blocks(start)
+        carry: Optional[np.ndarray] = None  # decoded rows awaiting staging
+        carry_charge = 0
+        try:
+            while True:
+                payload: Optional[np.ndarray] = None
+                desc: Optional[np.ndarray] = None
+                filled = 0  # rows staged into this megabatch
+                pos = 0  # payload bytes used
+                nd = 0  # live descriptor rows
+                fallback_rows = 0
+
+                def ensure_buffers():
+                    nonlocal payload, desc
+                    if payload is None:
+                        payload = np.zeros(P, np.uint8)
+                        desc = np.zeros((D_max, DESC_COLS), np.int32)
+                        self._acquire(payload.nbytes + desc.nbytes)
+
+                try:
+                    while filled < KB:
+                        if carry is not None:
+                            take = min(N_win, KB - filled, carry.shape[0])
+                            ensure_buffers()
+                            off = round_up(pos, _SEGMENT_ALIGN)
+                            seg = np.ascontiguousarray(
+                                carry[:take], dtype="<i4"
+                            ).reshape(-1).view(np.uint8)
+                            payload[off : off + seg.nbytes] = seg
+                            desc[nd, D_KIND] = DESC_RAW
+                            desc[nd, D_ROW] = filled
+                            desc[nd, D_NROWS] = take
+                            desc[nd, D_OFF_I] = off
+                            pos = off + seg.nbytes
+                            nd += 1
+                            filled += take
+                            fallback_rows += take
+                            if take < carry.shape[0]:
+                                carry = carry[take:]
+                            else:
+                                carry = None
+                                self._release(carry_charge)
+                                carry_charge = 0
+                            continue
+                        block = next(blocks, None)
+                        if block is None:
+                            break
+                        skip = consumed - block.first_row
+                        consumed = block.first_row + block.n_rows
+                        n = block.n_rows - skip
+                        meta = block.fixed
+                        if (
+                            meta is not None
+                            and skip == 0
+                            and n <= N_win
+                            and filled + n <= KB
+                            and -(1 << 31) <= meta.base_i < (1 << 31)
+                        ):
+                            ensure_buffers()
+                            pay = np.frombuffer(block.payload, np.uint8)
+                            off_i = round_up(pos, _SEGMENT_ALIGN)
+                            li = meta.w_i * n
+                            payload[off_i : off_i + li] = pay[
+                                meta.off_i : meta.off_i + li
+                            ]
+                            off_j = round_up(off_i + li, _SEGMENT_ALIGN)
+                            lj = meta.w_j * n
+                            payload[off_j : off_j + lj] = pay[
+                                meta.off_j : meta.off_j + lj
+                            ]
+                            desc[nd] = (
+                                DESC_FIXED,
+                                filled,
+                                n,
+                                off_i,
+                                off_j,
+                                meta.w_i,
+                                meta.w_j,
+                                meta.base_i,
+                            )
+                            pos = off_j + lj
+                            nd += 1
+                            filled += n
+                        else:
+                            rows = codec.decode_block(
+                                block.payload, block.n_rows, block.version
+                            )
+                            if skip:
+                                rows = rows[skip:]
+                            carry = rows
+                            carry_charge = int(rows.nbytes)
+                            self._acquire(carry_charge)
+                except BaseException:
+                    if payload is not None:
+                        self._release(payload.nbytes + desc.nbytes)
+                    raise
+                if filled == 0:
+                    return
+                yield CompressedMegaBatch(
+                    payload=payload,
+                    desc=desc,
+                    n_rows=filled,
+                    offset=offset,
+                    n_batches=-(-filled // B),
+                    n_desc=nd,
+                    window=N_win,
+                    fallback_rows=fallback_rows,
+                    out_rows=KB,
+                )
+                offset += filled
+                if filled < KB:
+                    return  # ragged tail: the stream is exhausted
+        finally:
+            if carry is not None:
+                self._release(carry_charge)
+            blocks.close()
+
+    def compressed_megabatches(
+        self, k: int, start: Union[int, Cursor] = 0
+    ) -> Iterator[CompressedMegaBatch]:
+        """Yield compressed-slab megabatches from a stream position.
+
+        The device-decode analogue of :meth:`megabatches`: identical row
+        coverage per megabatch (``k * batch_edges`` rows from the same
+        start), but the staged buffer holds compressed payload bytes plus
+        a :data:`DESC_COLS`-column descriptor table; decoding it on device
+        (or via the pure-JAX reference) reconstructs the exact
+        ``(k, batch_edges, 2)`` PAD-carved slab.  Requires a block-codec
+        file source (a ``.dvc`` behind :class:`CodecFileSource`).
+        """
+        if k < 1:
+            raise ValueError(f"megabatch k must be >= 1, got {k}")
+        if getattr(self.source, "block_rows", None) is None or not hasattr(
+            self.source, "scan_blocks"
+        ):
+            raise ValueError(
+                "compressed staging needs a block-codec file source "
+                "(CodecFileSource over a dvc file)"
+            )
+        inner = _prefetch_iter(
+            self._produce_cmega(k, as_cursor(start)),
+            self.prefetch,
+            on_drop=lambda cm: self._release(cm.payload.nbytes + cm.desc.nbytes),
+        )
+        prev: Optional[CompressedMegaBatch] = None
+        try:
+            for cm in inner:
+                if prev is not None:
+                    self._release(prev.payload.nbytes + prev.desc.nbytes)
+                prev = cm
+                self.megabatches_produced += 1
+                self.batches_produced += cm.n_batches
+                yield cm
+        finally:
+            if prev is not None:
+                self._release(prev.payload.nbytes + prev.desc.nbytes)
+            inner.close()
+
     @staticmethod
     def _mega_nbytes(mb: MegaBatch) -> int:
         """Residency charged for one staged megabatch (edges + wave plan)."""
@@ -431,7 +746,7 @@ class BatchPipeline:
         k: int,
         start: Union[int, Cursor] = 0,
         *,
-        wavefront: Optional[int] = None,
+        wavefront: Union[int, str, None] = None,
         wavefront_gap: Optional[int] = None,
     ) -> Iterator[MegaBatch]:
         """Yield ``(k, batch_edges, 2)`` megabatches from a stream position.
@@ -447,7 +762,11 @@ class BatchPipeline:
         """
         if k < 1:
             raise ValueError(f"megabatch k must be >= 1, got {k}")
-        if wavefront is not None and wavefront < 1:
+        if (
+            wavefront is not None
+            and not isinstance(wavefront, str)
+            and wavefront < 1
+        ):
             raise ValueError(f"wavefront width must be >= 1, got {wavefront}")
         inner = _prefetch_iter(
             self._produce_mega(k, as_cursor(start), wavefront, wavefront_gap),

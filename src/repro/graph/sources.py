@@ -372,6 +372,46 @@ class CodecFileSource(EdgeSource):
                 f"but declares {self._m} edges — file truncated?"
             )
 
+    @property
+    def block_rows(self) -> Optional[int]:
+        """Sync-block row granularity of the underlying file, or ``None``
+        when the codec has no block structure (raw files)."""
+        reader = getattr(self.codec, "file_block_edges", None)
+        if reader is None:
+            return None
+        return int(reader(self.path))
+
+    def scan_blocks(self, cursor):
+        """Yield raw :class:`~repro.graph.codecs.CodecBlock` sync blocks
+        from ``cursor`` on — the compressed-slab staging read path.
+
+        Payload bytes are *not* decoded here; the pipeline ships them (plus
+        descriptor metadata) toward the device.  Sync points are recorded
+        exactly as in the decode path, so cursors minted during compressed
+        ingest are interchangeable with host-decode cursors, and the same
+        declared-length cross-check rejects a file truncated at a block
+        boundary.
+        """
+        scan = getattr(self.codec, "scan_blocks", None)
+        if scan is None:
+            raise ValueError(
+                f"{self.path}: codec {self.codec.name!r} has no block "
+                "structure to scan"
+            )
+        cursor = as_cursor(cursor)
+        if cursor.row >= self._m:
+            return
+        end = cursor.row
+        for block in scan(self.path, cursor):
+            self._sync.record(block.next_cursor.row, block.next_cursor.token)
+            end = block.first_row + block.n_rows
+            yield block
+        if end != self._m:
+            raise ValueError(
+                f"{self.path}: stream ended at row {end} but declares "
+                f"{self._m} edges — file truncated?"
+            )
+
     @classmethod
     def write(
         cls,

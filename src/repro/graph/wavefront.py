@@ -82,6 +82,8 @@ class WavePlan(NamedTuple):
     nbytes: int  # bytes of *owned* buffers (template views excluded)
     dead_rows_skipped: int = 0  # interior dead rows dropped from staging
     #   (gap mode only; 0 for gap=None historical plans)
+    width: int = 0  # wave width this plan was laid out at — the fixed W, or
+    #   the per-megabatch width ``plan_waves(..., "auto")`` chose
 
     @property
     def mean_wave_width(self) -> float:
@@ -108,9 +110,40 @@ def _prev_conflict(flat: np.ndarray, live: np.ndarray) -> np.ndarray:
     return p
 
 
+# Adaptive-width clamp: powers of two in [8, 1024], so an "auto" run
+# compiles at most 8 distinct device shapes however the stream's structure
+# drifts between megabatches.
+_AUTO_WIDTH_MIN = 8
+_AUTO_WIDTH_MAX = 1024
+
+
+def _auto_width(p: np.ndarray, live_idx: np.ndarray) -> int:
+    """Pick a wave width from the observed live-run-length structure.
+
+    ``p[e] = `` the nearest earlier row sharing an endpoint with ``e``, so
+    ``g = e - p[e]`` (over constrained live rows) is the largest width at
+    which row ``e`` does *not* close a wave opened within ``g`` rows — the
+    per-row run-length scale of the stream.  The median of that histogram
+    is the width half the conflicts won't bind at: wider mostly burns
+    staging and vector lanes on early-closed waves, narrower splits runs
+    that were free.  Rounded up to a power of two and clamped so device
+    shapes stay enumerable.
+    """
+    if live_idx.size == 0:
+        return _AUTO_WIDTH_MIN
+    pl = p[live_idx]
+    constrained = pl >= 0
+    if not constrained.any():
+        return _AUTO_WIDTH_MAX  # node-disjoint stream: nothing ever closes
+    g = live_idx[constrained] - pl[constrained]
+    w = int(np.median(g))
+    w = max(_AUTO_WIDTH_MIN, min(_AUTO_WIDTH_MAX, w))
+    return 1 << (w - 1).bit_length()
+
+
 def plan_waves(
     edges: np.ndarray,
-    width: int,
+    width,
     *,
     slack: int = 4,
     gap: Optional[int] = None,
@@ -119,13 +152,19 @@ def plan_waves(
 
     ``edges`` is any ``(..., 2)`` int stream (a ``(K, B, 2)`` megabatch or
     a flat ``(m, 2)`` batch) — flattened in stream order.  ``width`` caps
-    rows per wave; ``slack`` scales the fixed wave budget; ``gap`` (module
-    docstring) packs only live rows, merging runs across interior dead
-    gaps of at most ``gap`` rows.  Stateless per call: planning depends
-    only on the rows handed in, never on cluster state, so
-    checkpoints/cursors are untouched by wavefront mode.
+    rows per wave — an int, or ``"auto"`` to pick a per-megabatch width
+    from the observed live-run-length histogram (:func:`_auto_width`;
+    integer widths plan bit-for-bit as they always have).  ``slack``
+    scales the fixed wave budget; ``gap`` (module docstring) packs only
+    live rows, merging runs across interior dead gaps of at most ``gap``
+    rows.  Stateless per call: planning depends only on the rows handed
+    in, never on cluster state, so checkpoints/cursors are untouched by
+    wavefront mode.
     """
-    if width < 1:
+    auto = isinstance(width, str)
+    if auto and width != "auto":
+        raise ValueError(f"wavefront width must be an int or 'auto', got {width!r}")
+    if not auto and width < 1:
         raise ValueError(f"wavefront width must be >= 1, got {width}")
     if slack < 1:
         raise ValueError(f"wavefront slack must be >= 1, got {slack}")
@@ -134,13 +173,15 @@ def plan_waves(
     t0 = time.perf_counter()
     flat = np.ascontiguousarray(np.asarray(edges, np.int32).reshape(-1, 2))
     M = flat.shape[0]
-    n_waves_max = max(1, slack * -(-M // width))
 
     live = (flat[:, 0] != PAD) & (flat[:, 1] != PAD) & (flat[:, 0] != flat[:, 1])
     live_idx = np.flatnonzero(live)
     # trailing dead rows (PAD tails, trailing self-loops) constrain nothing
     m_eff = int(live_idx[-1]) + 1 if live_idx.size else 0
     p = _prev_conflict(flat[:m_eff], live[:m_eff])
+    if auto:
+        width = _auto_width(p, live_idx)
+    n_waves_max = max(1, slack * -(-M // width))
 
     waves = np.empty((n_waves_max, width, 2), np.int32)
     counts = np.zeros(n_waves_max, np.int32)
@@ -210,4 +251,5 @@ def plan_waves(
         plan_seconds=time.perf_counter() - t0,
         nbytes=waves.nbytes + counts.nbytes + meta.nbytes + owned,
         dead_rows_skipped=dead_rows_skipped,
+        width=int(width),
     )

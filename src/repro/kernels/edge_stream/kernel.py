@@ -38,7 +38,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.wavefront import wave_apply, wave_conflict, wave_live
-from repro.graph.pipeline import PAD
+from repro.graph.pipeline import (
+    D_BASE,
+    D_KIND,
+    D_NROWS,
+    D_OFF_I,
+    D_OFF_J,
+    D_ROW,
+    D_W_I,
+    D_W_J,
+    DESC_COLS,
+    DESC_EMPTY,
+    DESC_RAW,
+    PAD,
+)
 
 
 def _apply_edge(i_raw, j_raw, d_ref, c_ref, v_ref, *, v_max: int):
@@ -396,6 +409,305 @@ def build_fleet_call(
             jax.ShapeDtypeStruct((tenants, n), jnp.int32),  # d
             jax.ShapeDtypeStruct((tenants, n), jnp.int32),  # c
             jax.ShapeDtypeStruct((tenants, n), jnp.int32),  # v
+        ],
+        interpret=interpret,
+    )
+
+
+def _decode_span(window: int) -> int:
+    """Bytes DMA'd per descriptor: the widest segment is a DESC_RAW window
+    (8 bytes/row) or a u4+u4 fixed pair (4 + 4 bytes/row plus one alignment
+    gap) — both bounded by ``8 * window + 8``.  The staging producer leaves
+    this much tail slack in the payload slab, so a fixed-size span read at
+    any live descriptor offset is always in bounds."""
+    return 8 * window + 8
+
+
+def _decode_window(desc_row, bytes_i32, *, window: int):
+    """Decode one descriptor's span into ``(window, 2)`` int32 edge rows.
+
+    ``desc_row`` is the (DESC_COLS,) descriptor; ``bytes_i32`` the span's
+    bytes as int32 values, with the descriptor's first data byte
+    (``off_i``) at position 0.  All candidate widths are unpacked with
+    reshape-and-combine lane math and selected by the descriptor's width
+    fields — no per-byte scalar loop.  Rows at/after ``n_rows`` (and the
+    whole window for DESC_EMPTY) come out PAD, so a consumer can treat
+    every window as exactly ``window`` stream rows.  Shared by the
+    standalone decode kernel and the fused decode→update kernel, and
+    pinned bit-for-bit against ``repro.core.decode.decode_megabatch``.
+    """
+    kind = desc_row[D_KIND]
+    nrows = desc_row[D_NROWS]
+    w_i = desc_row[D_W_I]
+    w_j = desc_row[D_W_J]
+    rel_j = desc_row[D_OFF_J] - desc_row[D_OFF_I]
+    base = desc_row[D_BASE]
+
+    def fixed_col(rel, w):
+        v1 = jax.lax.dynamic_slice(bytes_i32, (rel,), (window,))
+        p2 = jax.lax.dynamic_slice(bytes_i32, (rel,), (2 * window,)).reshape(
+            window, 2
+        )
+        v2 = p2[:, 0] | (p2[:, 1] << 8)
+        p4 = jax.lax.dynamic_slice(bytes_i32, (rel,), (4 * window,)).reshape(
+            window, 4
+        )
+        v4 = p4[:, 0] | (p4[:, 1] << 8) | (p4[:, 2] << 16) | (p4[:, 3] << 24)
+        return jnp.where(w == 1, v1, jnp.where(w == 2, v2, v4))
+
+    def unzig(z):
+        return (z >> 1) ^ -(z & 1)
+
+    di = unzig(fixed_col(jnp.int32(0), w_i))
+    fixed_i = base + jnp.cumsum(di, dtype=jnp.int32)
+    fixed_j = fixed_i + unzig(fixed_col(rel_j, w_j))
+
+    # DESC_RAW: little-endian int32 (i, j) pairs — 8 bytes per row
+    p8 = bytes_i32[: 8 * window].reshape(window, 8)
+    raw_i = p8[:, 0] | (p8[:, 1] << 8) | (p8[:, 2] << 16) | (p8[:, 3] << 24)
+    raw_j = p8[:, 4] | (p8[:, 5] << 8) | (p8[:, 6] << 16) | (p8[:, 7] << 24)
+
+    is_raw = kind == DESC_RAW
+    vals_i = jnp.where(is_raw, raw_i, fixed_i)
+    vals_j = jnp.where(is_raw, raw_j, fixed_j)
+    rows = jnp.stack([vals_i, vals_j], axis=1)
+    rowid = jax.lax.broadcasted_iota(jnp.int32, (window, 2), 0)
+    live = (rowid < nrows) & (kind != DESC_EMPTY)
+    return jnp.where(live, rows, PAD)
+
+
+def decode_megabatch_kernel(
+    desc_ref,
+    payload_hbm_ref,
+    out_hbm_ref,
+    *,
+    window: int,
+    d_max: int,
+    n_out_windows: int,
+):
+    """Standalone compressed-slab decode: payload bytes in, edge slab out.
+
+    The payload stays in HBM (``memory_space=ANY``); descriptor spans are
+    double-buffer DMA'd into two VMEM byte slots — descriptor ``t+1``'s
+    bytes stream in while ``t``'s lanes are unpacked — and each decoded
+    ``(window, 2)`` window is DMA'd back to the HBM output slab at its
+    destination row.  Windows are written in ascending ``dest_row`` order
+    and a window's PAD tail may be overwritten by the next segment's real
+    rows, which is exactly how the host-staged slab composes; a PAD
+    pre-pass covers rows no descriptor reaches (the ragged stream tail).
+    """
+    span = _decode_span(window)
+
+    def scoped(slots_ref, sems_ref, row_ref, out_sem):
+        # PAD pre-pass: the slab must read PAD wherever no live descriptor
+        # lands (trailing all-PAD batches of a ragged tail megabatch)
+        row_ref[...] = jnp.full((window, 2), PAD, jnp.int32)
+
+        def pad_body(t, carry):
+            cp = pltpu.make_async_copy(
+                row_ref,
+                out_hbm_ref.at[pl.ds(t * window, window), :],
+                out_sem,
+            )
+            cp.start()
+            cp.wait()
+            return carry
+
+        jax.lax.fori_loop(0, n_out_windows, pad_body, None)
+
+        def bytes_dma(t):
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            off = desc_ref[t, D_OFF_I]
+            return pltpu.make_async_copy(
+                payload_hbm_ref.at[pl.ds(off, span)],
+                slots_ref.at[slot],
+                sems_ref.at[slot],
+            )
+
+        bytes_dma(jnp.int32(0)).start()
+
+        def body(t, carry):
+            @pl.when(t + 1 < d_max)
+            def _prefetch_next():
+                bytes_dma(t + 1).start()
+
+            bytes_dma(t).wait()
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            desc_row = pl.load(
+                desc_ref, (pl.dslice(t, 1), slice(None))
+            )[0]
+            rows = _decode_window(
+                desc_row, slots_ref[slot].astype(jnp.int32), window=window
+            )
+
+            @pl.when(desc_row[D_KIND] != DESC_EMPTY)
+            def _write():
+                row_ref[...] = rows
+                cp = pltpu.make_async_copy(
+                    row_ref,
+                    out_hbm_ref.at[pl.ds(desc_row[D_ROW], window), :],
+                    out_sem,
+                )
+                cp.start()
+                cp.wait()
+
+            return carry
+
+        jax.lax.fori_loop(0, d_max, body, None)
+
+    pl.run_scoped(
+        scoped,
+        pltpu.VMEM((N_EDGE_SLOTS, _decode_span(window)), jnp.uint8),
+        pltpu.SemaphoreType.DMA((N_EDGE_SLOTS,)),
+        pltpu.VMEM((window, 2), jnp.int32),
+        pltpu.SemaphoreType.DMA(()),
+    )
+
+
+def edge_stream_decode_update_kernel(
+    desc_ref,
+    payload_hbm_ref,
+    d0_ref,
+    c0_ref,
+    v0_ref,
+    d_ref,
+    c_ref,
+    v_ref,
+    stats_ref,
+    *,
+    v_max: int,
+    window: int,
+    d_max: int,
+):
+    """Fused decode→update: compressed bytes in, clustered state out.
+
+    One launch per compressed megabatch: descriptor spans double-buffer
+    DMA from the HBM payload slab (descriptor ``t+1``'s bytes in flight
+    while ``t`` is decoded and applied — PR 5's DMA structure with byte
+    spans in place of decoded chunks), lanes unpack in VMEM via
+    :func:`_decode_window`, and the decoded window immediately runs the
+    strict-order sequential :func:`_apply_edge` loop against the
+    VMEM-resident (d, c, v).  Descriptors tile the stream in order and PAD
+    rows are no-ops, so labels are bit-exact with host decode + the plain
+    megabatch kernel over the same rows.  The decoded edges never touch
+    HBM.  ``stats_ref[0]`` returns the live-edge count (the host can't
+    cheaply know it without decoding).
+    """
+    d_ref[...] = d0_ref[...]
+    c_ref[...] = c0_ref[...]
+    v_ref[...] = v0_ref[...]
+    stats_ref[...] = jnp.zeros((1,), jnp.int32)
+    span = _decode_span(window)
+
+    def scoped(slots_ref, sems_ref):
+        def bytes_dma(t):
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            off = desc_ref[t, D_OFF_I]
+            return pltpu.make_async_copy(
+                payload_hbm_ref.at[pl.ds(off, span)],
+                slots_ref.at[slot],
+                sems_ref.at[slot],
+            )
+
+        bytes_dma(jnp.int32(0)).start()
+
+        def body(t, carry):
+            @pl.when(t + 1 < d_max)
+            def _prefetch_next():
+                bytes_dma(t + 1).start()
+
+            bytes_dma(t).wait()
+            slot = jax.lax.rem(t, N_EDGE_SLOTS)
+            desc_row = pl.load(
+                desc_ref, (pl.dslice(t, 1), slice(None))
+            )[0]
+            rows = _decode_window(
+                desc_row, slots_ref[slot].astype(jnp.int32), window=window
+            )
+            live = (
+                (rows[:, 0] != PAD)
+                & (rows[:, 1] != PAD)
+                & (rows[:, 0] != rows[:, 1])
+            )
+            stats_ref[0] = stats_ref[0] + jnp.sum(live.astype(jnp.int32))
+
+            @pl.when(desc_row[D_KIND] != DESC_EMPTY)
+            def _apply():
+                def edge_body(e, cy):
+                    _apply_edge(
+                        rows[e, 0], rows[e, 1], d_ref, c_ref, v_ref,
+                        v_max=v_max,
+                    )
+                    return cy
+
+                jax.lax.fori_loop(0, window, edge_body, None)
+
+            return carry
+
+        jax.lax.fori_loop(0, d_max, body, None)
+
+    pl.run_scoped(
+        scoped,
+        pltpu.VMEM((N_EDGE_SLOTS, _decode_span(window)), jnp.uint8),
+        pltpu.SemaphoreType.DMA((N_EDGE_SLOTS,)),
+    )
+
+
+def build_decode_call(
+    window: int, d_max: int, n_out_windows: int, interpret: bool
+):
+    """One dispatch decoding a compressed slab to a
+    ``(n_out_windows * window, 2)`` edge slab in HBM (callers trim to the
+    megabatch's ``K * B`` rows)."""
+    kernel = functools.partial(
+        decode_megabatch_kernel,
+        window=window,
+        d_max=d_max,
+        n_out_windows=n_out_windows,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((d_max, DESC_COLS), lambda: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        out_shape=jax.ShapeDtypeStruct((n_out_windows * window, 2), jnp.int32),
+        interpret=interpret,
+    )
+
+
+def build_decode_update_call(
+    n: int, window: int, d_max: int, v_max: int, interpret: bool
+):
+    """One fused dispatch over a compressed megabatch: payload bytes stay in
+    HBM and are span-DMA'd by the kernel; the 3n-int state is seeded into
+    VMEM once and written back once, plus a ``(1,)`` live-edge count."""
+    kernel = functools.partial(
+        edge_stream_decode_update_kernel,
+        v_max=v_max,
+        window=window,
+        d_max=d_max,
+    )
+    state_spec = pl.BlockSpec((n,), lambda: (0,))
+    stats_spec = pl.BlockSpec((1,), lambda: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((d_max, DESC_COLS), lambda: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            state_spec,
+            state_spec,
+            state_spec,
+        ],
+        out_specs=[state_spec, state_spec, state_spec, stats_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # d
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # c
+            jax.ShapeDtypeStruct((n,), jnp.int32),  # v
+            jax.ShapeDtypeStruct((1,), jnp.int32),  # stats: live edges
         ],
         interpret=interpret,
     )

@@ -7,10 +7,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.decode import decode_megabatch
 from repro.core.state import ClusterState, FleetState, count_live_edges
 from repro.graph.pipeline import PAD, pad_edges_to_chunks
 from repro.kernels.edge_stream.kernel import (
     build_call,
+    build_decode_call,
+    build_decode_update_call,
     build_fleet_call,
     build_megabatch_call,
     build_wavefront_call,
@@ -87,6 +90,88 @@ def pallas_update_megabatch(
     return ClusterState(
         d=d, c=c, v=v, edges_seen=state.edges_seen + count_live_edges(edges.reshape(-1, 2), PAD)
     )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "out_rows", "interpret")
+)
+def pallas_decode_megabatch(
+    payload: jax.Array,
+    desc: jax.Array,
+    window: int,
+    out_rows: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Standalone device decode of a compressed megabatch slab.
+
+    Returns the ``(out_rows, 2)`` int32 edge slab — bit-identical to the
+    host-decode staging path and to ``repro.core.decode.decode_megabatch``
+    (the pure-JAX reference the kernel is pinned against).  In interpret
+    mode the reference *is* the implementation: tracing the byte-unpack
+    lanes through the Pallas emulator adds nothing on CPU, while on
+    hardware the kernel double-buffers descriptor spans from HBM
+    (``kernel.decode_megabatch_kernel``).
+    """
+    if interpret:
+        return decode_megabatch(payload, desc, window, out_rows)
+    d_max = desc.shape[0]
+    n_out_windows = -(-(out_rows + window) // window)
+    call = build_decode_call(window, d_max, n_out_windows, False)
+    out = call(desc.astype(jnp.int32), payload)
+    return out[:out_rows]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_max", "window", "out_rows", "chunk", "interpret"),
+    donate_argnums=(0,),
+)
+def pallas_decode_update_megabatch(
+    state: ClusterState,
+    payload: jax.Array,
+    desc: jax.Array,
+    v_max: int,
+    window: int,
+    out_rows: int,
+    chunk: int = 2048,
+    interpret: bool = True,
+) -> ClusterState:
+    """Fused decode→update over one compressed megabatch — one dispatch.
+
+    On hardware this is ``kernel.edge_stream_decode_update_kernel``: the
+    payload slab stays in HBM, descriptor ``t+1``'s byte span streams in
+    while ``t``'s decoded window runs the strict-order per-edge loop, and
+    the decoded edges never round-trip through HBM.  In interpret mode the
+    same dispatch composes the pure-JAX reference decode with the plain
+    double-buffered megabatch kernel under this jit — identical math,
+    still one dispatch per megabatch.  Labels are bit-exact with host
+    decode + :func:`pallas_update_megabatch` either way.  ``state`` is
+    donated.
+    """
+    n = state.d.shape[0]
+    if interpret:
+        edges = decode_megabatch(payload, desc, window, out_rows)
+        padded, n_chunks = pad_edges_to_chunks(edges, chunk)
+        call = build_megabatch_call(n, chunk, n_chunks, int(v_max), True)
+        d, c, v = call(
+            padded.reshape(n_chunks, chunk, 2),
+            state.d.astype(jnp.int32),
+            state.c.astype(jnp.int32),
+            state.v.astype(jnp.int32),
+        )
+        seen = count_live_edges(edges, PAD)
+    else:
+        d_max = desc.shape[0]
+        call = build_decode_update_call(n, window, d_max, int(v_max), False)
+        d, c, v, stats = call(
+            desc.astype(jnp.int32),
+            payload,
+            state.d.astype(jnp.int32),
+            state.c.astype(jnp.int32),
+            state.v.astype(jnp.int32),
+        )
+        seen = stats[0]
+    return ClusterState(d=d, c=c, v=v, edges_seen=state.edges_seen + seen)
 
 
 @functools.partial(

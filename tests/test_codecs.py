@@ -290,8 +290,9 @@ def test_dvc_v2_fixed_width_and_varint_fallback_columns(tmp_path):
 
 
 def test_dvc_version_validation():
+    DeltaVarintCodec(version=3)  # DVE3 is a valid version
     with pytest.raises(ValueError, match="version"):
-        DeltaVarintCodec(version=3)
+        DeltaVarintCodec(version=4)
 
 
 def test_convert_cli_roundtrip(tmp_path, capsys):

@@ -439,3 +439,54 @@ def test_wavefront_gap_fit_bit_identical_with_counter():
                       wavefront=8, wavefront_gap=-1)
     with pytest.raises(ValueError, match="wavefront"):
         ClusterConfig(n=n, v_max=4, backend="pallas", wavefront_gap=4)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive width (wavefront="auto")
+# ---------------------------------------------------------------------------
+
+def test_auto_width_plans_are_sound_and_pow2():
+    from repro.graph.wavefront import _AUTO_WIDTH_MAX, _AUTO_WIDTH_MIN
+
+    rng = np.random.default_rng(7)
+    edges = rng.integers(0, 200, (2048, 2)).astype(np.int32)
+    plan = plan_waves(edges, "auto")
+    assert _AUTO_WIDTH_MIN <= plan.width <= _AUTO_WIDTH_MAX
+    assert plan.width & (plan.width - 1) == 0  # power of two
+    # an auto plan is just a fixed-W plan at the chosen width
+    fixed = plan_waves(edges, int(plan.width))
+    np.testing.assert_array_equal(plan.waves, fixed.waves)
+    np.testing.assert_array_equal(plan.counts, fixed.counts)
+    np.testing.assert_array_equal(plan.leftover, fixed.leftover)
+    with pytest.raises(ValueError, match="auto"):
+        plan_waves(edges, "adaptive")
+
+
+def test_auto_width_fit_bit_identical_with_widths_counter():
+    n, m, B, K = 600, 4000, 256, 4
+    src = _source(n, m, seed=23)
+    cfg = ClusterConfig(
+        n=n, v_max=24, backend="pallas", chunk=128, batch_edges=B,
+        megabatch_k=K, wavefront="auto",
+    )
+    r_auto = cluster(src, cfg)
+    ref = cluster(src, cfg.replace(wavefront=None, megabatch_k=None))
+    np.testing.assert_array_equal(r_auto.labels, ref.labels)
+    widths = r_auto.info["wavefront_widths"]
+    assert len(widths) == r_auto.info["wavefront_megabatches"]
+    assert all(w & (w - 1) == 0 and w >= 8 for w in widths)
+    # the JSON config round-trip keeps the sentinel
+    assert ClusterConfig.from_json(cfg.to_json()).wavefront == "auto"
+
+
+def test_fixed_width_plans_unchanged_by_auto_support():
+    """The historical fixed-W entry point must produce byte-identical plans
+    (auto support only adds a string-typed branch before width is known)."""
+    rng = np.random.default_rng(11)
+    edges = rng.integers(0, 50, (512, 2)).astype(np.int32)
+    plan = plan_waves(edges, 8)
+    assert plan.width == 8
+    assert plan.waves.shape[1] == 8
+    recon = [plan.waves[t, : plan.counts[t]] for t in range(plan.meta[0])]
+    recon.append(plan.leftover[: plan.meta[1]])
+    np.testing.assert_array_equal(np.concatenate(recon), edges)
