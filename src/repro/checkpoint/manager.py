@@ -1,8 +1,17 @@
-"""Step-atomic sharded checkpointing with elastic restore.
+"""Step-atomic sharded checkpointing with elastic, corruption-tolerant restore.
 
 Layout: ``<dir>/step_<n>/`` holding one ``.npy`` per pytree leaf (keyed by
-its tree path) plus ``manifest.json``.  Writes go to ``tmp_step_<n>`` and are
-renamed into place — a preempted save never corrupts the latest checkpoint.
+its tree path) plus ``manifest.json`` recording each leaf's shape, dtype and
+CRC32.  Writes go to ``tmp_step_<n>`` and are renamed into place; when a
+previous ``step_<n>`` exists it is first renamed aside to ``step_<n>.old``
+and only removed *after* the new directory has landed — at every instant of
+the swap some complete generation of that step exists on disk, and
+``__init__`` heals any ``.old`` orphan a crash may have left behind.
+
+Restore verifies the manifest checksums and, when the newest generation is
+torn (truncated manifest, missing or bit-flipped leaf), falls back to the
+previous generation rather than returning silent garbage — corrupt artifacts
+raise :class:`CheckpointCorruptError`, never a bare ``ValueError``.
 
 Elastic restore: leaves are saved as *logical* (global) arrays and re-placed
 with whatever shardings the restoring mesh provides — so a run checkpointed
@@ -14,21 +23,33 @@ to full arrays — interface and atomicity are identical.)
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import re
 import shutil
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Dict, List, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
 
 _LEAF_RE = re.compile(r"[^a-zA-Z0-9_.-]+")
+_STEP_RE = re.compile(r"step_(\d+)")
 
 # numpy can't round-trip ml_dtypes (bfloat16/fp8 save as void) — store a
 # uint8 byte view and record the logical dtype in the manifest.
 _EXOTIC = {"bfloat16", "float8_e4m3fn", "float8_e5m2", "float8_e4m3"}
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint storage failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint generation on disk is torn or damaged (unreadable
+    manifest, missing leaf file, checksum mismatch)."""
 
 
 def _leaf_name(path) -> str:
@@ -40,6 +61,23 @@ class CheckpointManager:
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        self._recover()
+
+    # ------------------------------------------------------------------
+    def _recover(self) -> None:
+        """Heal the swap window: a crash between "rename old aside" and
+        "rename tmp in" leaves ``step_<n>.old`` as the only copy — put it
+        back; if both exist the new generation won, drop the aside."""
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)\.old", name)
+            if not m:
+                continue
+            aside = os.path.join(self.directory, name)
+            final = os.path.join(self.directory, f"step_{m.group(1)}")
+            if os.path.exists(final):
+                shutil.rmtree(aside)
+            else:
+                os.rename(aside, final)
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any) -> str:
@@ -62,15 +100,32 @@ class CheckpointManager:
                 if dtype_name in _EXOTIC
                 else arr
             )
-            np.save(os.path.join(tmp, name + ".npy"), to_save)
+            leaf_path = os.path.join(tmp, name + ".npy")
+            np.save(leaf_path, to_save)
+            with open(leaf_path, "rb") as f:
+                crc = zlib.crc32(f.read())
             manifest["leaves"].append(
-                {"name": name, "shape": list(arr.shape), "dtype": dtype_name}
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "dtype": dtype_name,
+                    "crc32": crc,
+                }
             )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # Swap with an aside rename instead of rmtree-then-rename: a crash
+        # at any point leaves either step_<n> or step_<n>.old complete on
+        # disk (healed by _recover), never zero copies.
+        aside = None
         if os.path.exists(final):
-            shutil.rmtree(final)
+            aside = final + ".old"
+            if os.path.exists(aside):
+                shutil.rmtree(aside)
+            os.rename(final, aside)
         os.rename(tmp, final)
+        if aside is not None:
+            shutil.rmtree(aside)
         self._prune()
         return final
 
@@ -83,13 +138,42 @@ class CheckpointManager:
     ) -> Any:
         """Rebuild ``template``-structured state from disk.
 
+        With ``step=None`` the newest generation is tried first and torn
+        generations are skipped (falling back through ``all_steps()``);
+        an explicit ``step`` is restored exactly or raises
+        :class:`CheckpointCorruptError`.
+
         ``shardings``: optional pytree (same structure) of NamedSharding for
         elastic re-placement on a (possibly different) mesh.
         """
-        step = self.latest_step() if step is None else step
-        if step is None:
+        if step is not None:
+            return self._restore_step(template, step, shardings)
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        errors: List[str] = []
+        for s in reversed(steps):
+            try:
+                return self._restore_step(template, s, shardings)
+            except CheckpointCorruptError as e:
+                errors.append(str(e))
+        raise CheckpointCorruptError(
+            f"every checkpoint generation in {self.directory} is corrupt: "
+            + "; ".join(errors)
+        )
+
+    def _restore_step(
+        self, template: Any, step: int, shardings: Optional[Any]
+    ) -> Any:
         d = os.path.join(self.directory, f"step_{step}")
+        if not os.path.isdir(d):
+            raise FileNotFoundError(f"no checkpoint step_{step} in {self.directory}")
+        manifest = self._manifest(step)
+        crcs: Dict[str, int] = {
+            leaf["name"]: leaf["crc32"]
+            for leaf in manifest.get("leaves", [])
+            if "crc32" in leaf
+        }
         paths_and_leaves = jax.tree_util.tree_flatten_with_path(template)
         leaves, treedef = paths_and_leaves
         shard_leaves = (
@@ -97,7 +181,26 @@ class CheckpointManager:
         )
         out = []
         for i, (path, leaf) in enumerate(leaves):
-            arr = np.load(os.path.join(d, _leaf_name(path) + ".npy"))
+            name = _leaf_name(path)
+            leaf_path = os.path.join(d, name + ".npy")
+            try:
+                with open(leaf_path, "rb") as f:
+                    raw = f.read()
+            except FileNotFoundError:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf file {name}.npy is missing"
+                ) from None
+            if name in crcs and zlib.crc32(raw) != crcs[name]:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf {name}.npy fails its manifest checksum — "
+                    "the file was altered or torn after save"
+                )
+            try:
+                arr = np.load(io.BytesIO(raw))
+            except Exception as e:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf {name}.npy is unreadable: {e}"
+                ) from e
             want = str(leaf.dtype) if hasattr(leaf, "dtype") else None
             if want in _EXOTIC:
                 arr = arr.view(getattr(ml_dtypes, want)).reshape(leaf.shape)
@@ -113,9 +216,21 @@ class CheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, out)
 
     # ------------------------------------------------------------------
+    def _manifest(self, step: int) -> Dict:
+        path = os.path.join(self.directory, f"step_{step}", "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            raise CheckpointCorruptError(f"{path} is missing") from None
+        except json.JSONDecodeError as e:
+            raise CheckpointCorruptError(
+                f"{path} is truncated or not valid JSON: {e}"
+            ) from e
+
     def leaf_names(self, step: Optional[int] = None) -> set:
-        """Leaf names recorded in a checkpoint's manifest (latest by
-        default; empty set when no checkpoint exists).
+        """Leaf names recorded in a checkpoint's manifest (newest *valid*
+        generation by default; empty set when no checkpoint exists).
 
         Lets callers dispatch on checkpoint *layout* before building a
         restore template — e.g. the cluster API restores the new
@@ -123,31 +238,29 @@ class CheckpointManager:
         to the legacy scalar ``stream_offset`` otherwise, instead of
         exception-probing with trial templates.
         """
-        step = self.latest_step() if step is None else step
-        if step is None:
-            return set()
-        path = os.path.join(self.directory, f"step_{step}", "manifest.json")
-        try:
-            with open(path) as f:
-                manifest = json.load(f)
-        except FileNotFoundError:
-            return set()
-        return {leaf["name"] for leaf in manifest.get("leaves", [])}
+        if step is not None:
+            return {
+                leaf["name"] for leaf in self._manifest(step).get("leaves", [])
+            }
+        for s in reversed(self.all_steps()):
+            try:
+                return {
+                    leaf["name"] for leaf in self._manifest(s).get("leaves", [])
+                }
+            except CheckpointCorruptError:
+                continue
+        return set()
 
     # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
-        steps = []
-        for name in os.listdir(self.directory):
-            m = re.fullmatch(r"step_(\d+)", name)
-            if m:
-                steps.append(int(m.group(1)))
-        return max(steps) if steps else None
+        steps = self.all_steps()
+        return steps[-1] if steps else None
 
     def all_steps(self):
         return sorted(
-            int(re.fullmatch(r"step_(\d+)", n).group(1))
+            int(_STEP_RE.fullmatch(n).group(1))
             for n in os.listdir(self.directory)
-            if re.fullmatch(r"step_(\d+)", n)
+            if _STEP_RE.fullmatch(n)
         )
 
     def _prune(self):

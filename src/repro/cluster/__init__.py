@@ -53,7 +53,21 @@ from repro.cluster.registry import (  # noqa: F401
     get_backend,
     register_backend,
 )
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointCorruptError,
+    CheckpointError,
+)
 from repro.graph.codecs import Cursor, DeltaVarintCodec, RawCodec  # noqa: F401
+from repro.graph.errors import (  # noqa: F401
+    CorruptBlockError,
+    CorruptStreamError,
+    RetryPolicy,
+    SourceDeadError,
+    StallError,
+    TransientReadError,
+    TruncatedStreamError,
+)
+from repro.graph.faults import ChaosSource, FaultInjector, FaultPlan  # noqa: F401
 from repro.graph.pipeline import BatchPipeline, MegaBatch  # noqa: F401
 from repro.graph.tenants import FleetSlab, TenantRouter  # noqa: F401
 from repro.graph.wavefront import WavePlan, plan_waves  # noqa: F401
@@ -76,14 +90,21 @@ __all__ = [
     "BackendResult",
     "BatchPipeline",
     "BinaryFileSource",
+    "ChaosSource",
+    "CheckpointCorruptError",
+    "CheckpointError",
     "CodecFileSource",
     "ClusterConfig",
     "ClusterState",
     "Clustering",
+    "CorruptBlockError",
+    "CorruptStreamError",
     "Cursor",
     "DeltaVarintCodec",
     "EdgeListFileSource",
     "EdgeSource",
+    "FaultInjector",
+    "FaultPlan",
     "FleetClusterer",
     "FleetClustering",
     "FleetSlab",
@@ -94,12 +115,17 @@ __all__ = [
     "RawCodec",
     "RefineRuntime",
     "ReplayBuffer",
+    "RetryPolicy",
     "ShardedSource",
     "ShardedState",
+    "SourceDeadError",
+    "StallError",
     "StreamClusterer",
     "SupergraphAccumulator",
     "SweepState",
     "TenantRouter",
+    "TransientReadError",
+    "TruncatedStreamError",
     "WavePlan",
     "as_source",
     "available_backends",

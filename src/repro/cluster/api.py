@@ -43,6 +43,7 @@ from repro.cluster.config import ClusterConfig
 from repro.cluster.refine import RefineRuntime
 from repro.cluster.registry import Backend, BackendResult, get_backend
 from repro.graph.codecs import Cursor
+from repro.graph.errors import RetryPolicy
 from repro.graph.pipeline import D_KIND, DESC_RAW, BatchPipeline
 from repro.graph.wavefront import plan_waves
 from repro.graph.sources import ArraySource, EdgeSource, as_source
@@ -64,11 +65,21 @@ def _make_pipeline(
     chunk-aligned for the Jacobi/DMA tiers so batching never moves a chunk
     boundary (labels match the one-shot run even for ``chunked``), prefetch
     depth per config (``None`` defers to the pipeline's own default)."""
+    kwargs: Dict[str, Any] = {}
+    if config.prefetch is not None:
+        kwargs["prefetch"] = config.prefetch
+    if config.retries is not None:
+        # 0 disables retry outright; k bounds consecutive attempts per fault
+        kwargs["retry"] = (
+            RetryPolicy(max_retries=config.retries) if config.retries else None
+        )
+    if config.stall_timeout is not None:
+        kwargs["stall_timeout"] = config.stall_timeout
     return BatchPipeline(
         source,
         config.batch_edges or DEFAULT_BATCH_EDGES,
         pad_multiple=config.chunk if backend.chunk_aligned else 1,
-        **({} if config.prefetch is None else {"prefetch": config.prefetch}),
+        **kwargs,
     )
 
 
@@ -282,9 +293,14 @@ def cluster(
     # assignment (fit() sizes the default window per shard).  Refined runs
     # always stream too: the supergraph sketch is accumulated per ingested
     # batch, so the one-shot array path would never feed it.
-    if backend.state_kind == "sharded" or config.refine is not None or (
-        backend.resumable
-        and (not in_memory or config.batch_edges is not None)
+    if (
+        backend.state_kind == "sharded"
+        or config.refine is not None
+        or config.autosave_every is not None
+        or (
+            backend.resumable
+            and (not in_memory or config.batch_edges is not None)
+        )
     ):
         # One drain implementation for both entry points: the incremental
         # clusterer owns the pipeline lifecycle (close-on-error, residency
@@ -379,6 +395,15 @@ class StreamClusterer:
         self.device_fallback_rows = 0
         self.device_fallback_segments = 0
         self.device_total_segments = 0
+        # Resilience counters (DESIGN.md §15): autosaves taken from inside
+        # fit, transient-read retries and soft stalls observed by the ingest
+        # pipeline, and the quarantine accounting of every checksummed
+        # source this clusterer has drained — all surfaced by finalize().
+        self.autosaves = 0
+        self.ingest_retries = 0
+        self.ingest_stalls = 0
+        self._last_autosave_row = 0
+        self._quarantine_sources: list = []
 
     # ------------------------------------------------------------------
     @property
@@ -533,11 +558,24 @@ class StreamClusterer:
         self.device_total_segments += int(cmega.n_desc)
         return self
 
+    def _autosave_due(self, config: ClusterConfig) -> bool:
+        return (
+            config.autosave_every is not None
+            and self._cursor.row - self._last_autosave_row
+            >= config.autosave_every
+        )
+
+    def _autosave(self, config: ClusterConfig) -> None:
+        self.save(config.autosave_dir)
+        self._last_autosave_row = self._cursor.row
+        self.autosaves += 1
+
     def fit(
         self,
         edges,
         *,
         max_batches: Optional[int] = None,
+        preemption=None,
     ) -> "StreamClusterer":
         """Stream a source through ``partial_fit`` from :attr:`stream_offset`.
 
@@ -565,9 +603,30 @@ class StreamClusterer:
         that tier's unit of shard assignment, so a single giant batch would
         silently pile the whole stream onto shard 0.  The sizing depends
         only on the source length, so resumed sessions deal identically.
+
+        ``preemption``: an optional
+        :class:`~repro.dist.fault_tolerance.PreemptionHandler` polled after
+        every ingested (mega)batch — once it fires, the in-flight unit is
+        drained, a final checkpoint is written (when ``autosave_dir`` is
+        configured), and ``fit`` returns early with the cursor on an exact
+        resume point.  Combined with ``config.autosave_every`` this is the
+        crash-recovery story: a killed run restores from the newest valid
+        generation and finishes with labels bit-identical to an
+        uninterrupted one.
         """
         source = as_source(edges)
         config = self.config
+        if config.on_corrupt == "quarantine" and getattr(
+            source, "supports_quarantine", False
+        ):
+            # policy is config-driven at fit time: the source skips corrupt
+            # blocks to the next sync marker and counts the loss instead of
+            # raising (sources without checksummed framing keep raising)
+            source.on_corrupt = "quarantine"
+        if getattr(source, "supports_quarantine", False) and all(
+            s is not source for s in self._quarantine_sources
+        ):
+            self._quarantine_sources.append(source)
         if self._backend.state_kind == "sharded" and config.batch_edges is None:
             m = source.count_edges()
             per_shard = max(1, -(-m // config.n_shards))
@@ -595,6 +654,7 @@ class StreamClusterer:
         )
         n = 0
         exhausted = False
+        stop = False  # preemption fired: drain-in-flight done, exit early
         if use_cmega and (max_batches is None or max_batches >= K):
             cmegas = pipe.compressed_megabatches(K, start=self._cursor)
             try:
@@ -604,6 +664,11 @@ class StreamClusterer:
                     # refresh the resume token (see the per-batch loop below)
                     self._cursor = source.cursor_at(self._cursor.row)
                     n += cm.n_batches
+                    if self._autosave_due(config):
+                        self._autosave(config)
+                    if preemption is not None and preemption.preempted:
+                        stop = True
+                        break
                     if cm.n_batches < K:
                         break  # ragged tail: the stream is exhausted
                     if max_batches is not None and max_batches - n < K:
@@ -637,6 +702,11 @@ class StreamClusterer:
                     # refresh the resume token (see the per-batch loop below)
                     self._cursor = source.cursor_at(self._cursor.row)
                     n += mega.n_batches
+                    if self._autosave_due(config):
+                        self._autosave(config)
+                    if preemption is not None and preemption.preempted:
+                        stop = True
+                        break
                     if mega.n_batches < K:
                         break  # ragged tail: the stream is exhausted
                     if max_batches is not None and max_batches - n < K:
@@ -646,7 +716,9 @@ class StreamClusterer:
                         break
             finally:
                 megas.close()
-        if not exhausted and (max_batches is None or n < max_batches):
+        if not stop and not exhausted and (
+            max_batches is None or n < max_batches
+        ):
             batches = pipe.batches(start=self._cursor)
             try:
                 for batch in batches:
@@ -656,6 +728,11 @@ class StreamClusterer:
                     # positions) for the row partial_fit just advanced to
                     self._cursor = source.cursor_at(self._cursor.row)
                     n += 1
+                    if self._autosave_due(config):
+                        self._autosave(config)
+                    if preemption is not None and preemption.preempted:
+                        stop = True
+                        break
                     if max_batches is not None and n >= max_batches:
                         break
             finally:
@@ -666,6 +743,16 @@ class StreamClusterer:
             self.peak_buffer_bytes, pipe.peak_buffer_bytes
         )
         self.stream_batches += n
+        self.ingest_retries += pipe.retries
+        self.ingest_stalls += pipe.stalls
+        if (
+            stop
+            and config.autosave_dir
+            and self._last_autosave_row != self._cursor.row
+        ):
+            # preemption drain: the in-flight unit landed, persist it so the
+            # next session resumes from this exact cursor
+            self._autosave(config)
         return self
 
     def finalize(self) -> Clustering:
@@ -723,6 +810,22 @@ class StreamClusterer:
             info["wavefront_fallback_waves"] = fall
             info["wavefront_fallback_rate"] = fall / live if live else 0.0
             info["wavefront_widths"] = list(self.wavefront_widths)
+        if (  # §15 resilience counters: surfaced whenever the machinery
+            self.autosaves  # was active, even if every count is zero —
+            or self.ingest_retries  # "nothing lost" is a reportable fact
+            or self.ingest_stalls
+            or self._quarantine_sources
+        ):
+            info = dict(info)
+            info["autosaves"] = self.autosaves
+            info["ingest_retries"] = self.ingest_retries
+            info["ingest_stalls"] = self.ingest_stalls
+            info["blocks_quarantined"] = sum(
+                s.blocks_quarantined for s in self._quarantine_sources
+            )
+            info["edges_lost"] = sum(
+                s.edges_lost for s in self._quarantine_sources
+            )
         if self.device_decoded_megabatches:  # §14 counters
             info = dict(info)
             info["device_decoded_megabatches"] = self.device_decoded_megabatches
@@ -849,6 +952,7 @@ class StreamClusterer:
             cursor = Cursor(0)
         sc = cls(config, state=restored["cluster_state"])
         sc._cursor = cursor
+        sc._last_autosave_row = cursor.row  # periodic saves resume from here
         if sc._refine is not None:
             # Refine leaves ride the same checkpoint (flattened as
             # refine_acc{i}_{kv,meta} / refine_replay_rows).  Restore them

@@ -128,6 +128,40 @@ class ClusterConfig:
         (``chunked`` / ``scan`` / ``pallas``).
       interpret: run Pallas kernels in interpret mode (True on CPU; set
         False on real TPUs).
+      autosave_every: checkpoint the run from inside ``fit`` every this
+        many ingested edges (rounded up to batch/megabatch boundaries —
+        saves always land on exact resume cursors).  Requires
+        ``autosave_dir``.  A killed run resumes from the newest valid
+        generation via :meth:`StreamClusterer.restore` with labels
+        bit-identical to an uninterrupted run.  ``None`` (default)
+        disables autosave.
+      autosave_dir: directory for autosave checkpoints (managed by
+        :class:`repro.checkpoint.manager.CheckpointManager`: step-atomic
+        swaps, per-leaf checksums, fallback to the previous generation on
+        a torn newest one).
+      on_corrupt: what a checksummed block-codec source does with a block
+        that fails its checksum — ``"raise"`` (default, fail loudly) or
+        ``"quarantine"`` (skip to the next sync marker, count the loss in
+        the ``blocks_quarantined`` / ``edges_lost`` info counters, never
+        silently wrong).  Quarantine needs the checksummed ``DVX``
+        framing; plain sources ignore this knob.
+      on_tenant_fault: fleet policy when one tenant's source dies
+        mid-stream — ``"raise"`` (default) or ``"quarantine"`` (the dead
+        tenant's remaining rows become PAD no-ops, surviving tenants
+        stream on bit-identically; quarantined tenants surface in the
+        fleet info).  Only consumed by
+        :class:`~repro.cluster.fleet.FleetClusterer`.
+      retries: max consecutive transient-read retries per fault in the
+        ingest pipeline (``None`` -> 3; 0 disables retry).  Retries
+        re-resume the source at the last delivered row, so a stream that
+        survives its transients is bit-identical to a fault-free one;
+        the attempt count surfaces as the ``ingest_retries`` info counter.
+      stall_timeout: hard watchdog (seconds) on the ingest prefetch
+        thread — a single produce exceeding it raises
+        :class:`~repro.graph.errors.StallError` instead of hanging the
+        run.  ``None`` (default) disables the hard watchdog (the
+        heartbeat monitor still counts soft stragglers as
+        ``ingest_stalls``).
     """
 
     n: int
@@ -149,6 +183,12 @@ class ClusterConfig:
     tenants: Optional[int] = None
     device_decode: bool = False
     interpret: bool = True
+    autosave_every: Optional[int] = None
+    autosave_dir: Optional[str] = None
+    on_corrupt: str = "raise"
+    on_tenant_fault: str = "raise"
+    retries: Optional[int] = None
+    stall_timeout: Optional[float] = None
 
     def __post_init__(self):
         from repro.cluster.registry import available_backends
@@ -251,6 +291,32 @@ class ClusterConfig:
                     "device_decode is incompatible with refine (the "
                     "supergraph sketch observes host-decoded edges)"
                 )
+        if self.autosave_every is not None:
+            if self.autosave_every < 1:
+                raise ValueError(
+                    f"autosave_every must be >= 1, got {self.autosave_every}"
+                )
+            if not self.autosave_dir:
+                raise ValueError(
+                    "autosave_every requires autosave_dir (where the "
+                    "checkpoints go)"
+                )
+        if self.on_corrupt not in ("raise", "quarantine"):
+            raise ValueError(
+                f"on_corrupt must be 'raise' or 'quarantine', got "
+                f"{self.on_corrupt!r}"
+            )
+        if self.on_tenant_fault not in ("raise", "quarantine"):
+            raise ValueError(
+                f"on_tenant_fault must be 'raise' or 'quarantine', got "
+                f"{self.on_tenant_fault!r}"
+            )
+        if self.retries is not None and self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.stall_timeout is not None and self.stall_timeout <= 0:
+            raise ValueError(
+                f"stall_timeout must be > 0, got {self.stall_timeout}"
+            )
 
     # ------------------------------------------------------------------
     def replace(self, **changes: Any) -> "ClusterConfig":

@@ -36,6 +36,7 @@ from repro.core.streaming import canonical_labels
 from repro.cluster.api import _CONFIG_FILE, DEFAULT_BATCH_EDGES, Clustering
 from repro.cluster.config import ClusterConfig
 from repro.cluster.registry import Backend, get_backend
+from repro.graph.errors import RetryPolicy
 from repro.graph.tenants import TenantRouter
 
 
@@ -134,6 +135,14 @@ class FleetClusterer:
         self.fleet_steps = 0
         self.stream_dispatches = 0
         self.peak_staging_bytes = 0
+        # Resilience accounting (DESIGN.md §15): tenants quarantined by the
+        # router under config.on_tenant_fault="quarantine" (index ->
+        # recorded failure), transient re-pulls across all tenants, and
+        # autosaves taken from inside fit.
+        self.tenants_quarantined: Dict[int, str] = {}
+        self.ingest_retries = 0
+        self.autosaves = 0
+        self._last_autosave_rows = 0
 
     # ------------------------------------------------------------------
     @property
@@ -183,6 +192,7 @@ class FleetClusterer:
         rates: Optional[Sequence[int]] = None,
         granule: Optional[int] = None,
         max_steps: Optional[int] = None,
+        preemption=None,
     ) -> "FleetClusterer":
         """Drain ``T`` per-tenant sources from :attr:`tenant_rows`.
 
@@ -191,11 +201,28 @@ class FleetClusterer:
         starts at the current per-tenant rows, so ``fit`` after
         :meth:`restore` resumes every tenant mid-stream.  ``max_steps``
         bounds this call (a cooperative suspend point); returns ``self``.
+
+        With ``config.on_tenant_fault="quarantine"``, a tenant whose source
+        dies mid-stream is isolated to PAD no-op rows while the other
+        ``T-1`` tenants stream on bit-identically (the failure surfaces in
+        the finalize info); the default policy propagates the first tenant
+        failure.  ``config.autosave_every`` / ``preemption`` work exactly
+        as in :meth:`StreamClusterer.fit`, checkpointing the whole fleet
+        from inside the drain loop.
         """
         if len(sources) != self.config.tenants:
             raise ValueError(
                 f"{len(sources)} sources for config.tenants="
                 f"{self.config.tenants}"
+            )
+        retry = None
+        if self.config.retries is None or self.config.retries > 0:
+            retry = RetryPolicy(
+                max_retries=(
+                    self.config.retries
+                    if self.config.retries is not None
+                    else RetryPolicy().max_retries
+                )
             )
         router = TenantRouter(
             sources,
@@ -205,6 +232,8 @@ class FleetClusterer:
             pad_multiple=(
                 self.config.chunk if self._backend.chunk_aligned else 1
             ),
+            on_fault=self.config.on_tenant_fault,
+            retry=retry,
             **(
                 {}
                 if self.config.prefetch is None
@@ -213,10 +242,20 @@ class FleetClusterer:
         )
         slabs = router.fleet_slabs(self._rows)
         n = 0
+        stop = False
         try:
             for slab in slabs:
                 self.partial_fit_fleet(slab.edges, n_rows=slab.n_rows)
                 n += 1
+                every = self.config.autosave_every
+                total = int(self._rows.sum())
+                if every is not None and total - self._last_autosave_rows >= every:
+                    self.save(self.config.autosave_dir)
+                    self._last_autosave_rows = total
+                    self.autosaves += 1
+                if preemption is not None and preemption.preempted:
+                    stop = True
+                    break
                 if max_steps is not None and n >= max_steps:
                     break
         finally:
@@ -224,6 +263,16 @@ class FleetClusterer:
         self.peak_staging_bytes = max(
             self.peak_staging_bytes, router.peak_staging_bytes
         )
+        self.tenants_quarantined.update(router.quarantined)
+        self.ingest_retries += router.retries
+        if (
+            stop
+            and self.config.autosave_dir
+            and self._last_autosave_rows != int(self._rows.sum())
+        ):
+            self.save(self.config.autosave_dir)
+            self._last_autosave_rows = int(self._rows.sum())
+            self.autosaves += 1
         return self
 
     def finalize(self) -> FleetClustering:
@@ -242,6 +291,11 @@ class FleetClusterer:
             "peak_staging_bytes": self.peak_staging_bytes,
             "tenant_rows": self.tenant_rows,
         }
+        if self.tenants_quarantined or self.ingest_retries or self.autosaves:
+            info["tenants_quarantined"] = sorted(self.tenants_quarantined)
+            info["tenant_faults"] = dict(self.tenants_quarantined)
+            info["ingest_retries"] = self.ingest_retries
+            info["autosaves"] = self.autosaves
         return FleetClustering(
             state=self._state.to_numpy(), config=self.config, info=info
         )

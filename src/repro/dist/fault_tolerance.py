@@ -10,6 +10,7 @@ multi-host heartbeat service.
 from __future__ import annotations
 
 import signal
+import statistics
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
@@ -21,7 +22,7 @@ class PreemptionHandler:
 
     def __init__(self):
         self._preempted = False
-        self._prev_handler = None
+        self._prev_handlers: Dict[int, object] = {}
 
     @property
     def preempted(self) -> bool:
@@ -31,13 +32,30 @@ class PreemptionHandler:
         """Mark preemption requested (signal handler / tests / schedulers)."""
         self._preempted = True
 
-    def install(self, signals=(signal.SIGTERM,)) -> "PreemptionHandler":
+    def install(self, signals=(signal.SIGTERM,)) -> Dict[int, object]:
+        """Hook ``signals`` and return the handlers they displaced.
+
+        The returned mapping (also remembered for :meth:`uninstall`) lets
+        nested users compose: install, drain, then hand the signals back
+        exactly as they were found.
+        """
+        prev: Dict[int, object] = {}
         for sig in signals:
             try:
-                signal.signal(sig, lambda *_: self.request())
+                prev[sig] = signal.signal(sig, lambda *_: self.request())
             except ValueError:  # not in main thread — polling still works
+                continue
+            self._prev_handlers.setdefault(sig, prev[sig])
+        return prev
+
+    def uninstall(self) -> None:
+        """Restore every handler displaced by :meth:`install`."""
+        for sig, handler in self._prev_handlers.items():
+            try:
+                signal.signal(sig, handler)
+            except (ValueError, TypeError):
                 pass
-        return self
+        self._prev_handlers.clear()
 
 
 class HeartbeatMonitor:
@@ -67,8 +85,7 @@ class HeartbeatMonitor:
     def median(self) -> Optional[float]:
         if not self._durations:
             return None
-        ordered = sorted(self._durations)
-        return ordered[len(ordered) // 2]
+        return statistics.median(self._durations)
 
     def step_start(self) -> None:
         self._t0 = time.perf_counter()

@@ -1,4 +1,13 @@
-from repro.graph import codecs, generators, pipeline, sources, stream, wavefront  # noqa: F401
+from repro.graph import (  # noqa: F401
+    codecs,
+    errors,
+    faults,
+    generators,
+    pipeline,
+    sources,
+    stream,
+    wavefront,
+)
 from repro.graph.codecs import (  # noqa: F401
     Cursor,
     DeltaVarintCodec,
@@ -6,6 +15,16 @@ from repro.graph.codecs import (  # noqa: F401
     RawCodec,
     as_cursor,
 )
+from repro.graph.errors import (  # noqa: F401
+    CorruptBlockError,
+    CorruptStreamError,
+    RetryPolicy,
+    SourceDeadError,
+    StallError,
+    TransientReadError,
+    TruncatedStreamError,
+)
+from repro.graph.faults import ChaosSource, FaultInjector, FaultPlan  # noqa: F401
 from repro.graph.pipeline import PAD, Batch, BatchPipeline  # noqa: F401
 from repro.graph.sources import (  # noqa: F401
     ArraySource,

@@ -41,9 +41,25 @@ from __future__ import annotations
 import io
 import os
 import struct
-from typing import BinaryIO, Iterable, Iterator, NamedTuple, Optional, Tuple, Union
+import zlib
+from typing import (
+    BinaryIO,
+    Callable,
+    Iterable,
+    Iterator,
+    NamedTuple,
+    Optional,
+    Tuple,
+    Union,
+)
 
 import numpy as np
+
+from repro.graph.errors import (
+    CorruptBlockError,
+    CorruptStreamError,
+    TruncatedStreamError,
+)
 
 PathLike = Union[str, os.PathLike]
 
@@ -180,7 +196,7 @@ def decode_varints(buf: np.ndarray, count: int) -> Tuple[np.ndarray, int]:
         return np.zeros(0, _U), 0
     ends = np.flatnonzero((b & 0x80) == 0)
     if ends.size < count:
-        raise ValueError(
+        raise CorruptStreamError(
             f"varint stream truncated: {ends.size} complete values in "
             f"{b.size} bytes, expected {count}"
         )
@@ -188,7 +204,7 @@ def decode_varints(buf: np.ndarray, count: int) -> Tuple[np.ndarray, int]:
     starts = np.concatenate([[0], ends[:-1] + 1])
     lens = ends - starts + 1
     if int(lens.max()) > _MAX_VARINT_BYTES:
-        raise ValueError("varint longer than 10 bytes (corrupt stream)")
+        raise CorruptStreamError("varint longer than 10 bytes (corrupt stream)")
     vals = np.zeros(count, _U)
     for k in range(int(lens.max())):
         m = lens > k
@@ -259,7 +275,7 @@ class RawCodec(EdgeCodec):
     def n_edges(self, path: PathLike) -> int:
         nbytes = os.path.getsize(path)
         if nbytes % self.RECORD_BYTES:
-            raise ValueError(
+            raise TruncatedStreamError(
                 f"{os.fspath(path)}: size {nbytes} is not a whole number of "
                 f"int32 edge pairs ({self.RECORD_BYTES}-byte records) — "
                 "truncated or not a raw edge file"
@@ -361,14 +377,42 @@ class DeltaVarintCodec(EdgeCodec):
 
     ``n_edges`` in the header is patched in at encode close; the sentinel
     ``2**64 - 1`` (unseekable output) degrades to a header-skipping count.
+
+    **Checksummed framing** (magics ``DVX2``/``DVX3``, the minor-version
+    default since ``checksum=True``).  Block payloads and the v2/v3 column
+    encodings are byte-identical; only the per-block header grows::
+
+        block : b"\\xb5\\x1e\\xcb\\x5d" sync | u32 payload_nbytes
+                | u32 n_rows | i64 first_row | u32 crc32 | payload
+
+    ``crc32`` covers the header fields and the payload, so a bit-flipped
+    or torn block is *detected* rather than decoded into silently-wrong
+    edges; ``first_row`` (the block's absolute row in the original
+    stream) makes loss under quarantine exactly countable; and the sync
+    marker lets the decoder resync to the next healthy block even when a
+    header itself is damaged.  On a checksum mismatch the decoder raises
+    :class:`~repro.graph.errors.CorruptBlockError` — or, when the caller
+    supplies ``on_lost``, *quarantines*: it skips to the next block whose
+    header and checksum validate, reports the exact absolute rows lost
+    via ``on_lost(byte_pos, rows_lost)`` (stable ``byte_pos`` keys make
+    re-walks idempotent), and streams on.  Under quarantine, yielded row
+    coordinates count only delivered rows, so cursors and resume remain
+    bit-identical across passes — corruption is a deterministic property
+    of the bytes on disk.  Plain ``DVE1/2/3`` files remain fully
+    readable; pass ``checksum=False`` to write them.
     """
 
     name = "dvc"
     suffixes = (".dvc",)
     magic = b"DVE2"
-    magics = (b"DVE3", b"DVE2", b"DVE1")
+    magics = (b"DVX3", b"DVX2", b"DVE3", b"DVE2", b"DVE1")
     _HEADER = struct.Struct("<4sIQ")
     _BLOCK = struct.Struct("<II")
+    # checksummed block header: sync marker, payload_nbytes, n_rows,
+    # absolute first_row, crc32(header fields + payload)
+    _CSYNC = b"\xb5\x1e\xcb\x5d"
+    _CBLOCK = struct.Struct("<4sIIqI")
+    _CCRC = struct.Struct("<IIq")
     _V3_BASE = struct.Struct("<q")
     _UNKNOWN = (1 << 64) - 1
     _FIXED_WIDTHS = (1, 2, 4)
@@ -377,13 +421,26 @@ class DeltaVarintCodec(EdgeCodec):
     _DEVICE_WIDTHS = (1, 2, 4)
     _U4_DEVICE_TOP = 1 << 31  # u4 chosen only when every zz value is below
 
-    def __init__(self, block_edges: int = 1 << 16, version: int = 2):
+    def __init__(
+        self,
+        block_edges: int = 1 << 16,
+        version: int = 2,
+        checksum: Optional[bool] = None,
+    ):
         if block_edges < 1:
             raise ValueError(f"block_edges must be >= 1, got {block_edges}")
         if version not in (1, 2, 3):
             raise ValueError(f"dvc version must be 1, 2 or 3, got {version}")
+        if checksum is None:
+            checksum = version != 1  # v1 framing predates the sync header
+        if checksum and version == 1:
+            raise ValueError(
+                "checksummed framing requires dvc version >= 2; "
+                "pass checksum=False to write legacy DVE1"
+            )
         self.block_edges = block_edges
         self.version = version
+        self.checksum = checksum
 
     # -- encode --------------------------------------------------------
     def _encode_column_v2(self, zz: np.ndarray) -> bytes:
@@ -436,7 +493,29 @@ class DeltaVarintCodec(EdgeCodec):
         )
 
     def _write_magic(self) -> bytes:
-        return {1: b"DVE1", 2: b"DVE2", 3: b"DVE3"}[self.version]
+        return {
+            (1, False): b"DVE1",
+            (2, False): b"DVE2",
+            (3, False): b"DVE3",
+            (2, True): b"DVX2",
+            (3, True): b"DVX3",
+        }[(self.version, self.checksum)]
+
+    def _encode_cblock(self, rows: np.ndarray, first_row: int) -> bytes:
+        """Checksummed framing around the same block payload bytes."""
+        blk = self._encode_block(rows)
+        payload = blk[self._BLOCK.size :]
+        n_rows = int(np.asarray(rows).shape[0])
+        crc = zlib.crc32(
+            payload,
+            zlib.crc32(self._CCRC.pack(len(payload), n_rows, first_row)),
+        )
+        return (
+            self._CBLOCK.pack(
+                self._CSYNC, len(payload), n_rows, first_row, crc
+            )
+            + payload
+        )
 
     def encode(self, slices: Iterable[np.ndarray], f: BinaryIO) -> int:
         from repro.graph.pipeline import rechunk
@@ -446,7 +525,10 @@ class DeltaVarintCodec(EdgeCodec):
         f.write(self._HEADER.pack(magic, self.block_edges, self._UNKNOWN))
         rows = 0
         for block in rechunk(slices, self.block_edges):
-            f.write(self._encode_block(block))
+            if self.checksum:
+                f.write(self._encode_cblock(block, rows))
+            else:
+                f.write(self._encode_block(block))
             rows += int(block.shape[0])
         if f.seekable():
             end = f.tell()
@@ -456,27 +538,46 @@ class DeltaVarintCodec(EdgeCodec):
         return rows
 
     # -- decode --------------------------------------------------------
-    def _read_header(self, f: BinaryIO) -> Tuple[int, Optional[int], int]:
-        """Returns ``(block_edges, n_edges, version)`` — the version of the
-        *file*, which drives block decoding regardless of this instance's
-        write version."""
+    def _read_header(
+        self, f: BinaryIO
+    ) -> Tuple[int, Optional[int], int, bool]:
+        """Returns ``(block_edges, n_edges, version, checksummed)`` — the
+        version/framing of the *file*, which drives block decoding
+        regardless of this instance's write settings."""
         head = f.read(self._HEADER.size)
         if len(head) < self._HEADER.size:
-            raise ValueError("dvc file shorter than its header")
+            raise TruncatedStreamError("dvc file shorter than its header")
         magic, block_edges, n_edges = self._HEADER.unpack(head)
         if magic not in self.magics:
-            raise ValueError(
+            raise CorruptStreamError(
                 f"bad magic {magic!r}; not a {self.name} edge file"
             )
-        version = {b"DVE1": 1, b"DVE2": 2, b"DVE3": 3}[magic]
-        return block_edges, None if n_edges == self._UNKNOWN else n_edges, version
+        version = {
+            b"DVE1": (1, False),
+            b"DVE2": (2, False),
+            b"DVE3": (3, False),
+            b"DVX2": (2, True),
+            b"DVX3": (3, True),
+        }[magic]
+        return (
+            block_edges,
+            None if n_edges == self._UNKNOWN else n_edges,
+            version[0],
+            version[1],
+        )
+
+    def file_checksummed(self, path: PathLike) -> bool:
+        """Whether the *file* carries per-block checksums (quarantine and
+        exact loss accounting need the ``DVX`` framing)."""
+        with open(path, "rb") as f:
+            return self._read_header(f)[3]
 
     def _next_block_header(self, f: BinaryIO) -> Optional[Tuple[int, int]]:
         head = f.read(self._BLOCK.size)
         if not head:
             return None
         if len(head) < self._BLOCK.size:
-            raise ValueError("dvc file truncated inside a block header")
+            raise TruncatedStreamError("dvc file truncated inside a block header")
         return self._BLOCK.unpack(head)
 
     def _decode_column_v2(
@@ -485,17 +586,17 @@ class DeltaVarintCodec(EdgeCodec):
         """Decode one mode-tagged column from ``buf[off:]``; returns the
         zigzagged uint64 values and the offset past the column."""
         if off >= buf.size:
-            raise ValueError("dvc block truncated before a column mode byte")
+            raise CorruptStreamError("dvc block truncated before a column mode byte")
         mode = int(buf[off])
         off += 1
         if mode == 0:
             vals, consumed = decode_varints(buf[off:], n_rows)
             return vals, off + consumed
         if mode not in self._FIXED_WIDTHS:
-            raise ValueError(f"dvc block has unknown column mode {mode}")
+            raise CorruptStreamError(f"dvc block has unknown column mode {mode}")
         end = off + mode * n_rows
         if end > buf.size:
-            raise ValueError("dvc block truncated inside a fixed-width column")
+            raise CorruptStreamError("dvc block truncated inside a fixed-width column")
         vals = np.frombuffer(buf, dtype=f"<u{mode}", count=n_rows, offset=off)
         return vals.astype(_U), end
 
@@ -504,17 +605,17 @@ class DeltaVarintCodec(EdgeCodec):
     ) -> Tuple[np.ndarray, int]:
         """Like v2 but accepts the u8 width."""
         if off >= buf.size:
-            raise ValueError("dvc block truncated before a column mode byte")
+            raise CorruptStreamError("dvc block truncated before a column mode byte")
         mode = int(buf[off])
         off += 1
         if mode == 0:
             vals, consumed = decode_varints(buf[off:], n_rows)
             return vals, off + consumed
         if mode not in self._FIXED_WIDTHS_V3:
-            raise ValueError(f"dvc block has unknown column mode {mode}")
+            raise CorruptStreamError(f"dvc block has unknown column mode {mode}")
         end = off + mode * n_rows
         if end > buf.size:
-            raise ValueError("dvc block truncated inside a fixed-width column")
+            raise CorruptStreamError("dvc block truncated inside a fixed-width column")
         vals = np.frombuffer(buf, dtype=f"<u{mode}", count=n_rows, offset=off)
         return vals.astype(_U), end
 
@@ -531,13 +632,13 @@ class DeltaVarintCodec(EdgeCodec):
             zz_j, consumed = self._decode_column_v2(buf, off, n_rows)
         else:
             if buf.size < self._V3_BASE.size:
-                raise ValueError("dvc v3 block truncated before its base")
+                raise CorruptStreamError("dvc v3 block truncated before its base")
             (base,) = self._V3_BASE.unpack_from(payload, 0)
             base = np.int64(base)
             zz_i, off = self._decode_column_v3(buf, self._V3_BASE.size, n_rows)
             zz_j, consumed = self._decode_column_v3(buf, off, n_rows)
         if consumed != buf.size:
-            raise ValueError(
+            raise CorruptStreamError(
                 f"dvc block has {buf.size - consumed} trailing bytes"
             )
         i = base + np.cumsum(zigzag_decode(zz_i))
@@ -555,12 +656,12 @@ class DeltaVarintCodec(EdgeCodec):
         """The ``block_edges`` the *file* header declares (the sync-block
         granularity staging sizes its descriptor windows from)."""
         with open(path, "rb") as f:
-            block_edges, _, _ = self._read_header(f)
+            block_edges = self._read_header(f)[0]
         return block_edges
 
     def n_edges(self, path: PathLike) -> int:
         with open(path, "rb") as f:
-            _, n, _ = self._read_header(f)
+            _, n, _, checksummed = self._read_header(f)
             if n is not None:
                 return n
             # sentinel header (unseekable encode): count by skipping block
@@ -568,21 +669,39 @@ class DeltaVarintCodec(EdgeCodec):
             # so a mid-payload truncation fails here at open, not as a
             # confusing short-stream error mid-fit
             size = os.fstat(f.fileno()).st_size
+            hdr_struct = self._CBLOCK if checksummed else self._BLOCK
             total = 0
             while True:
-                hdr = self._next_block_header(f)
-                if hdr is None:
+                head = f.read(hdr_struct.size)
+                if not head:
                     return total
-                payload_nbytes, n_rows = hdr
+                if len(head) < hdr_struct.size:
+                    raise TruncatedStreamError(
+                        f"{os.fspath(path)}: dvc file truncated inside a "
+                        "block header"
+                    )
+                if checksummed:
+                    marker, payload_nbytes, n_rows, _, _ = hdr_struct.unpack(
+                        head
+                    )
+                    if marker != self._CSYNC:
+                        raise CorruptBlockError(
+                            f"{os.fspath(path)}: lost block framing at byte "
+                            f"{f.tell() - hdr_struct.size}"
+                        )
+                else:
+                    payload_nbytes, n_rows = hdr_struct.unpack(head)
                 total += n_rows
                 f.seek(payload_nbytes, io.SEEK_CUR)
                 if f.tell() > size:
-                    raise ValueError(
+                    raise TruncatedStreamError(
                         f"{os.fspath(path)}: dvc file truncated inside a "
                         "block payload"
                     )
 
-    def _token_seek(self, f: BinaryIO, cursor: Cursor) -> Optional[int]:
+    def _token_seek(
+        self, f: BinaryIO, cursor: Cursor, hdr_size: int
+    ) -> Optional[int]:
         """Seek to the token's sync block and return its first-row index —
         or ``None`` when the token is foreign or stale (wrong tag, file
         size changed since mint, out of bounds, or ahead of the cursor
@@ -600,42 +719,228 @@ class DeltaVarintCodec(EdgeCodec):
         # must land on a block header (an exact-EOF sync is only ever
         # reached when the cursor row is past the stream, which callers
         # short-circuit before decoding)
-        if not (self._HEADER.size <= block_byte <= end - self._BLOCK.size):
+        if not (self._HEADER.size <= block_byte <= end - hdr_size):
             return None
         f.seek(block_byte)
         return block_row
 
+    # -- checksummed walk ----------------------------------------------
+    def _read_cblock(self, f: BinaryIO, pos: int, size: int, block_edges: int,
+                     n_edges: Optional[int]):
+        """Read and validate one checksummed block at ``pos`` (``f`` already
+        positioned there).  Returns ``None`` at clean EOF, a ``str`` reason
+        when the block cannot be trusted, or ``(n_rows, first_row, payload,
+        end_byte)`` on success."""
+        head = f.read(self._CBLOCK.size)
+        if not head:
+            return None
+        if len(head) < self._CBLOCK.size:
+            return "file ends inside a block header"
+        marker, payload_nbytes, n_rows, first_row, crc = self._CBLOCK.unpack(
+            head
+        )
+        if marker != self._CSYNC:
+            return "lost block framing (bad sync marker)"
+        if not (1 <= n_rows <= block_edges):
+            return f"implausible block row count {n_rows}"
+        if first_row < 0 or (
+            n_edges is not None and first_row + n_rows > n_edges
+        ):
+            return f"implausible block first-row {first_row}"
+        end = pos + self._CBLOCK.size + payload_nbytes
+        if end > size:
+            return "file ends inside a block payload"
+        payload = f.read(payload_nbytes)
+        if len(payload) < payload_nbytes:
+            return "file ends inside a block payload"
+        want = zlib.crc32(
+            payload,
+            zlib.crc32(self._CCRC.pack(payload_nbytes, n_rows, first_row)),
+        )
+        if want != crc:
+            return "block checksum mismatch"
+        return n_rows, first_row, payload, end
+
+    def _scan_forward(self, f: BinaryIO, start: int, size: int,
+                      block_edges: int, n_edges: Optional[int]):
+        """Resync: find the next byte position at/after ``start`` holding a
+        block whose header and checksum validate.  Returns ``(pos, parsed)``
+        or ``None`` when no healthy block remains."""
+        window = 1 << 20
+        overlap = len(self._CSYNC) - 1
+        pos = start
+        while pos < size:
+            f.seek(pos)
+            buf = f.read(window + overlap)
+            idx = 0
+            while True:
+                hit = buf.find(self._CSYNC, idx)
+                if hit == -1 or hit >= window:
+                    break
+                cand = pos + hit
+                f.seek(cand)
+                blk = self._read_cblock(f, cand, size, block_edges, n_edges)
+                if isinstance(blk, tuple):
+                    return cand, blk
+                idx = hit + 1
+            pos += window
+        return None
+
+    def _walk_plain(self, f: BinaryIO, cursor: Cursor):
+        """Original unchecked framing: yields ``(block_row, n_rows,
+        payload_or_None, end_byte)`` — payload ``None`` for blocks wholly
+        before the cursor (seek-skipped)."""
+        block_row = self._token_seek(f, cursor, self._BLOCK.size)
+        if block_row is None:  # bare/foreign token: header-skip from 0
+            f.seek(self._HEADER.size)
+            block_row = 0
+        while True:
+            hdr = self._next_block_header(f)
+            if hdr is None:
+                return
+            payload_nbytes, n_rows = hdr
+            next_row = block_row + n_rows
+            if cursor.row >= next_row:  # wholly before the cursor: skip
+                f.seek(payload_nbytes, io.SEEK_CUR)
+                yield block_row, n_rows, None, f.tell()
+            else:
+                payload = f.read(payload_nbytes)
+                if len(payload) < payload_nbytes:
+                    raise TruncatedStreamError(
+                        "dvc file truncated inside a block"
+                    )
+                yield block_row, n_rows, payload, f.tell()
+            block_row = next_row
+
+    def _walk_checksummed(
+        self,
+        f: BinaryIO,
+        size: int,
+        cursor: Cursor,
+        block_edges: int,
+        n_edges: Optional[int],
+        on_lost: Optional[Callable[[int, int], None]],
+        path: str,
+    ):
+        """Checksummed framing walk with optional quarantine.
+
+        Yields the same ``(block_row, n_rows, payload_or_None, end_byte)``
+        tuples as :meth:`_walk_plain`, but every block — skipped or not —
+        is checksum-verified, so yielded row coordinates count only
+        *delivered* rows and are identical on every pass over the same
+        bytes.  On a bad block: raise :class:`CorruptBlockError` when
+        ``on_lost`` is ``None``, else resync to the next healthy block and
+        report ``on_lost(detect_byte, rows_lost)`` with the exact absolute
+        row count the ``first_row`` chain proves missing.
+        """
+        block_row = self._token_seek(f, cursor, self._CBLOCK.size)
+        expected_abs: Optional[int] = None
+        if block_row is None:
+            f.seek(self._HEADER.size)
+            block_row = 0
+            expected_abs = 0
+        while True:
+            pos = f.tell()
+            blk = self._read_cblock(f, pos, size, block_edges, n_edges)
+            if blk is None:  # clean EOF at a block boundary
+                if (
+                    n_edges is not None
+                    and expected_abs is not None
+                    and expected_abs < n_edges
+                ):
+                    if on_lost is None:
+                        raise TruncatedStreamError(
+                            f"{path}: truncated — stream ends "
+                            f"{n_edges - expected_abs} rows short of its "
+                            f"declared {n_edges} edges"
+                        )
+                    on_lost(size, n_edges - expected_abs)
+                return
+            if isinstance(blk, str):
+                if on_lost is None:
+                    msg = f"{path}: {blk} at byte {pos}"
+                    if blk.startswith("file ends"):
+                        raise TruncatedStreamError(f"{msg} (truncated)")
+                    raise CorruptBlockError(msg)
+                if expected_abs is None:
+                    # corruption before the first block a (stale) token
+                    # landed on — no absolute anchor yet, so restart the
+                    # walk from the top, which always has one
+                    f.seek(self._HEADER.size)
+                    block_row = 0
+                    expected_abs = 0
+                    continue
+                nxt = self._scan_forward(
+                    f, pos + 1, size, block_edges, n_edges
+                )
+                if nxt is None:
+                    # nothing healthy to EOF: the tail is lost
+                    if n_edges is None:
+                        raise TruncatedStreamError(
+                            f"{path}: {blk} at byte {pos}, truncated — no "
+                            "healthy block follows (unknown total, cannot "
+                            "account)"
+                        )
+                    if n_edges > expected_abs:
+                        on_lost(pos, n_edges - expected_abs)
+                    return
+                _, (n_rows, first_row, payload, end) = nxt
+                if first_row < expected_abs:
+                    raise CorruptStreamError(
+                        f"{path}: resync block at byte {nxt[0]} rewinds to "
+                        f"row {first_row} (expected {expected_abs})"
+                    )
+                if first_row > expected_abs:
+                    on_lost(pos, first_row - expected_abs)
+                expected_abs = first_row
+            else:
+                n_rows, first_row, payload, end = blk
+                if expected_abs is None:
+                    expected_abs = first_row  # anchor from the token block
+                elif first_row != expected_abs:
+                    raise CorruptStreamError(
+                        f"{path}: block at byte {pos} starts at absolute "
+                        f"row {first_row}, expected {expected_abs} — "
+                        "stream spliced or rewritten mid-walk"
+                    )
+            next_row = block_row + n_rows
+            if cursor.row >= next_row:
+                yield block_row, n_rows, None, end
+            else:
+                yield block_row, n_rows, payload, end
+            block_row = next_row
+            expected_abs += n_rows
+            f.seek(end)
+
     def decode_from(
-        self, path: PathLike, cursor: Cursor
+        self,
+        path: PathLike,
+        cursor: Cursor,
+        *,
+        on_lost: Optional[Callable[[int, int], None]] = None,
     ) -> Iterator[Tuple[np.ndarray, Cursor]]:
         with open(path, "rb") as f:
             size = os.fstat(f.fileno()).st_size
-            # header first: the file's version (DVE1 vs DVE2) drives block
+            # header first: the file's version/framing drives block
             # decoding, so it must be known before any token fast-forward
-            _, _, version = self._read_header(f)
-            block_row = self._token_seek(f, cursor)
-            if block_row is None:  # bare/foreign token: header-skip from 0
-                f.seek(self._HEADER.size)
-                block_row = 0
-            while True:
-                hdr = self._next_block_header(f)
-                if hdr is None:
-                    return
-                payload_nbytes, n_rows = hdr
+            block_edges, n_edges, version, checksummed = self._read_header(f)
+            if checksummed:
+                walk = self._walk_checksummed(
+                    f, size, cursor, block_edges, n_edges, on_lost,
+                    os.fspath(path),
+                )
+            else:
+                walk = self._walk_plain(f, cursor)
+            for block_row, n_rows, payload, end in walk:
+                if payload is None:  # wholly before the cursor
+                    continue
                 next_row = block_row + n_rows
-                if cursor.row >= next_row:  # wholly before the cursor: skip
-                    f.seek(payload_nbytes, io.SEEK_CUR)
-                else:
-                    payload = f.read(payload_nbytes)
-                    if len(payload) < payload_nbytes:
-                        raise ValueError("dvc file truncated inside a block")
-                    rows = self._decode_block(payload, n_rows, version)
-                    if cursor.row > block_row:
-                        rows = rows[cursor.row - block_row :]
-                    yield rows, Cursor(
-                        next_row, (DVC_TOKEN_TAG, size, f.tell(), next_row)
-                    )
-                block_row = next_row
+                rows = self._decode_block(payload, n_rows, version)
+                if cursor.row > block_row:
+                    rows = rows[cursor.row - block_row :]
+                yield rows, Cursor(
+                    next_row, (DVC_TOKEN_TAG, size, end, next_row)
+                )
 
     # -- block scan (compressed-slab staging) --------------------------
     def _parse_v3_meta(self, payload: bytes, n_rows: int) -> Optional[FixedBlockMeta]:
@@ -643,7 +948,7 @@ class DeltaVarintCodec(EdgeCodec):
         column needs the host (varint mode or u8 width)."""
         buf = np.frombuffer(payload, np.uint8)
         if buf.size < self._V3_BASE.size + 1:
-            raise ValueError("dvc v3 block truncated before its base")
+            raise CorruptStreamError("dvc v3 block truncated before its base")
         (base,) = self._V3_BASE.unpack_from(payload, 0)
         off = self._V3_BASE.size
         w_i = int(buf[off])
@@ -652,17 +957,21 @@ class DeltaVarintCodec(EdgeCodec):
             return None
         off = off_i + w_i * n_rows
         if off >= buf.size:
-            raise ValueError("dvc v3 block truncated inside a column")
+            raise CorruptStreamError("dvc v3 block truncated inside a column")
         w_j = int(buf[off])
         off_j = off + 1
         if w_j not in self._DEVICE_WIDTHS:
             return None
         if off_j + w_j * n_rows != buf.size:
-            raise ValueError("dvc v3 block has trailing bytes")
+            raise CorruptStreamError("dvc v3 block has trailing bytes")
         return FixedBlockMeta(off_i, w_i, off_j, w_j, int(base))
 
     def scan_blocks(
-        self, path: PathLike, cursor: Cursor
+        self,
+        path: PathLike,
+        cursor: Cursor,
+        *,
+        on_lost: Optional[Callable[[int, int], None]] = None,
     ) -> Iterator[CodecBlock]:
         """Yield every sync block that contains rows at/after ``cursor``,
         *without* decoding them.
@@ -672,46 +981,41 @@ class DeltaVarintCodec(EdgeCodec):
         tells the device decoder where the lanes are.  Blocks are yielded
         whole — a cursor landing mid-block yields the *containing* block
         (``first_row < cursor.row``); the caller host-decodes and slices
-        that one (DESIGN.md §14).  The cursor token fast-forward and file
-        framing checks are identical to :meth:`decode_from`, so resume
-        positions name the same blocks bit-for-bit.
+        that one (DESIGN.md §14).  The cursor token fast-forward, framing
+        checks, and quarantine semantics (``on_lost``) are identical to
+        :meth:`decode_from`, so resume positions name the same blocks
+        bit-for-bit.
         """
         with open(path, "rb") as f:
             size = os.fstat(f.fileno()).st_size
-            _, _, version = self._read_header(f)
-            block_row = self._token_seek(f, cursor)
-            if block_row is None:
-                f.seek(self._HEADER.size)
-                block_row = 0
-            while True:
-                hdr = self._next_block_header(f)
-                if hdr is None:
-                    return
-                payload_nbytes, n_rows = hdr
+            block_edges, n_edges, version, checksummed = self._read_header(f)
+            if checksummed:
+                walk = self._walk_checksummed(
+                    f, size, cursor, block_edges, n_edges, on_lost,
+                    os.fspath(path),
+                )
+            else:
+                walk = self._walk_plain(f, cursor)
+            for block_row, n_rows, payload, end in walk:
+                if payload is None:
+                    continue
                 next_row = block_row + n_rows
-                if cursor.row >= next_row:
-                    f.seek(payload_nbytes, io.SEEK_CUR)
-                else:
-                    payload = f.read(payload_nbytes)
-                    if len(payload) < payload_nbytes:
-                        raise ValueError("dvc file truncated inside a block")
-                    fixed = (
-                        self._parse_v3_meta(payload, n_rows)
-                        if version == 3
-                        else None
-                    )
-                    yield CodecBlock(
-                        block_row,
-                        n_rows,
-                        payload,
-                        version,
-                        fixed,
-                        Cursor(
-                            next_row,
-                            (DVC_TOKEN_TAG, size, f.tell(), next_row),
-                        ),
-                    )
-                block_row = next_row
+                fixed = (
+                    self._parse_v3_meta(payload, n_rows)
+                    if version == 3
+                    else None
+                )
+                yield CodecBlock(
+                    block_row,
+                    n_rows,
+                    payload,
+                    version,
+                    fixed,
+                    Cursor(
+                        next_row,
+                        (DVC_TOKEN_TAG, size, end, next_row),
+                    ),
+                )
 
 
 # ---------------------------------------------------------------------------

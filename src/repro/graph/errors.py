@@ -1,0 +1,153 @@
+"""Typed ingest failure taxonomy and the bounded retry policy.
+
+The one-pass model makes ingest failures uniquely costly: an edge the
+stream never delivers can never be re-read, so every failure either
+recovers exactly (retry + resume from the cursor) or degrades
+*accountably* (quarantine + counted loss).  This module is the shared
+vocabulary for that contract — it has no dependencies on the rest of
+``repro.graph`` so codecs, sources, the pipeline, and the fault
+injectors can all import it without cycles.
+
+Error classes
+-------------
+
+``CorruptStreamError`` (a ``ValueError``) covers data-level damage: the
+bytes arrived but decode cannot trust them.  ``TruncatedStreamError``
+(file shorter than its framing declares) and ``CorruptBlockError``
+(per-block checksum mismatch) narrow it.  These are *not* retryable —
+re-reading the same bytes reproduces the same damage.
+
+``TransientReadError`` (an ``OSError``) marks failures worth retrying:
+the bytes may well arrive on the next attempt.  ``RetryPolicy`` treats
+any ``OSError`` as transient by default.  ``SourceDeadError`` is the
+opposite verdict — the source is gone for good (mid-stream death,
+deleted feed) — and deliberately subclasses ``RuntimeError`` so the
+default policy never spins on it.
+
+``StallError`` (a ``TimeoutError``) is raised by the prefetch watchdog
+when a single produce exceeds the configured hard timeout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Tuple, Type
+
+
+class CorruptStreamError(ValueError):
+    """Stream bytes are present but cannot be trusted (bad framing,
+    checksum mismatch, undecodable varints).  Not retryable."""
+
+
+class TruncatedStreamError(CorruptStreamError):
+    """The file ends before its own framing says it should."""
+
+
+class CorruptBlockError(CorruptStreamError):
+    """A codec block failed its checksum (or lost framing) — the block's
+    rows are unrecoverable, though later blocks may resync."""
+
+
+class TransientReadError(OSError):
+    """A read failure that may succeed on retry (flaky filesystem, NFS
+    hiccup, injected chaos).  Retryable under the default policy."""
+
+
+class SourceDeadError(RuntimeError):
+    """The source is permanently gone mid-stream; retrying is useless.
+    Fleet routers quarantine the tenant instead of retrying."""
+
+
+class StallError(TimeoutError):
+    """The prefetch producer exceeded the hard stall timeout."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with capped exponential backoff, per error class.
+
+    ``retryable`` names the exception classes worth re-attempting;
+    everything else propagates immediately.  ``max_retries`` bounds the
+    *consecutive* failed attempts for one fault — a successful read
+    resets the counter, so a long stream tolerates many independent
+    transients while a hard failure still surfaces after a bounded
+    number of attempts.  Backoff for attempt ``k`` (1-based) is
+    ``min(backoff_cap, backoff_base * 2**(k-1))`` seconds.
+    """
+
+    max_retries: int = 3
+    backoff_base: float = 0.01
+    backoff_cap: float = 1.0
+    retryable: Tuple[Type[BaseException], ...] = (TransientReadError, OSError)
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base < 0 or self.backoff_cap < 0:
+            raise ValueError("backoff_base/backoff_cap must be >= 0")
+
+    def is_retryable(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.retryable) and not isinstance(
+            exc, SourceDeadError
+        )
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before the ``attempt``-th retry (1-based)."""
+        return min(self.backoff_cap, self.backoff_base * (2.0 ** (attempt - 1)))
+
+    def backoff(self, attempt: int) -> None:
+        d = self.delay(attempt)
+        if d > 0:
+            self.sleep(d)
+
+
+def retrying_slices(resume, cursor_at, cursor, policy, on_retry=None):
+    """Iterate ``resume(cursor)`` with bounded re-resume on transient
+    errors.
+
+    Every row-resumable source can turn a retry into a re-resume: we
+    track how many rows have been yielded, and on a retryable failure
+    re-open the iterator at ``cursor_at(row)`` after backoff.  Yielded
+    slices are never repeated and never skipped, so a stream that
+    survives its transients is bit-identical to a fault-free one.
+
+    ``resume`` takes a cursor and returns a slice iterator; ``cursor_at``
+    takes a row and mints the best cursor for it.  ``on_retry(attempt,
+    exc)`` is called before each backoff (counters, logging).
+    Non-retryable errors and exhausted budgets propagate.
+    """
+    row = int(cursor.row)
+    it = resume(cursor)
+    attempt = 0
+    try:
+        while True:
+            try:
+                sl = next(it)
+            except StopIteration:
+                return
+            except Exception as exc:
+                if not policy.is_retryable(exc) or attempt >= policy.max_retries:
+                    raise
+                attempt += 1
+                if on_retry is not None:
+                    on_retry(attempt, exc)
+                close = getattr(it, "close", None)
+                if close is not None:
+                    try:
+                        close()
+                    except Exception:
+                        pass
+                policy.backoff(attempt)
+                it = resume(cursor_at(row))
+                continue
+            attempt = 0
+            n = int(sl.shape[0]) if hasattr(sl, "shape") else len(sl)
+            row += n
+            if n:
+                yield sl
+    finally:
+        close = getattr(it, "close", None)
+        if close is not None:
+            close()

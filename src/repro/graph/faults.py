@@ -1,0 +1,322 @@
+"""Deterministic fault injection for chaos-testing the ingest stack.
+
+Chaos tests are only CI-stable if the chaos itself is reproducible: every
+fault this module injects — transient read errors, latency stalls, hard
+mid-stream source death, bit-flipped or truncated codec blocks — is drawn
+from a seeded :class:`numpy.random.Generator`, so the same seed plants the
+same faults at the same stream rows / file bytes on every run.
+
+Three layers:
+
+* :class:`FaultInjector` — turns ``(seed, counts)`` into a concrete
+  :class:`FaultPlan` (sorted fault rows) for a stream of known length.
+* :class:`ChaosSource` — wraps any :class:`~repro.graph.sources.EdgeSource`
+  and executes a plan *without ever changing the delivered rows*: a
+  transient raises :class:`~repro.graph.errors.TransientReadError` exactly
+  once at its planned row (a retrying reader that re-resumes at the failure
+  row sees a bit-identical stream), a stall sleeps, and ``die_row`` makes
+  the source permanently raise
+  :class:`~repro.graph.errors.SourceDeadError`.
+* File corruptors — :func:`list_blocks`, :func:`corrupt_blocks`,
+  :func:`truncate_blocks` operate on *checksummed* ``.dvc`` files (``DVX``
+  framing) and return the exact planted loss in rows, so tests can assert
+  ``edges_lost`` equals the plan to the edge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.codecs import Cursor, DeltaVarintCodec, as_cursor
+from repro.graph.errors import (  # noqa: F401  (re-exported chaos vocabulary)
+    CorruptBlockError,
+    CorruptStreamError,
+    RetryPolicy,
+    SourceDeadError,
+    StallError,
+    TransientReadError,
+    TruncatedStreamError,
+)
+from repro.graph.sources import EdgeSource
+
+
+# ---------------------------------------------------------------------------
+# Seeded fault plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A concrete, fully deterministic fault schedule over a row span.
+
+    ``transients``/``stalls`` are stream rows *before which* the fault
+    fires (each exactly once); ``die_row`` is the row at which the source
+    dies for good (every read at or after it — including retries — raises
+    :class:`SourceDeadError`)."""
+
+    transients: Tuple[int, ...] = ()
+    stalls: Tuple[int, ...] = ()
+    die_row: Optional[int] = None
+    stall_seconds: float = 0.05
+
+    def __post_init__(self):
+        if any(r < 0 for r in self.transients + self.stalls):
+            raise ValueError("fault rows must be >= 0")
+        if self.die_row is not None and self.die_row < 0:
+            raise ValueError(f"die_row must be >= 0, got {self.die_row}")
+
+
+class FaultInjector:
+    """Seed-driven fault planner.
+
+    ``plan(n_rows)`` draws the requested number of transient / stall rows
+    (and optionally a death row) uniformly over ``[1, n_rows)`` from
+    ``np.random.default_rng(seed)`` — same seed, same plan, every time.
+    """
+
+    def __init__(
+        self,
+        seed: int,
+        *,
+        transients: int = 0,
+        stalls: int = 0,
+        stall_seconds: float = 0.05,
+        die: bool = False,
+    ):
+        if transients < 0 or stalls < 0:
+            raise ValueError("fault counts must be >= 0")
+        self.seed = int(seed)
+        self.transients = int(transients)
+        self.stalls = int(stalls)
+        self.stall_seconds = float(stall_seconds)
+        self.die = bool(die)
+
+    def plan(self, n_rows: int) -> FaultPlan:
+        if n_rows < 2:
+            raise ValueError(f"need n_rows >= 2 to place faults, got {n_rows}")
+        rng = np.random.default_rng(self.seed)
+        need = self.transients + self.stalls + (1 if self.die else 0)
+        rows = (
+            rng.choice(np.arange(1, n_rows), size=need, replace=False)
+            if need
+            else np.empty(0, np.int64)
+        )
+        t = tuple(sorted(int(r) for r in rows[: self.transients]))
+        s = tuple(
+            sorted(
+                int(r)
+                for r in rows[self.transients : self.transients + self.stalls]
+            )
+        )
+        die_row = int(rows[-1]) if self.die else None
+        return FaultPlan(
+            transients=t,
+            stalls=s,
+            die_row=die_row,
+            stall_seconds=self.stall_seconds,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Stream-level chaos
+# ---------------------------------------------------------------------------
+
+
+class ChaosSource(EdgeSource):
+    """Wrap an :class:`EdgeSource` and execute a :class:`FaultPlan`.
+
+    The wrapper never alters the rows themselves: a planned transient
+    splits the in-flight slice at the fault row, yields the clean prefix,
+    and raises — so a reader that retries by re-resuming at the failure
+    row reconstructs the exact base stream.  Each transient/stall fires
+    once per wrapper instance; ``die_row`` is permanent (the wrapped
+    source is "gone").
+    """
+
+    def __init__(self, base: EdgeSource, plan: FaultPlan):
+        self.base = base
+        self.plan = plan
+        self._pending_transients = set(plan.transients)
+        self._pending_stalls = set(plan.stalls)
+        self._dead = False
+        self.faults_fired = 0
+
+    # -- delegated geometry --------------------------------------------
+    @property
+    def n_edges(self) -> Optional[int]:
+        return self.base.n_edges
+
+    def cursor_at(self, row: int) -> Cursor:
+        return self.base.cursor_at(row)
+
+    # -- chaos walk ----------------------------------------------------
+    def _next_fault(self, row: int, end: int):
+        """Earliest pending fault with ``row < fault_row <= end`` (a fault
+        at ``r`` fires after ``r`` rows have been delivered)."""
+        hits = []
+        if self._dead or (
+            self.plan.die_row is not None and row >= self.plan.die_row
+        ):
+            # already past the death row on resume: dead immediately
+            return ("die", row)
+        for r in self._pending_transients:
+            if row < r <= end:
+                hits.append((r, "transient"))
+        for r in self._pending_stalls:
+            if row < r <= end:
+                hits.append((r, "stall"))
+        d = self.plan.die_row
+        if d is not None and row < d <= end:
+            hits.append((d, "die"))
+        if not hits:
+            return None
+        r, kind = min(hits)
+        return (kind, r)
+
+    def _chaos_iter(self, it: Iterator[np.ndarray], row: int):
+        try:
+            for sl in it:
+                sl = np.asarray(sl)
+                while sl.shape[0]:
+                    end = row + sl.shape[0]
+                    hit = self._next_fault(row, end)
+                    if hit is None:
+                        yield sl
+                        row = end
+                        break
+                    kind, r = hit
+                    head, sl = sl[: r - row], sl[r - row :]
+                    if head.shape[0]:
+                        yield head
+                    row = r
+                    if kind == "transient":
+                        self._pending_transients.discard(r)
+                        self.faults_fired += 1
+                        raise TransientReadError(
+                            f"injected transient read error at row {r}"
+                        )
+                    if kind == "stall":
+                        self._pending_stalls.discard(r)
+                        self.faults_fired += 1
+                        time.sleep(self.plan.stall_seconds)
+                        continue
+                    # kind == "die"
+                    self._dead = True
+                    self.faults_fired += 1
+                    raise SourceDeadError(
+                        f"injected source death at row {r}"
+                    )
+        finally:
+            close = getattr(it, "close", None)
+            if close is not None:
+                close()
+
+    def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
+        if self._dead:
+            raise SourceDeadError("source died earlier in this stream")
+        return self._chaos_iter(self.base.iter_slices(start), start)
+
+    def resume(self, cursor) -> Iterator[np.ndarray]:
+        cursor = as_cursor(cursor)
+        if self._dead:
+            raise SourceDeadError("source died earlier in this stream")
+        return self._chaos_iter(self.base.resume(cursor), int(cursor.row))
+
+
+# ---------------------------------------------------------------------------
+# File-level chaos (checksummed .dvc)
+# ---------------------------------------------------------------------------
+
+
+def list_blocks(path) -> List[Tuple[int, int, int, int]]:
+    """Walk a checksummed ``.dvc`` file and return its block table as
+    ``(byte_pos, n_rows, first_row, end_byte)`` tuples (fails on plain
+    unchecksummed framing — file chaos needs ``DVX`` files)."""
+    codec = DeltaVarintCodec()
+    size = os.path.getsize(path)
+    out: List[Tuple[int, int, int, int]] = []
+    with open(path, "rb") as f:
+        block_edges, n_edges, _version, checksummed = codec._read_header(f)
+        if not checksummed:
+            raise ValueError(
+                f"{path}: not a checksummed (DVX) file — corrupt_blocks/"
+                "truncate_blocks need per-block checksums to plant "
+                "detectable damage"
+            )
+        pos = codec._HEADER.size
+        while True:
+            got = codec._read_cblock(f, pos, size, block_edges, n_edges)
+            if got is None:
+                break
+            if isinstance(got, str):
+                raise CorruptStreamError(f"{path} at byte {pos}: {got}")
+            n_rows, first_row, _payload, end = got
+            out.append((pos, n_rows, first_row, end))
+            pos = end
+    return out
+
+
+def corrupt_blocks(path, seed: int, n_blocks: int = 1) -> dict:
+    """Flip one payload byte in ``n_blocks`` seed-chosen blocks of a
+    checksummed ``.dvc`` file.
+
+    Returns ``{"blocks": [(index, first_row, n_rows), ...], "rows_lost":
+    total}`` — the *exact* loss a quarantining reader must report, since
+    each damaged block fails its checksum and is skipped whole while every
+    other block still parses (the flip never touches framing bytes).
+    """
+    blocks = list_blocks(path)
+    if n_blocks > len(blocks):
+        raise ValueError(
+            f"asked to corrupt {n_blocks} of {len(blocks)} blocks"
+        )
+    rng = np.random.default_rng(seed)
+    picks = sorted(
+        int(i) for i in rng.choice(len(blocks), size=n_blocks, replace=False)
+    )
+    hdr = DeltaVarintCodec._CBLOCK.size
+    planted = []
+    with open(path, "r+b") as f:
+        for i in picks:
+            pos, n_rows, first_row, end = blocks[i]
+            payload_nbytes = end - pos - hdr
+            assert payload_nbytes > 0
+            off = pos + hdr + int(rng.integers(payload_nbytes))
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0xFF]))
+            planted.append((i, first_row, n_rows))
+    return {
+        "blocks": planted,
+        "rows_lost": sum(n for _, _, n in planted),
+    }
+
+
+def truncate_blocks(path, n_blocks: int = 1, partial: int = 7) -> dict:
+    """Truncate a checksummed ``.dvc`` file mid-block: drop the last
+    ``n_blocks`` blocks entirely, then leave ``partial`` stray bytes of the
+    first dropped block so the tail is torn, not clean.
+
+    Returns ``{"rows_lost": ..., "first_lost_row": ...}`` — what a
+    quarantining reader must account for the missing tail.
+    """
+    blocks = list_blocks(path)
+    if not 1 <= n_blocks <= len(blocks):
+        raise ValueError(
+            f"asked to truncate {n_blocks} of {len(blocks)} blocks"
+        )
+    keep = blocks[: len(blocks) - n_blocks]
+    first_dropped = blocks[len(blocks) - n_blocks]
+    cut = (keep[-1][3] if keep else DeltaVarintCodec._HEADER.size) + min(
+        partial, first_dropped[3] - first_dropped[0] - 1
+    )
+    with open(path, "r+b") as f:
+        f.truncate(cut)
+    rows_lost = sum(n for _, n, _, _ in blocks[len(blocks) - n_blocks :])
+    return {"rows_lost": rows_lost, "first_lost_row": first_dropped[2]}

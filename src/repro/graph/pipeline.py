@@ -39,11 +39,13 @@ from __future__ import annotations
 import threading
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from typing import Iterable, Iterator, NamedTuple, Optional, Union
 
 import numpy as np
 
 from repro.graph.codecs import Cursor, as_cursor
+from repro.graph.errors import RetryPolicy, StallError, retrying_slices
 
 # Sentinel node id used to pad edge batches/chunks to fixed shapes; padded
 # edges are no-ops in every clustering tier.  (Canonical definition — re-
@@ -373,19 +375,47 @@ class BatchPipeline:
         *,
         pad_multiple: int = 1,
         prefetch: int = 2,
+        retry: Optional[RetryPolicy] = RetryPolicy(),
+        stall_timeout: Optional[float] = None,
     ):
         if batch_edges < 1:
             raise ValueError(f"batch_edges must be >= 1, got {batch_edges}")
         if pad_multiple < 1:
             raise ValueError(f"pad_multiple must be >= 1, got {pad_multiple}")
+        if stall_timeout is not None and stall_timeout <= 0:
+            raise ValueError(
+                f"stall_timeout must be > 0 (or None), got {stall_timeout}"
+            )
         self.source = source
         self.batch_edges = round_up(batch_edges, pad_multiple)
         self.prefetch = max(0, int(prefetch))
+        # Resilience knobs: the pipeline re-resumes the source at the last
+        # delivered row on transient read errors (retry=None disables), and
+        # the consumer side of the prefetch queue raises StallError when a
+        # single produce exceeds stall_timeout seconds.  The heartbeat
+        # monitor brackets every producer pull so soft stalls (straggling
+        # but not dead) are visible in ``stalls`` without killing the run.
+        self.retry = retry
+        self.stall_timeout = stall_timeout
+        from repro.dist.fault_tolerance import HeartbeatMonitor
+
+        self.heartbeat = HeartbeatMonitor()
+        self.retries = 0
         self.peak_buffer_bytes = 0
         self.batches_produced = 0
         self.megabatches_produced = 0
         self._inflight_bytes = 0
         self._lock = threading.Lock()
+
+    @property
+    def stalls(self) -> int:
+        """Producer pulls flagged as stragglers by the heartbeat monitor
+        (soft stalls — a hard ``stall_timeout`` breach raises instead)."""
+        return len(self.heartbeat.stragglers)
+
+    def _count_retry(self, attempt: int, exc: BaseException) -> None:
+        with self._lock:
+            self.retries += 1
 
     # ------------------------------------------------------------------
     def _acquire(self, nbytes: int) -> None:
@@ -408,8 +438,18 @@ class BatchPipeline:
         """
         held: deque = deque()  # (nbytes, rows) per still-pinnable slice
         held_rows = 0  # running total, so pruning is O(1) per slice
+        if self.retry is not None:
+            src_iter = retrying_slices(
+                self.source.resume,
+                self.source.cursor_at,
+                start,
+                self.retry,
+                self._count_retry,
+            )
+        else:
+            src_iter = self.source.resume(start)
         try:
-            for sl in self.source.resume(start):
+            for sl in src_iter:
                 sl = np.asarray(sl)
                 held.append((int(sl.nbytes), int(sl.shape[0])))
                 held_rows += int(sl.shape[0])
@@ -420,6 +460,9 @@ class BatchPipeline:
                 self._acquire(int(sl.nbytes))
                 yield sl
         finally:
+            close = getattr(src_iter, "close", None)
+            if close is not None:
+                close()
             for nbytes, _ in held:
                 self._release(nbytes)
 
@@ -449,6 +492,8 @@ class BatchPipeline:
             self._produce(as_cursor(start)),
             self.prefetch,
             on_drop=lambda b: self._release(b.edges.nbytes),
+            heartbeat=self.heartbeat,
+            stall_timeout=self.stall_timeout,
         )
         prev: Optional[Batch] = None
         try:
@@ -721,6 +766,8 @@ class BatchPipeline:
             self._produce_cmega(k, as_cursor(start)),
             self.prefetch,
             on_drop=lambda cm: self._release(cm.payload.nbytes + cm.desc.nbytes),
+            heartbeat=self.heartbeat,
+            stall_timeout=self.stall_timeout,
         )
         prev: Optional[CompressedMegaBatch] = None
         try:
@@ -772,6 +819,8 @@ class BatchPipeline:
             self._produce_mega(k, as_cursor(start), wavefront, wavefront_gap),
             self.prefetch,
             on_drop=lambda mb: self._release(self._mega_nbytes(mb)),
+            heartbeat=self.heartbeat,
+            stall_timeout=self.stall_timeout,
         )
         prev: Optional[MegaBatch] = None
         try:
@@ -791,7 +840,13 @@ class BatchPipeline:
         return self.batches()
 
 
-def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
+def _prefetch_iter(
+    gen: Iterator,
+    depth: int,
+    on_drop=None,
+    heartbeat=None,
+    stall_timeout: Optional[float] = None,
+) -> Iterator:
     """Run ``gen`` up to ``depth`` items ahead on one background thread.
 
     The single worker pulls items sequentially (generators are not
@@ -806,30 +861,59 @@ def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
     exception re-raised on the consumer — so a failure mid-stream can never
     leave a dangling producer thread or leaked residency accounting behind
     the caller's back.
+
+    ``heartbeat`` (a :class:`repro.dist.fault_tolerance.HeartbeatMonitor`)
+    brackets each producer pull, so straggling produces show up as soft
+    stalls without killing the run.  ``stall_timeout`` is the hard
+    watchdog: when the *consumer* has waited more than that many seconds
+    for the next item, :class:`~repro.graph.errors.StallError` is raised
+    (a wedged worker cannot be interrupted, but it holds no further
+    items: the queue is drained and the run fails loudly instead of
+    hanging forever).  Neither applies on the synchronous ``depth <= 0``
+    path, where there is no worker to watch.
     """
     if depth <= 0:
         yield from gen
         return
     ex = ThreadPoolExecutor(max_workers=1)
+    pulls = 0
 
     def pull():
         # Capture *every* outcome as a tagged pair: the consumer must be
         # able to tell produced items (which need on_drop accounting if
         # never consumed) from terminal signals without re-raising inside
         # the cleanup path.
+        nonlocal pulls
+        if heartbeat is not None:
+            heartbeat.step_start()
         try:
-            return ("item", next(gen))
-        except StopIteration:
-            return ("stop", None)
-        except BaseException as e:  # propagated on the consumer after join
-            return ("raise", e)
+            try:
+                out = ("item", next(gen))
+            except StopIteration:
+                out = ("stop", None)
+            except BaseException as e:  # propagated on consumer after join
+                out = ("raise", e)
+        finally:
+            if heartbeat is not None:
+                heartbeat.step_end(pulls)
+                pulls += 1
+        return out
 
     futures: deque = deque()
+    stalled = False
     try:
         for _ in range(depth):
             futures.append(ex.submit(pull))
         while futures:
-            kind, value = futures.popleft().result()
+            try:
+                kind, value = futures[0].result(timeout=stall_timeout)
+            except _FuturesTimeout:
+                stalled = True
+                raise StallError(
+                    f"prefetch producer stalled: no item within "
+                    f"{stall_timeout}s (source wedged or deadlocked)"
+                ) from None
+            futures.popleft()
             if kind == "stop":
                 break
             if kind == "raise":
@@ -841,8 +925,15 @@ def _prefetch_iter(gen: Iterator, depth: int, on_drop=None) -> Iterator:
     finally:
         for f in futures:
             if not f.cancel():
+                if stalled and not f.done():
+                    continue  # wedged worker: never block cleanup on it
                 kind, value = f.result()
                 if kind == "item" and on_drop is not None:
                     on_drop(value)
-        ex.shutdown(wait=True)
-        gen.close()
+        # A wedged worker cannot be joined and its generator frame cannot
+        # be closed from here ("generator already executing") — leak the
+        # thread and let the StallError surface; every healthy path still
+        # joins and closes.
+        ex.shutdown(wait=not stalled)
+        if not stalled:
+            gen.close()

@@ -54,6 +54,12 @@ from repro.graph.codecs import (
     as_cursor,
     sniff_codec,
 )
+from repro.graph.errors import (
+    RetryPolicy,
+    SourceDeadError,
+    TruncatedStreamError,
+    retrying_slices,
+)
 from repro.graph.pipeline import PAD, rechunk
 
 PathLike = Union[str, os.PathLike]
@@ -201,6 +207,7 @@ class EdgeListFileSource(EdgeSource):
         path: PathLike,
         comments: Sequence[str] = ("#", "%"),
         block_lines: int = 1 << 16,
+        retry: Optional[RetryPolicy] = None,
     ):
         if block_lines < 1:
             raise ValueError(f"block_lines must be >= 1, got {block_lines}")
@@ -208,6 +215,8 @@ class EdgeListFileSource(EdgeSource):
         self.comments = tuple(comments)
         self._comments = tuple(c.encode() for c in comments)
         self.block_lines = block_lines
+        self.retry = retry
+        self.retries = 0  # transient read errors survived via re-resume
         self._n: Optional[int] = None  # cached after any full pass
         # row -> (byte offset, line number): seekable resume points
         self._resume = _SyncPoints((0, 0))
@@ -266,7 +275,18 @@ class EdgeListFileSource(EdgeSource):
         tok = cursor.token
         if self._token_ok(tok, cursor.row):
             self._resume.record(tok[2], (tok[3], tok[4]))
-        return self.iter_slices(cursor.row)
+        if self.retry is None:
+            return self.iter_slices(cursor.row)
+        return retrying_slices(
+            lambda c: self.iter_slices(c.row),
+            self.cursor_at,
+            cursor,
+            self.retry,
+            self._count_retry,
+        )
+
+    def _count_retry(self, attempt: int, exc: BaseException) -> None:
+        self.retries += 1
 
     def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
         buf: List[int] = []
@@ -324,9 +344,30 @@ class CodecFileSource(EdgeSource):
     recorded, so :meth:`cursor_at` mints tokens that let a *fresh* process
     seek straight to the containing block instead of header-skipping from
     the top.
+
+    **Failure policy.**  ``retry`` re-resumes from the last delivered row
+    on transient ``OSError``\\ s (bounded, backed off).  ``on_corrupt``
+    selects what a failed per-block checksum does on checksummed (``DVX``)
+    files: ``"raise"`` (default) raises a typed
+    :class:`~repro.graph.errors.CorruptBlockError`; ``"quarantine"`` skips
+    to the next healthy sync block and accounts the exact loss —
+    ``blocks_quarantined``/``edges_lost`` — instead of dying or going
+    silently wrong.  Quarantine discovery is keyed by byte position, so
+    repeated passes (resume, re-fit) never double-count.
     """
 
-    def __init__(self, path: PathLike, codec: Optional[EdgeCodec] = None):
+    def __init__(
+        self,
+        path: PathLike,
+        codec: Optional[EdgeCodec] = None,
+        *,
+        on_corrupt: str = "raise",
+        retry: Optional[RetryPolicy] = None,
+    ):
+        if on_corrupt not in ("raise", "quarantine"):
+            raise ValueError(
+                f"on_corrupt must be 'raise' or 'quarantine', got {on_corrupt!r}"
+            )
         self.path = os.fspath(path)
         if codec is None:
             codec = sniff_codec(self.path)
@@ -336,38 +377,88 @@ class CodecFileSource(EdgeSource):
                     "codec= explicitly"
                 )
         self.codec = codec
+        self.on_corrupt = on_corrupt
+        self.retry = retry
+        self.retries = 0
+        checksummed = getattr(codec, "file_checksummed", None)
+        self._checksummed = bool(checksummed(self.path)) if checksummed else False
+        if on_corrupt == "quarantine" and not self._checksummed:
+            raise ValueError(
+                f"{self.path}: quarantine needs per-block checksums (DVX "
+                "framing) to skip and account corrupt blocks — re-encode "
+                "with a checksummed codec or use on_corrupt='raise'"
+            )
         self._m = codec.n_edges(self.path)  # open-time validation
         self._sync = _SyncPoints(())  # row -> codec token (sync points)
+        # byte position of each quarantined region -> absolute rows lost;
+        # a stable key makes re-walks of the same bytes idempotent
+        self._quarantined: dict = {}
 
     @property
     def n_edges(self) -> int:
         return self._m
+
+    @property
+    def supports_quarantine(self) -> bool:
+        """True when the file's framing carries per-block checksums, so
+        ``on_corrupt='quarantine'`` can skip-and-count."""
+        return self._checksummed
+
+    @property
+    def blocks_quarantined(self) -> int:
+        return len(self._quarantined)
+
+    @property
+    def edges_lost(self) -> int:
+        return int(sum(self._quarantined.values()))
+
+    def _on_lost(self, byte_pos: int, rows: int) -> None:
+        self._quarantined[int(byte_pos)] = int(rows)
+
+    def _count_retry(self, attempt: int, exc: BaseException) -> None:
+        self.retries += 1
 
     def cursor_at(self, row: int) -> Cursor:
         _, token = self._sync.best(row)
         return Cursor(int(row), token)
 
     def resume(self, cursor) -> Iterator[np.ndarray]:
-        return self._iter(as_cursor(cursor))
+        cursor = as_cursor(cursor)
+        if self.retry is None:
+            return self._iter(cursor)
+        return retrying_slices(
+            self._iter, self.cursor_at, cursor, self.retry, self._count_retry
+        )
 
     def iter_slices(self, start: int = 0) -> Iterator[np.ndarray]:
         # consult locally recorded sync points even for bare-row starts
-        return self._iter(self.cursor_at(start))
+        return self.resume(self.cursor_at(start))
 
     def _iter(self, cursor: Cursor) -> Iterator[np.ndarray]:
         if cursor.row >= self._m:
             return
+        quarantine = self.on_corrupt == "quarantine" and self._checksummed
+        if quarantine:
+            gen = self.codec.decode_from(
+                self.path, cursor, on_lost=self._on_lost
+            )
+        else:
+            gen = self.codec.decode_from(self.path, cursor)
         produced = 0
-        for rows, nxt in self.codec.decode_from(self.path, cursor):
+        for rows, nxt in gen:
             self._sync.record(nxt.row, nxt.token)
             if rows.shape[0]:
                 produced += int(rows.shape[0])
                 yield rows
+        if quarantine:
+            # the checksummed walk accounts every missing row itself (the
+            # first_row chain), so the declared length holds minus the loss
+            return
         # a file truncated at a block boundary decodes cleanly but short —
         # without this cross-check the tail would drop silently (the same
         # torn-file failure RawCodec rejects at open)
         if cursor.row + produced != self._m:
-            raise ValueError(
+            raise TruncatedStreamError(
                 f"{self.path}: stream ended at row {cursor.row + produced} "
                 f"but declares {self._m} edges — file truncated?"
             )
@@ -401,13 +492,21 @@ class CodecFileSource(EdgeSource):
         cursor = as_cursor(cursor)
         if cursor.row >= self._m:
             return
+        quarantine = self.on_corrupt == "quarantine" and self._checksummed
+        blocks = (
+            scan(self.path, cursor, on_lost=self._on_lost)
+            if quarantine
+            else scan(self.path, cursor)
+        )
         end = cursor.row
-        for block in scan(self.path, cursor):
+        for block in blocks:
             self._sync.record(block.next_cursor.row, block.next_cursor.token)
             end = block.first_row + block.n_rows
             yield block
+        if quarantine:
+            return
         if end != self._m:
-            raise ValueError(
+            raise TruncatedStreamError(
                 f"{self.path}: stream ended at row {end} but declares "
                 f"{self._m} edges — file truncated?"
             )
@@ -516,17 +615,56 @@ class GeneratorSource(EdgeSource):
 
 class _SlicePuller:
     """Pull exactly-``k``-row arrays from one source's slice iterator,
-    buffering at most one raw slice of leftover."""
+    buffering at most one raw slice of leftover.
 
-    def __init__(self, source: EdgeSource, start: int):
+    With ``retry`` set, a transient error during a pull re-opens the
+    source's iterator at the exact row already consumed (bounded,
+    backed-off) — buffered rows are never dropped or repeated, so the
+    delivered stream is bit-identical to a fault-free read."""
+
+    def __init__(
+        self,
+        source: EdgeSource,
+        start: int,
+        retry: Optional[RetryPolicy] = None,
+    ):
+        self._source = source
+        self._row = int(start)  # rows of the source consumed from the iter
+        self._retry = retry
+        self._attempt = 0
+        self.retries = 0
         self._it = source.iter_slices(start)
         self._buf: List[np.ndarray] = []
         self._have = 0
 
+    def _pull(self) -> np.ndarray:
+        while True:
+            try:
+                sl = np.asarray(next(self._it))
+            except StopIteration:
+                raise
+            except Exception as exc:
+                policy = self._retry
+                if (
+                    policy is None
+                    or not policy.is_retryable(exc)
+                    or self._attempt >= policy.max_retries
+                ):
+                    raise
+                self._attempt += 1
+                self.retries += 1
+                self.close()
+                policy.backoff(self._attempt)
+                self._it = self._source.iter_slices(self._row)
+                continue
+            self._attempt = 0
+            self._row += int(sl.shape[0])
+            return sl
+
     def take(self, k: int) -> np.ndarray:
         while self._have < k:
             try:
-                sl = np.asarray(next(self._it))
+                sl = self._pull()
             except StopIteration:
                 raise ValueError(
                     "merged sub-source ended before its counted length"

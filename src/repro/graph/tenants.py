@@ -40,10 +40,11 @@ the per-tenant slab sequences, and therefore all labels, are unchanged).
 
 from __future__ import annotations
 
-from typing import Iterator, List, NamedTuple, Optional, Sequence
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro.graph.errors import RetryPolicy
 from repro.graph.pipeline import _prefetch_iter, pad_template, round_up
 from repro.graph.sources import EdgeSource, _SlicePuller, as_source
 
@@ -70,6 +71,18 @@ class TenantRouter:
     so per-tenant parsing/generation/decoding overlaps the device's fleet
     dispatch; ``peak_staging_bytes`` tracks staged buffers plus pulled-but-
     undispatched pending rows.
+
+    **Tenant isolation** (DESIGN.md §15): with ``on_fault="quarantine"`` a
+    tenant whose source fails for good mid-stream — dead source, corrupt
+    stream, exhausted retry budget — is *quarantined* instead of killing
+    the fleet: its already-arrived rows dispatch as its short final batch,
+    after which its slab row is all-PAD (a true no-op in every fleet update
+    path), and the failure is recorded in :attr:`quarantined`.  The other
+    ``T-1`` tenants' slab sequences are untouched (the skip rule makes
+    per-tenant pulls independent), so survivors stay bit-identical to their
+    standalone runs.  ``on_fault="raise"`` (default) propagates the first
+    tenant failure.  ``retry`` bounds transient re-pulls per tenant before
+    a failure counts as final.
     """
 
     def __init__(
@@ -81,7 +94,13 @@ class TenantRouter:
         granule: Optional[int] = None,
         pad_multiple: int = 1,
         prefetch: int = 2,
+        on_fault: str = "raise",
+        retry: Optional[RetryPolicy] = None,
     ):
+        if on_fault not in ("raise", "quarantine"):
+            raise ValueError(
+                f"on_fault must be 'raise' or 'quarantine', got {on_fault!r}"
+            )
         if not sources:
             raise ValueError("TenantRouter needs at least one tenant source")
         if batch_edges < 1:
@@ -105,10 +124,16 @@ class TenantRouter:
             raise ValueError(f"granule must be >= 1, got {granule}")
         self.granule = int(granule)
         self.prefetch = max(0, int(prefetch))
+        self.on_fault = on_fault
+        self.retry = retry
         self._ms = [int(s.count_edges()) for s in self.sources]
         self.peak_staging_bytes = 0
         self.slabs_produced = 0
         self._inflight_bytes = 0
+        # tenant index -> "ErrorType: message" for every quarantined tenant,
+        # and total transient re-pulls across all tenants' pullers
+        self.quarantined: Dict[int, str] = {}
+        self.retries = 0
 
     # ------------------------------------------------------------------
     @property
@@ -165,11 +190,30 @@ class TenantRouter:
                         t = int(t)
                         while have[t] < B and a[t] < ms[t]:
                             take = self._turn_remainder(a, t)
-                            if pullers[t] is None:
-                                pullers[t] = _SlicePuller(
-                                    self.sources[t], int(a[t])
+                            try:
+                                if pullers[t] is None:
+                                    pullers[t] = _SlicePuller(
+                                        self.sources[t],
+                                        int(a[t]),
+                                        retry=self.retry,
+                                    )
+                                sl = np.asarray(pullers[t].take(take))
+                            except Exception as exc:
+                                if self.on_fault != "quarantine":
+                                    raise
+                                # Tenant isolation: this source is gone for
+                                # good (dead, corrupt, retries exhausted).
+                                # Clamp its stream at the rows already
+                                # arrived — the pending rows dispatch as its
+                                # short final batch, after which its slab
+                                # row is all-PAD; the other tenants' pull
+                                # sets are unchanged (skip rule), so their
+                                # slabs stay bit-identical.
+                                self.quarantined[t] = (
+                                    f"{type(exc).__name__}: {exc}"
                                 )
-                            sl = np.asarray(pullers[t].take(take))
+                                ms[t] = a[t]
+                                break
                             self._acquire(int(sl.nbytes))
                             pending[t].append(sl)
                             have[t] += take
@@ -226,6 +270,7 @@ class TenantRouter:
                     self._release(int(sl.nbytes))
             for p in pullers:
                 if p is not None:
+                    self.retries += p.retries
                     p.close()
 
     def fleet_slabs(

@@ -73,7 +73,8 @@ def main(argv=None):
         start = int(restored["state"]["step"])
         print(f"[train] resumed from step {start}")
 
-    preempt = PreemptionHandler().install()
+    preempt = PreemptionHandler()
+    preempt.install()
     monitor = HeartbeatMonitor()
     losses = []
     for step in range(start, args.steps):

@@ -244,7 +244,9 @@ def test_dvc_v1_v2_cross_version_read(tmp_path):
     p1 = str(tmp_path / "old.dvc")
     p2 = str(tmp_path / "new.dvc")
     CodecFileSource.write(p1, edges, DeltaVarintCodec(version=1))
-    CodecFileSource.write(p2, edges, DeltaVarintCodec(version=2))
+    # checksum=False keeps the legacy plain framing (the v2 default now
+    # writes the checksummed DVX2 magic)
+    CodecFileSource.write(p2, edges, DeltaVarintCodec(version=2, checksum=False))
     with open(p1, "rb") as f:
         assert f.read(4) == b"DVE1"
     with open(p2, "rb") as f:
